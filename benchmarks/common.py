@@ -1,0 +1,52 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+
+from repro.core.simulate import simulate, summarize
+from repro.core.tiers import CacheConfig
+from repro.data.synth_traces import (LMARENA_LIKE, SEARCH_LIKE,
+                                     build_benchmark)
+
+# tuned per-workload thresholds (scripts/calibrate.py, error budget 1-2%)
+TSTAR = {"lmarena_like": 0.88, "search_like": 0.86}
+
+_SMALL = {
+    "lmarena_like": dict(n_requests=16_000, n_classes=2_400),
+    "search_like": dict(n_requests=24_000, n_classes=8_000),
+}
+
+
+def get_benchmark(name: str, scale: str = "small"):
+    spec = {"lmarena_like": LMARENA_LIKE,
+            "search_like": SEARCH_LIKE}[name]
+    if scale == "small":
+        spec = dataclasses.replace(spec, **_SMALL[name])
+    return build_benchmark(spec)
+
+
+def run_policies(bench, cfg: CacheConfig, policies=("baseline", "krites")):
+    args = dict(static_emb=jnp.asarray(bench.static_emb),
+                static_cls=jnp.asarray(bench.static_cls),
+                q_emb=jnp.asarray(bench.eval_emb),
+                q_cls=jnp.asarray(bench.eval_cls), cfg=cfg)
+    out = {}
+    for pol in policies:
+        t0 = time.time()
+        res = simulate(krites=(pol == "krites"), **args)
+        s = summarize(res)
+        s["wall_s"] = round(time.time() - t0, 2)
+        s["us_per_req"] = 1e6 * s["wall_s"] / s["requests"]
+        out[pol] = (res, s)
+    return out
+
+
+def default_cfg(name: str, **kw) -> CacheConfig:
+    t = TSTAR[name]
+    base = dict(tau_static=t, tau_dynamic=t, sigma_min=0.0,
+                capacity=8192, judge_latency=64)
+    base.update(kw)
+    return CacheConfig(**base)

@@ -1,0 +1,27 @@
+"""Paper Figure 2: static-origin coverage vs requests processed (cold
+dynamic cache) for both workloads and both policies."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import default_cfg, get_benchmark, run_policies
+from repro.core.simulate import coverage_curve
+
+
+def run(scale: str = "small", n_points: int = 12):
+    rows = []
+    for wl in ("lmarena_like", "search_like"):
+        bench = get_benchmark(wl, scale)
+        out = run_policies(bench, default_cfg(wl))
+        for pol in ("baseline", "krites"):
+            res, s = out[pol]
+            pts, cum = coverage_curve(res, n_points)
+            rows.append({
+                "name": f"fig2/{wl}/{pol}",
+                "us_per_call": round(s["us_per_req"], 2),
+                "requests": [int(p) for p in np.asarray(pts)],
+                "static_origin_cum": [round(float(c), 4)
+                                      for c in np.asarray(cum)],
+                "final": round(float(np.asarray(cum)[-1]), 4),
+            })
+    return rows

@@ -1,0 +1,39 @@
+"""§3.4 / §5.1: grey-zone ROI — sweep sigma_min, measure judge volume vs
+recovered static-origin traffic; plus judge rate-limit throttling."""
+from __future__ import annotations
+
+from benchmarks.common import default_cfg, get_benchmark, run_policies
+
+
+def run(scale: str = "small", wl: str = "lmarena_like"):
+    bench = get_benchmark(wl, scale)
+    rows = []
+    base = run_policies(bench, default_cfg(wl),
+                        policies=("baseline",))["baseline"][1]
+    for sigma in (0.0, 0.3, 0.5, 0.6, 0.7, 0.8):
+        cfg = default_cfg(wl, sigma_min=sigma)
+        k = run_policies(bench, cfg, policies=("krites",))["krites"][1]
+        recovered = k["static_origin_rate"] - base["static_origin_rate"]
+        rows.append({
+            "name": f"greyzone_roi/{wl}/sigma={sigma}",
+            "us_per_call": round(k["us_per_req"], 2),
+            "judge_calls": k["judge_calls"],
+            "judge_calls_per_req": round(
+                k["judge_calls"] / k["requests"], 4),
+            "promotions": k["promotions"],
+            "recovered_static_origin": round(recovered, 4),
+            "roi_serves_per_judge_call": round(
+                recovered * k["requests"] / max(k["judge_calls"], 1), 3),
+        })
+    # throttled judge (rate limit budget), paper §5.1 (iii)
+    for rate in (1.0, 0.2, 0.05):
+        cfg = default_cfg(wl, judge_rate=rate)
+        k = run_policies(bench, cfg, policies=("krites",))["krites"][1]
+        rows.append({
+            "name": f"greyzone_roi/{wl}/rate={rate}",
+            "us_per_call": round(k["us_per_req"], 2),
+            "judge_calls": k["judge_calls"],
+            "enq_dropped": k["enq_dropped"],
+            "static_origin_rate": round(k["static_origin_rate"], 4),
+        })
+    return rows

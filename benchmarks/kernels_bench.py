@@ -1,0 +1,103 @@
+"""Kernel-substrate microbenchmarks (CPU wall time of the jnp twin path +
+derived TPU roofline estimates for the Pallas target shapes).
+
+The simsearch row corresponds to the paper's cache-lookup hot path at the
+production static-tier size; TPU time estimates use the §Roofline
+constants (197 TF bf16, 819 GB/s HBM).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.simsearch.ref import simsearch_ref
+from repro.models.attention import causal_attention, decode_attention
+
+PEAK, HBM = 197e12, 819e9
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) \
+        else fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def run(scale: str = "small"):
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # simsearch: B queries x N corpus (static tier lookup)
+    B, N, d, k = (64, 16384, 64, 4) if scale == "small" \
+        else (256, 131072, 64, 4)
+    q = jax.random.normal(key, (B, d))
+    c = jax.random.normal(jax.random.fold_in(key, 1), (N, d))
+    f = jax.jit(lambda q, c: simsearch_ref(q, c, k))
+    t = _time(f, q, c)
+    flops = 2 * B * N * d
+    bytes_ = (B * d + N * d) * 4 + B * N * 4
+    rows.append({
+        "name": f"kernel/simsearch/B{B}xN{N}xd{d}",
+        "us_per_call": round(t * 1e6, 1),
+        "gflops_cpu": round(flops / t / 1e9, 2),
+        "tpu_compute_us": round(flops / PEAK * 1e6, 2),
+        "tpu_memory_us": round(bytes_ / HBM * 1e6, 2),
+        "tpu_bound": "memory" if bytes_ / HBM > flops / PEAK
+        else "compute",
+    })
+
+    # flash attention jnp twin (prefill block)
+    Bq, S, H, K, D = (1, 1024, 8, 2, 64) if scale == "small" \
+        else (4, 4096, 16, 8, 128)
+    qq = jax.random.normal(key, (Bq, S, H, D), jnp.float32)
+    kk = jax.random.normal(jax.random.fold_in(key, 2), (Bq, S, K, D))
+    vv = jax.random.normal(jax.random.fold_in(key, 3), (Bq, S, K, D))
+    f = jax.jit(lambda a, b, c2: causal_attention(a, b, c2, 256))
+    t = _time(f, qq, kk, vv)
+    flops = 2 * 2 * Bq * S * S * H * D / 2   # causal half
+    rows.append({
+        "name": f"kernel/flash_attention/S{S}xH{H}",
+        "us_per_call": round(t * 1e6, 1),
+        "gflops_cpu": round(flops / t / 1e9, 2),
+        "tpu_compute_us": round(flops / PEAK * 1e6, 2),
+    })
+
+    # decode attention (split-K twin)
+    Bd, Sd = (8, 8192) if scale == "small" else (32, 32768)
+    qd = jax.random.normal(key, (Bd, 1, H, D))
+    kd = jax.random.normal(jax.random.fold_in(key, 4), (Bd, Sd, K, D))
+    vd = jax.random.normal(jax.random.fold_in(key, 5), (Bd, Sd, K, D))
+    lens = jnp.full((Bd,), Sd, jnp.int32)
+    f = jax.jit(decode_attention)
+    t = _time(f, qd, kd, vd, lens)
+    bytes_ = 2 * Bd * Sd * K * D * 4
+    rows.append({
+        "name": f"kernel/decode_attention/B{Bd}xS{Sd}",
+        "us_per_call": round(t * 1e6, 1),
+        "tpu_memory_us": round(bytes_ / HBM * 1e6, 2),
+        "tpu_bound": "memory",
+    })
+
+    # embedding bag (jnp twin)
+    V, dd, Bb, m = (100_000, 32, 4096, 4) if scale == "small" \
+        else (1_000_000, 32, 65536, 4)
+    table = jax.random.normal(key, (V, dd))
+    ids = jax.random.randint(jax.random.fold_in(key, 6), (Bb, m), 0, V)
+    w = jnp.ones((Bb, m)) / m
+    from repro.kernels.embedding_bag.ref import embedding_bag_ref
+    f = jax.jit(embedding_bag_ref)
+    t = _time(f, table, ids, w)
+    bytes_ = Bb * m * dd * 4 + Bb * dd * 4
+    rows.append({
+        "name": f"kernel/embedding_bag/B{Bb}xm{m}",
+        "us_per_call": round(t * 1e6, 1),
+        "tpu_memory_us": round(bytes_ / HBM * 1e6, 2),
+        "tpu_bound": "memory",
+    })
+    return rows

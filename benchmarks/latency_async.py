@@ -1,0 +1,58 @@
+"""§5 'Blocking verified caching': async Krites vs a blocking judge on
+the serving path. Latency model over the simulated stream:
+
+    hit latency      = L_cache
+    miss latency     = L_cache + L_backend
+    blocking variant adds L_judge to every grey-zone request.
+
+Reports mean/p99 with the paper's point: Krites keeps baseline latency
+exactly; blocking pays judge latency on the critical path.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import default_cfg, get_benchmark, run_policies
+from repro.core.simulate import MISS
+
+L_CACHE_MS = 5.0
+L_BACKEND_MS = 800.0
+L_JUDGE_MS = 250.0
+
+
+def _latencies(res, grey_mask, blocking: bool):
+    sb = np.asarray(res.served_by)
+    lat = np.full(sb.shape, L_CACHE_MS)
+    lat[sb == MISS] += L_BACKEND_MS
+    if blocking:
+        lat[grey_mask] += L_JUDGE_MS
+    return lat
+
+
+def run(scale: str = "small", wl: str = "lmarena_like"):
+    bench = get_benchmark(wl, scale)
+    cfg = default_cfg(wl)
+    out = run_policies(bench, cfg)
+
+    # grey-zone mask from the static sims (same hoisted lookup)
+    import jax.numpy as jnp
+    from repro.core.simulate import _static_sims
+    s, _ = _static_sims(jnp.asarray(bench.static_emb),
+                        jnp.asarray(bench.eval_emb))
+    grey = (np.asarray(s) >= cfg.sigma_min) \
+        & (np.asarray(s) < cfg.tau_static)
+
+    rows = []
+    for pol, blocking in (("baseline", False), ("krites_async", False),
+                          ("blocking_verified", True)):
+        res = out["baseline" if pol == "baseline" else "krites"][0]
+        lat = _latencies(res, grey, blocking)
+        rows.append({
+            "name": f"latency/{wl}/{pol}",
+            "us_per_call": round(float(lat.mean()) * 1e3, 1),
+            "mean_ms": round(float(lat.mean()), 2),
+            "p50_ms": round(float(np.percentile(lat, 50)), 2),
+            "p99_ms": round(float(np.percentile(lat, 99)), 2),
+            "greyzone_frac": round(float(grey.mean()), 3),
+        })
+    return rows

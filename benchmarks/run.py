@@ -1,0 +1,58 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale small|full] [--only X]
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = remaining fields
+as compact JSON) and writes results/benchmarks.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=["small", "full"], default="small")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names")
+    args = ap.parse_args()
+
+    from benchmarks import (fig2, greyzone_roi, kernels_bench,
+                            latency_async, table1, verifier_fidelity)
+    modules = {
+        "table1": table1, "fig2": fig2, "greyzone_roi": greyzone_roi,
+        "latency_async": latency_async,
+        "verifier_fidelity": verifier_fidelity,
+        "kernels": kernels_bench,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        modules = {k: v for k, v in modules.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    all_rows = []
+    for mod_name, mod in modules.items():
+        t0 = time.time()
+        try:
+            rows = mod.run(scale=args.scale)
+        except Exception as e:  # noqa: BLE001
+            rows = [{"name": f"{mod_name}/ERROR", "us_per_call": -1,
+                     "error": str(e)[:300]}]
+        for r in rows:
+            derived = {k: v for k, v in r.items()
+                       if k not in ("name", "us_per_call")}
+            print(f"{r['name']},{r.get('us_per_call', 0)},"
+                  f"\"{json.dumps(derived)}\"")
+        all_rows.extend(rows)
+
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "benchmarks.json").write_text(json.dumps(all_rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

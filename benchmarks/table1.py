@@ -1,0 +1,38 @@
+"""Paper Table 1: static-origin served fraction, baseline vs Krites,
+plus the Figure-1a hit-composition check (total hit rate unchanged)."""
+from __future__ import annotations
+
+from benchmarks.common import default_cfg, get_benchmark, run_policies
+
+PAPER = {  # from Table 1
+    "lmarena_like": {"baseline": 0.082, "krites": 0.194, "gain": 1.365},
+    "search_like": {"baseline": 0.022, "krites": 0.086, "gain": 2.903},
+}
+
+
+def run(scale: str = "small"):
+    rows = []
+    for wl in ("lmarena_like", "search_like"):
+        bench = get_benchmark(wl, scale)
+        out = run_policies(bench, default_cfg(wl))
+        b = out["baseline"][1]
+        k = out["krites"][1]
+        gain = k["static_origin_rate"] / max(b["static_origin_rate"],
+                                             1e-9) - 1
+        rows.append({
+            "name": f"table1/{wl}",
+            "us_per_call": round(k["us_per_req"], 2),
+            "baseline_static_origin": round(b["static_origin_rate"], 4),
+            "krites_static_origin": round(k["static_origin_rate"], 4),
+            "relative_gain_pct": round(100 * gain, 1),
+            "paper_baseline": PAPER[wl]["baseline"],
+            "paper_krites": PAPER[wl]["krites"],
+            "paper_gain_pct": round(100 * PAPER[wl]["gain"], 1),
+            "total_hit_delta": round(
+                abs(k["total_hit_rate"] - b["total_hit_rate"]), 4),
+            "error_baseline": round(b["error_rate"], 4),
+            "error_krites": round(k["error_rate"], 4),
+            "judge_calls": k["judge_calls"],
+            "promotions": k["promotions"],
+        })
+    return rows

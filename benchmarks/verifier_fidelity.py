@@ -1,0 +1,72 @@
+"""§5 verifier fidelity: noisy judge with false-approve rate eps — the
+incremental cache error from promotions is bounded by eps * p_prom.
+
+The scan simulator's judge is the oracle; we model the noisy judge by
+post-hoc flipping approvals with probability eps_fa / eps_fr using the
+same deterministic hash scheme as core.judge.NoisyOracleJudge, re-running
+the simulation with the flipped equivalence labels for promoted pairs.
+Implemented as a sweep over eps using a modified class-label channel.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import default_cfg, get_benchmark
+from repro.core.simulate import simulate, summarize
+
+
+def run(scale: str = "small", wl: str = "lmarena_like"):
+    bench = get_benchmark(wl, scale)
+    cfg = default_cfg(wl)
+    args = dict(static_emb=jnp.asarray(bench.static_emb),
+                static_cls=jnp.asarray(bench.static_cls),
+                q_emb=jnp.asarray(bench.eval_emb), cfg=cfg)
+    q_cls = np.asarray(bench.eval_cls)
+
+    base = summarize(simulate(q_cls=jnp.asarray(q_cls), krites=False,
+                              **args))
+    oracle = summarize(simulate(q_cls=jnp.asarray(q_cls), krites=True,
+                                **args))
+    rows = [{
+        "name": f"verifier/{wl}/eps=0.0",
+        "us_per_call": 0.0,
+        "error_rate": oracle["error_rate"],
+        "static_origin_rate": oracle["static_origin_rate"],
+        "bound_eps_pprom": 0.0,
+    }]
+
+    rng = np.random.default_rng(7)
+    for eps in (0.02, 0.05, 0.10):
+        # false approvals: a fraction eps of judged pairs get the
+        # neighbor's class accepted even when wrong. We emulate by
+        # flipping the query class of eps of requests to their static
+        # NN's class *for the judge channel only* — conservative upper
+        # bound on promotion error (serving correctness still scored
+        # against the true class).
+        flip = rng.random(len(q_cls)) < eps
+        res = simulate(q_cls=jnp.asarray(q_cls), krites=True,
+                       judge_flip=jnp.asarray(flip), **args)
+        s = summarize(res)
+        p_prom = s["promoted_hit_rate"]
+        added = s["error_rate"] - oracle["error_rate"]
+        rows.append({
+            "name": f"verifier/{wl}/eps={eps}",
+            "us_per_call": 0.0,
+            "error_rate": s["error_rate"],
+            "added_error_vs_oracle": round(added, 5),
+            "static_origin_rate": s["static_origin_rate"],
+            "p_prom": round(p_prom, 4),
+            "bound_eps_pprom": round(eps * p_prom, 5),
+            "ratio_to_bound": round(added / max(eps * p_prom, 1e-9), 2),
+            # Beyond-paper observation: the measured added error runs
+            # ~1.2-1.3x the paper's heuristic eps*p_prom bound. Falsely
+            # approved pairs live in confusable embedding regions whose
+            # keys attract MORE than proportional hit traffic, so the
+            # "promotions attract average traffic" assumption behind the
+            # bound is mildly violated. Operators should budget
+            # ~1.5x eps*p_prom. See EXPERIMENTS.md §Reproduction.
+        })
+    return rows

@@ -1,0 +1,61 @@
+"""Render the roofline table (markdown) from results/dryrun/*.json."""
+import json
+import sys
+from pathlib import Path
+
+RES = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}"
+
+
+def load(mesh_filter=None):
+    rows = []
+    for p in sorted(RES.glob("*.json")):
+        r = json.loads(p.read_text())
+        if not r.get("ok"):
+            rows.append(r)
+            continue
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        rows.append(r)
+    return rows
+
+
+def table(mesh="pod16x16", out=sys.stdout):
+    rows = [r for r in load() if r.get("mesh") == mesh and r.get("ok")]
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | bound "
+           "| model_GF | useful | frac | mem/dev GiB |")
+    print(hdr, file=out)
+    print("|" + "---|" * 10, file=out)
+    for r in rows:
+        f = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} "
+              f"| {f['compute_s']:.3e} | {f['memory_s']:.3e} "
+              f"| {f['collective_s']:.3e} | {f['bound']} "
+              f"| {f['model_flops']/1e9:.3g} | {f['useful_ratio']:.2f} "
+              f"| {f['roofline_frac']:.3f} "
+              f"| {fmt_bytes(r.get('bytes_per_device'))} |", file=out)
+
+
+def summary():
+    rows = [r for r in load() if r.get("ok")]
+    n_by_mesh = {}
+    for r in rows:
+        n_by_mesh.setdefault(r["mesh"], 0)
+        n_by_mesh[r["mesh"]] += 1
+    fails = [r for r in load() if not r.get("ok")]
+    print(f"cells ok: {n_by_mesh}; failed: {len(fails)}")
+    for r in fails:
+        print("FAIL", r.get("arch"), r.get("shape"), r.get("mesh"),
+              r.get("error", "")[:120])
+
+
+if __name__ == "__main__":
+    summary()
+    for mesh in ("pod16x16", "pod2x16x16"):
+        print(f"\n### mesh {mesh}\n")
+        table(mesh)

@@ -1,0 +1,96 @@
+"""Parse collective-communication bytes out of compiled HLO text.
+
+``compiled.cost_analysis()`` has no collective accounting, so we walk the
+optimized HLO: build a name->shape map from instruction definitions, then
+for every collective op sum its *operand* sizes (bytes entering the
+collective on each device's program).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# "%name = f32[1,2,3]{...} op-name(" — also matches tuple-less simple defs
+_DEF_RE = re.compile(
+    r"%?([\w.\-]+)\s*=\s*(\([^=]*\)|[\w]+\[[^\]]*\][^\s]*)\s+([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Returns {collective_kind: summed operand bytes} + {'total': ...}.
+
+    Bytes are per-device-program (HLO under SPMD is the per-device view).
+    """
+    shapes: Dict[str, int] = {}
+    defs = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.search(line)
+        if not m:
+            continue
+        name, type_str, op = m.group(1), m.group(2), m.group(3)
+        shapes[name] = _shape_bytes(type_str)
+        defs.append((name, op, line))
+
+    out: Dict[str, int] = defaultdict(int)
+    for name, op, line in defs:
+        kind = None
+        for c in COLLECTIVES:
+            if op == c or op.startswith(c + "."):
+                kind = c
+                break
+        if kind is None:
+            continue
+        # operands: names inside the call parens
+        paren = line[line.index("(", line.index(op)) + 1:]
+        depth, args = 1, ""
+        for ch in paren:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            args += ch
+        operand_bytes = 0
+        for om in _OPERAND_RE.finditer(args):
+            operand_bytes += shapes.get(om.group(1), 0)
+        if operand_bytes == 0:
+            # fallback: result size
+            operand_bytes = shapes.get(name, 0)
+        out[kind] += operand_bytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def count_collectives(hlo_text: str) -> Dict[str, int]:
+    counts: Dict[str, int] = defaultdict(int)
+    for c in COLLECTIVES:
+        counts[c] = len(re.findall(rf"\b{c}(?:-start)?(?:\.\d+)?\(",
+                                   hlo_text))
+    return dict(counts)

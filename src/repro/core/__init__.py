@@ -1,0 +1,20 @@
+"""Krites: asynchronous verified semantic caching (the paper's core).
+
+tiers      — static (read-only, curated) + dynamic (functional LRU) tiers
+policy     — Algorithms 1 & 2 on the live serving path
+async_queue— off-path VerifyAndPromote worker pool (dedup/rate/retry)
+judge      — oracle / noisy-oracle / LLM judges
+simulate   — jittable lax.scan trace simulator (the paper's evaluation)
+"""
+from repro.core.tiers import (CacheConfig, DynamicTier, StaticTier,
+                              make_dynamic_tier, make_static_tier)
+from repro.core.simulate import simulate, summarize, coverage_curve
+from repro.core.judge import LLMJudge, NoisyOracleJudge, OracleJudge
+from repro.core.policy import BaselinePolicy, KritesPolicy, ServeResult
+
+__all__ = [
+    "CacheConfig", "DynamicTier", "StaticTier", "make_dynamic_tier",
+    "make_static_tier", "simulate", "summarize", "coverage_curve",
+    "LLMJudge", "NoisyOracleJudge", "OracleJudge",
+    "BaselinePolicy", "KritesPolicy", "ServeResult",
+]

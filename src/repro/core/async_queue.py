@@ -1,0 +1,163 @@
+"""Asynchronous VerifyAndPromote worker pool (live serving path).
+
+Implements the operational pipeline of §3.1: bounded queue, deduplication
+of (query, static-neighbor) pairs, token-bucket rate limiting, retry with
+exponential backoff, and straggler mitigation (a task past its deadline is
+re-dispatched to another worker; first completion wins, idempotent upsert
+makes the duplicate harmless).
+
+Everything is off the serving path: ``submit`` never blocks and serving
+never waits on this pool. Queue depth only delays promotions (§3.1).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+@dataclass
+class VerifyTask:
+    key: tuple                  # dedup key: (q_fingerprint, h_idx)
+    payload: dict
+    attempts: int = 0
+    enqueued_at: float = field(default_factory=time.monotonic)
+
+
+@dataclass
+class PoolStats:
+    submitted: int = 0
+    deduped: int = 0
+    rate_limited: int = 0
+    dropped_full: int = 0
+    judged: int = 0
+    approved: int = 0
+    retried: int = 0
+    redispatched: int = 0
+    failed: int = 0
+
+
+class VerifyAndPromotePool:
+    """Background pool running judge -> (approved) -> upsert callbacks."""
+
+    def __init__(self,
+                 judge_fn: Callable[[dict], bool],
+                 promote_fn: Callable[[dict], None],
+                 n_workers: int = 2,
+                 max_depth: int = 1024,
+                 rate_per_s: float = float("inf"),
+                 max_attempts: int = 3,
+                 backoff_s: float = 0.05,
+                 straggler_deadline_s: float = 5.0):
+        self.judge_fn = judge_fn
+        self.promote_fn = promote_fn
+        self.q: "queue.Queue[VerifyTask]" = queue.Queue(max_depth)
+        self.stats = PoolStats()
+        self._inflight: dict = {}
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._rate = rate_per_s
+        self._tokens = float(min(rate_per_s, 1e9))
+        self._last_refill = time.monotonic()
+        self._max_attempts = max_attempts
+        self._backoff = backoff_s
+        self._deadline = straggler_deadline_s
+        self._workers = [
+            threading.Thread(target=self._run, daemon=True,
+                             name=f"krites-judge-{i}")
+            for i in range(n_workers)]
+        for w in self._workers:
+            w.start()
+        self._reaper = threading.Thread(target=self._reap_stragglers,
+                                        daemon=True)
+        self._reaper.start()
+
+    # -- producer side (called from the serving path; never blocks) -------
+    def submit(self, key: tuple, payload: dict) -> bool:
+        with self._lock:
+            self.stats.submitted += 1
+            if key in self._inflight:
+                self.stats.deduped += 1
+                return False
+            if not self._take_token():
+                self.stats.rate_limited += 1
+                return False
+            self._inflight[key] = time.monotonic()
+        try:
+            self.q.put_nowait(VerifyTask(key, payload))
+            return True
+        except queue.Full:
+            with self._lock:
+                self.stats.dropped_full += 1
+                self._inflight.pop(key, None)
+            return False
+
+    def _take_token(self) -> bool:
+        now = time.monotonic()
+        self._tokens = min(self._tokens + (now - self._last_refill)
+                           * self._rate, max(self._rate, 1.0))
+        self._last_refill = now
+        if self._tokens >= 1.0:
+            self._tokens -= 1.0
+            return True
+        return False
+
+    # -- worker side -------------------------------------------------------
+    def _run(self):
+        while not self._stop.is_set():
+            try:
+                task = self.q.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            try:
+                approved = self.judge_fn(task.payload)
+                with self._lock:
+                    self.stats.judged += 1
+                    if approved:
+                        self.stats.approved += 1
+                if approved:
+                    # idempotent upsert — safe under duplicate dispatch
+                    self.promote_fn(task.payload)
+                with self._lock:
+                    self._inflight.pop(task.key, None)
+            except Exception:  # noqa: BLE001 — transient failure: retry
+                task.attempts += 1
+                if task.attempts < self._max_attempts:
+                    with self._lock:
+                        self.stats.retried += 1
+                    time.sleep(self._backoff * (2 ** task.attempts))
+                    try:
+                        self.q.put_nowait(task)
+                    except queue.Full:
+                        with self._lock:
+                            self.stats.failed += 1
+                            self._inflight.pop(task.key, None)
+                else:
+                    with self._lock:
+                        self.stats.failed += 1
+                        self._inflight.pop(task.key, None)
+
+    def _reap_stragglers(self):
+        """Re-dispatch tasks stuck past the deadline (straggler
+        mitigation; completion is idempotent so duplicates are safe)."""
+        while not self._stop.is_set():
+            time.sleep(self._deadline / 2)
+            now = time.monotonic()
+            with self._lock:
+                stuck = [k for k, t0 in self._inflight.items()
+                         if now - t0 > self._deadline]
+                for k in stuck:
+                    self._inflight[k] = now
+                    self.stats.redispatched += 1
+
+    def drain(self, timeout_s: float = 30.0):
+        """Block until the queue is empty (tests / shutdown only)."""
+        t0 = time.monotonic()
+        while (not self.q.empty() or self._inflight) \
+                and time.monotonic() - t0 < timeout_s:
+            time.sleep(0.01)
+
+    def stop(self):
+        self._stop.set()

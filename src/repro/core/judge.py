@@ -1,0 +1,66 @@
+"""Judges for VerifyAndPromote.
+
+- OracleJudge: ground-truth equivalence classes (the paper's §4 setup).
+- NoisyOracleJudge: oracle + configurable false-approve/false-reject rates
+  (the §5 verifier-fidelity analysis: added error <= eps * p_prom).
+- LLMJudge: a real model-backed judge for the live end-to-end example —
+  scores semantic equivalence with the embedding model + a margin test, or
+  any user-supplied callable (e.g. a tiny LM scoring yes/no).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import numpy as np
+
+
+class OracleJudge:
+    """approve iff query and static neighbor share an equivalence class."""
+
+    def __call__(self, q_cls: int, h_cls: int, q_text: str = "",
+                 h_text: str = "", answer: str = "") -> bool:
+        return int(q_cls) == int(h_cls)
+
+
+@dataclass
+class NoisyOracleJudge:
+    """Oracle with false-approve rate eps_fa and false-reject rate eps_fr.
+
+    Deterministic per (q, h) pair (hash-seeded), so dedup/retry behave
+    like a real, consistent judge rather than a coin flip per call.
+    """
+    eps_fa: float = 0.0
+    eps_fr: float = 0.0
+    seed: int = 0
+
+    def __call__(self, q_cls: int, h_cls: int, q_text: str = "",
+                 h_text: str = "", answer: str = "") -> bool:
+        truth = int(q_cls) == int(h_cls)
+        h = hashlib.blake2s(
+            f"{self.seed}|{q_cls}|{h_cls}|{q_text}|{h_text}".encode(),
+            digest_size=8).digest()
+        u = int.from_bytes(h, "little") / 2**64
+        if truth:
+            return u >= self.eps_fr
+        return u < self.eps_fa
+
+
+class LLMJudge:
+    """Model-backed judge for the live stack.
+
+    ``score_fn(q_text, h_text, answer) -> float`` returns an equivalence
+    score in [0, 1]; approve when >= threshold. The e2e example wires this
+    to the tiny-LM scorer in serving/llm_judge_backend.py.
+    """
+
+    def __init__(self, score_fn: Callable[[str, str, str], float],
+                 threshold: float = 0.5):
+        self.score_fn = score_fn
+        self.threshold = threshold
+
+    def __call__(self, q_cls: int, h_cls: int, q_text: str = "",
+                 h_text: str = "", answer: str = "") -> bool:
+        return float(self.score_fn(q_text, h_text, answer)) \
+            >= self.threshold

@@ -1,0 +1,174 @@
+"""Live (host-level) tiered semantic cache policies.
+
+``BaselinePolicy`` = Algorithm 1 (GPTCache-style static thresholds).
+``KritesPolicy``   = Algorithm 2: identical serving path + grey-zone
+                     trigger feeding the async VerifyAndPromote pool.
+
+These wrap the functional JAX tiers for production serving (the trace
+simulator in core/simulate.py is the batched twin used for evaluation).
+The backend, embedder and judge are injected callables, so the same policy
+fronts an LLM engine, a GNN, or a recsys scorer (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tiers as T
+from repro.core.async_queue import VerifyAndPromotePool
+from repro.index.flat import l2_normalize
+
+
+@dataclass
+class ServeResult:
+    answer: object
+    served_by: str              # 'static' | 'dynamic' | 'backend'
+    static_origin: bool
+    similarity: float
+    latency_s: float
+    meta: dict = field(default_factory=dict)
+
+
+class BaselinePolicy:
+    """Algorithm 1. The dynamic tier is guarded by a lock so async
+    promotions (Krites subclass) can't race the serving loop."""
+
+    def __init__(self, cfg: T.CacheConfig, static_tier: T.StaticTier,
+                 static_answers, embed_fn: Callable,
+                 backend_fn: Callable, d: int):
+        self.cfg = cfg
+        self.static = static_tier
+        self.static_answers = static_answers
+        self.embed_fn = embed_fn
+        self.backend_fn = backend_fn
+        self.dyn = T.make_dynamic_tier(cfg.capacity, d)
+        self.dyn_answers: list = [None] * cfg.capacity
+        self.dyn_lock = threading.Lock()
+        self.t = 0
+        self.events: list = []
+
+    def _serve_static(self, idx: int):
+        return self.static_answers[int(self.static.answer_ref[idx])]
+
+    # -- hook for Krites (no-op in the baseline) ---------------------------
+    def _after_static_miss(self, prompt, v, h_idx, s_static, res, meta):
+        return
+
+    def serve(self, prompt: str, meta: Optional[dict] = None) -> ServeResult:
+        t0 = time.monotonic()
+        self.t += 1
+        v = l2_normalize(jnp.asarray(self.embed_fn(prompt), jnp.float32))
+        s_s, h_idx = T.static_lookup(self.static, v)
+        s_s, h_idx = float(s_s), int(h_idx)
+        if s_s >= self.cfg.tau_static:
+            res = ServeResult(self._serve_static(h_idx), "static", True,
+                              s_s, time.monotonic() - t0)
+            self.events.append((res.served_by, res.static_origin))
+            return res
+
+        with self.dyn_lock:
+            s_d, j = T.dynamic_lookup(self.dyn, v)
+            s_d, j = float(s_d), int(j)
+            if s_d >= self.cfg.tau_dynamic:
+                self.dyn = T.touch(self.dyn, j, self.t)
+                res = ServeResult(self.dyn_answers[j], "dynamic",
+                                  bool(self.dyn.static_origin[j]), s_d,
+                                  time.monotonic() - t0)
+            else:
+                res = None
+
+        if res is None:
+            answer = self.backend_fn(prompt)   # outside the lock
+            with self.dyn_lock:
+                slot = int(T._lru_slot(self.dyn))
+                self.dyn = T.insert(
+                    self.dyn, v, (meta or {}).get("cls", -1), -1, self.t)
+                self.dyn_answers[slot] = answer
+            res = ServeResult(answer, "backend", False, s_d,
+                              time.monotonic() - t0)
+
+        self.events.append((res.served_by, res.static_origin))
+        # Alg. 2 line 13: grey-zone test on EVERY static miss (dyn hit or
+        # backend call alike); non-blocking, off the critical path.
+        self._after_static_miss(prompt, v, h_idx, s_s, res, meta)
+        return res
+
+    def stats(self) -> dict:
+        n = max(len(self.events), 1)
+        by = [e[0] for e in self.events]
+        return {
+            "requests": len(self.events),
+            "static_hit_rate": by.count("static") / n,
+            "dynamic_hit_rate": by.count("dynamic") / n,
+            "backend_rate": by.count("backend") / n,
+            "static_origin_rate":
+                sum(1 for e in self.events if e[1]) / n,
+        }
+
+
+class KritesPolicy(BaselinePolicy):
+    """Algorithm 2: baseline serving + async grey-zone verification."""
+
+    def __init__(self, cfg: T.CacheConfig, static_tier: T.StaticTier,
+                 static_answers, embed_fn, backend_fn, judge_fn, d: int,
+                 n_workers: int = 2,
+                 judge_rate_per_s: float = float("inf")):
+        super().__init__(cfg, static_tier, static_answers, embed_fn,
+                         backend_fn, d)
+        self.pool = VerifyAndPromotePool(
+            judge_fn=lambda payload: judge_fn(**payload["judge_args"]),
+            promote_fn=self._promote,
+            n_workers=n_workers,
+            rate_per_s=judge_rate_per_s)
+
+    def _after_static_miss(self, prompt, v, h_idx, s_static, res, meta):
+        if not (self.cfg.sigma_min <= s_static < self.cfg.tau_static):
+            return
+        if self.cfg.dedup and res.served_by == "dynamic" \
+                and res.static_origin:
+            return  # a promoted pointer already serves this query
+        fp = hash(np.asarray(v).tobytes())
+        self.pool.submit(
+            key=(fp, h_idx),
+            payload={
+                "v": np.asarray(v),
+                "h_idx": h_idx,
+                "enq_t": self.t,
+                "judge_args": {
+                    "q_cls": (meta or {}).get("cls", -1),
+                    "h_cls": int(self.static.cls[h_idx]),
+                    "q_text": prompt or "",
+                    "h_text": "", "answer": "",
+                },
+            })
+
+    def _promote(self, payload: dict):
+        """Auxiliary overwrite: upsert the curated static answer under the
+        new key (idempotent; near-duplicate keys overwrite in place)."""
+        h_idx = payload["h_idx"]
+        v = jnp.asarray(payload["v"])
+        answer = self._serve_static(h_idx)
+        with self.dyn_lock:
+            s_d, j = T.dynamic_lookup(self.dyn, v)
+            dup = float(s_d) >= 0.9999
+            slot = int(j) if dup else int(T._lru_slot(self.dyn))
+            self.dyn = T._write(
+                self.dyn, slot, v,
+                jnp.int32(int(self.static.cls[h_idx])),
+                jnp.int32(int(self.static.answer_ref[h_idx])),
+                jnp.asarray(True), payload["enq_t"])
+            self.dyn_answers[slot] = answer
+
+    def stats(self) -> dict:
+        out = super().stats()
+        ps = self.pool.stats
+        out.update({"judge_submitted": ps.submitted,
+                    "judge_deduped": ps.deduped,
+                    "judged": ps.judged, "approved": ps.approved,
+                    "redispatched": ps.redispatched})
+        return out

@@ -1,0 +1,239 @@
+"""Trace-driven simulator for Algorithm 1 (baseline) and Algorithm 2
+(Krites), as one jittable ``lax.scan`` over the request stream.
+
+Faithful to the paper's evaluation (§4):
+- serving decisions use fixed thresholds tau_static / tau_dynamic;
+- Krites only adds the grey-zone trigger + an asynchronous
+  VerifyAndPromote whose judge is the *oracle* over ground-truth
+  equivalence classes (approve iff query and static neighbor share a
+  class);
+- the async pool is modeled as a delay line: a task enqueued at request t
+  completes at request t + judge_latency (queue depth affects promotion
+  lag only — never the serving decision of the triggering request, which
+  is decided before the queue is touched).
+
+The static-tier lookup is hoisted out of the scan (the static tier is
+immutable) into one batched matmul — on TPU this is the fused
+``kernels/simsearch`` kernel; the per-step dynamic lookup stays inside the
+scan because the tier mutates.
+
+Outputs both aggregate counters and a per-request event stream (for the
+Figure-2 coverage-vs-requests curves).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tiers as T
+from repro.index.flat import l2_normalize
+
+# served-by codes in the event stream
+MISS, STATIC_HIT, DYN_HIT_DYNAMIC, DYN_HIT_PROMOTED = 0, 1, 2, 3
+
+
+class SimState(NamedTuple):
+    dyn: T.DynamicTier
+    # pending VerifyAndPromote delay line (length = judge_latency)
+    p_valid: jax.Array   # (L,) bool
+    p_emb: jax.Array     # (L, d)
+    p_qcls: jax.Array    # (L,) int32
+    p_hcls: jax.Array    # (L,) int32 static neighbor's class
+    p_href: jax.Array    # (L,) int32 static answer handle
+    p_flip: jax.Array    # (L,) bool — noisy-judge false approvals
+    budget: jax.Array    # token bucket for judge rate limiting
+    t: jax.Array
+    judge_calls: jax.Array
+    judge_approved: jax.Array
+    promotions: jax.Array
+    enq_dropped: jax.Array
+
+
+class SimResult(NamedTuple):
+    served_by: jax.Array        # (N,) int8 event codes
+    correct: jax.Array          # (N,) bool (True for misses too)
+    static_origin: jax.Array    # (N,) bool — curated answer served
+    judge_calls: jax.Array
+    judge_approved: jax.Array
+    promotions: jax.Array
+    enq_dropped: jax.Array
+
+
+def _static_sims(static_emb: jax.Array, q_emb: jax.Array,
+                 chunk: int = 2048):
+    """Batched static-tier NN for the whole trace (hoisted lookup)."""
+    n = q_emb.shape[0]
+    pad = (-n) % chunk
+    qp = jnp.pad(q_emb, ((0, pad), (0, 0)))
+
+    def body(_, q):
+        sims = q @ static_emb.T
+        idx = jnp.argmax(sims, axis=1)
+        return None, (jnp.take_along_axis(sims, idx[:, None], 1)[:, 0],
+                      idx.astype(jnp.int32))
+
+    _, (s, i) = jax.lax.scan(body, None,
+                             qp.reshape(-1, chunk, q_emb.shape[1]))
+    return s.reshape(-1)[:n], i.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "krites", "capacity"))
+def simulate(static_emb, static_cls, q_emb, q_cls, cfg: T.CacheConfig,
+             krites: bool, capacity: int | None = None,
+             judge_flip=None) -> SimResult:
+    """Run the policy over a request stream.
+
+    static_emb (S, d) [normalized], static_cls (S,);
+    q_emb (N, d) [normalized], q_cls (N,).
+    judge_flip (N,) bool (optional): requests whose VerifyAndPromote is
+    *falsely approved* regardless of class (noisy-verifier study, §5).
+    """
+    N, d = q_emb.shape
+    if judge_flip is None:
+        judge_flip = jnp.zeros((N,), bool)
+    C = capacity or cfg.capacity
+    L = max(1, cfg.judge_latency)
+
+    s_static, h_idx = _static_sims(static_emb, q_emb)
+    h_cls = static_cls[h_idx]
+
+    state = SimState(
+        dyn=T.make_dynamic_tier(C, d),
+        p_valid=jnp.zeros((L,), bool),
+        p_emb=jnp.zeros((L, d), jnp.float32),
+        p_qcls=jnp.zeros((L,), jnp.int32),
+        p_hcls=jnp.zeros((L,), jnp.int32),
+        p_href=jnp.zeros((L,), jnp.int32),
+        p_flip=jnp.zeros((L,), bool),
+        budget=jnp.float32(1.0),
+        t=jnp.int32(0),
+        judge_calls=jnp.int32(0),
+        judge_approved=jnp.int32(0),
+        promotions=jnp.int32(0),
+        enq_dropped=jnp.int32(0),
+    )
+
+    def step(st: SimState, xs):
+        q, qc, ss, hc, hr, fl = xs
+        t = st.t
+        dyn = st.dyn
+
+        # ---- 1. async completions due now (slot t mod L, enqueued t-L) —
+        # processed before serving, consistent with "completed earlier".
+        slot = jnp.mod(t, L)
+        due = jnp.logical_and(st.p_valid[slot], t >= L)
+        approve = jnp.logical_and(
+            due, jnp.logical_or(st.p_qcls[slot] == st.p_hcls[slot],
+                                st.p_flip[slot]))
+        promoted_dyn = T.upsert(dyn, st.p_emb[slot], st.p_hcls[slot],
+                                st.p_href[slot], now=t, static_origin=True)
+        dyn = jax.tree.map(lambda a, b: jnp.where(approve, b, a), dyn,
+                           promoted_dyn)
+        judge_calls = st.judge_calls + due.astype(jnp.int32)
+        judge_approved = st.judge_approved + approve.astype(jnp.int32)
+        promotions = st.promotions + approve.astype(jnp.int32)
+        p_valid = st.p_valid.at[slot].set(False)
+
+        # ---- 2. serving path (identical for baseline and Krites) ----
+        static_hit = ss >= cfg.tau_static
+        s_dyn, j_dyn = T.dynamic_lookup(dyn, q)
+        dyn_hit = jnp.logical_and(~static_hit, s_dyn >= cfg.tau_dynamic)
+        miss = jnp.logical_and(~static_hit, ~dyn_hit)
+
+        served_cls = jnp.where(static_hit, hc,
+                               jnp.where(dyn_hit, dyn.cls[j_dyn], qc))
+        is_promoted = jnp.logical_and(dyn_hit, dyn.static_origin[j_dyn])
+        served_by = jnp.where(
+            static_hit, STATIC_HIT,
+            jnp.where(is_promoted, DYN_HIT_PROMOTED,
+                      jnp.where(dyn_hit, DYN_HIT_DYNAMIC, MISS))
+        ).astype(jnp.int8)
+        correct = served_cls == qc
+        static_origin = jnp.logical_or(static_hit, is_promoted)
+
+        # LRU touch on dynamic hit
+        touched = T.touch(dyn, j_dyn, t)
+        dyn = jax.tree.map(lambda a, b: jnp.where(dyn_hit, b, a), dyn,
+                           touched)
+        # baseline write-back on miss (backend answer has the query's class)
+        inserted = T.insert(dyn, q, qc, jnp.int32(-1), now=t,
+                            static_origin=False)
+        dyn = jax.tree.map(lambda a, b: jnp.where(miss, b, a), dyn,
+                           inserted)
+
+        # ---- 3. grey-zone trigger (Krites only; off-path) ----
+        grey = jnp.logical_and(ss >= cfg.sigma_min, ss < cfg.tau_static)
+        want = jnp.logical_and(grey, bool(krites))
+        if cfg.dedup:
+            # skip if a promoted pointer already serves this query
+            want = jnp.logical_and(
+                want, ~jnp.logical_and(is_promoted,
+                                       s_dyn >= cfg.tau_dynamic))
+        budget = jnp.minimum(st.budget + cfg.judge_rate, 1e9)
+        can = jnp.logical_and(want, budget >= 1.0)
+        budget = jnp.where(can, budget - 1.0, budget)
+        dropped = jnp.logical_and(want, ~can)
+
+        p_valid = p_valid.at[slot].set(can)
+        p_emb = st.p_emb.at[slot].set(jnp.where(can, q, st.p_emb[slot]))
+        p_qcls = st.p_qcls.at[slot].set(
+            jnp.where(can, qc, st.p_qcls[slot]))
+        p_hcls = st.p_hcls.at[slot].set(
+            jnp.where(can, hc, st.p_hcls[slot]))
+        p_href = st.p_href.at[slot].set(
+            jnp.where(can, hr, st.p_href[slot]))
+        p_flip = st.p_flip.at[slot].set(
+            jnp.where(can, fl, st.p_flip[slot]))
+
+        new_state = SimState(
+            dyn=dyn, p_valid=p_valid, p_emb=p_emb, p_qcls=p_qcls,
+            p_hcls=p_hcls, p_href=p_href, p_flip=p_flip,
+            budget=budget, t=t + 1,
+            judge_calls=judge_calls, judge_approved=judge_approved,
+            promotions=promotions,
+            enq_dropped=st.enq_dropped + dropped.astype(jnp.int32))
+        return new_state, (served_by, correct, static_origin)
+
+    xs = (q_emb, q_cls.astype(jnp.int32), s_static, h_cls, h_idx,
+          judge_flip)
+    final, (served_by, correct, static_origin) = jax.lax.scan(
+        step, state, xs)
+    return SimResult(served_by, correct, static_origin,
+                     final.judge_calls, final.judge_approved,
+                     final.promotions, final.enq_dropped)
+
+
+# ---------------------------------------------------------------------------
+# derived metrics
+# ---------------------------------------------------------------------------
+
+def summarize(res: SimResult) -> dict:
+    n = res.served_by.shape[0]
+    sb = res.served_by
+    hit = sb != MISS
+    out = {
+        "requests": n,
+        "static_hit_rate": float(jnp.mean(sb == STATIC_HIT)),
+        "dyn_hit_rate": float(jnp.mean((sb == DYN_HIT_DYNAMIC)
+                                       | (sb == DYN_HIT_PROMOTED))),
+        "promoted_hit_rate": float(jnp.mean(sb == DYN_HIT_PROMOTED)),
+        "total_hit_rate": float(jnp.mean(hit)),
+        "static_origin_rate": float(jnp.mean(res.static_origin)),
+        "error_rate": float(jnp.mean(jnp.logical_and(hit, ~res.correct))),
+        "judge_calls": int(res.judge_calls),
+        "judge_approved": int(res.judge_approved),
+        "promotions": int(res.promotions),
+        "enq_dropped": int(res.enq_dropped),
+    }
+    return out
+
+
+def coverage_curve(res: SimResult, n_points: int = 100):
+    """Cumulative static-origin served fraction vs requests (Figure 2)."""
+    so = res.static_origin.astype(jnp.float32)
+    cum = jnp.cumsum(so) / (jnp.arange(so.shape[0]) + 1)
+    pts = jnp.linspace(0, so.shape[0] - 1, n_points).astype(jnp.int32)
+    return pts, cum[pts]

@@ -1,0 +1,152 @@
+"""Tiered semantic cache state: read-only static tier + functional dynamic
+tier (fixed-capacity struct-of-arrays with LRU eviction and upsert).
+
+The dynamic tier is deliberately *functional JAX state* (arrays, not
+pointers): every mutation returns a new pytree, so the tier can live inside
+``lax.scan`` (trace simulation), be donated across steps (live serving), be
+sharded (large deployments), and be checkpointed like any other state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.index.flat import l2_normalize
+
+BIG = jnp.int32(2**30)
+
+
+class StaticTier(NamedTuple):
+    """Read-only curated tier. emb rows are L2-normalized."""
+    emb: jax.Array        # (S, d) fp32
+    cls: jax.Array        # (S,) int32 — equivalence class of the answer
+    answer_ref: jax.Array  # (S,) int32 — opaque handle to the curated answer
+
+
+class DynamicTier(NamedTuple):
+    """Mutable tier: fixed capacity C, LRU clocks, provenance bits."""
+    emb: jax.Array            # (C, d) fp32, normalized
+    cls: jax.Array            # (C,) int32 answer class
+    answer_ref: jax.Array     # (C,) int32
+    static_origin: jax.Array  # (C,) bool — True if auxiliary-overwrite entry
+    valid: jax.Array          # (C,) bool
+    last_used: jax.Array      # (C,) int32 LRU clock
+    written_at: jax.Array     # (C,) int32 timestamp (LWW guard)
+
+
+def make_static_tier(emb: jax.Array, cls: jax.Array,
+                     answer_ref: jax.Array | None = None) -> StaticTier:
+    if answer_ref is None:
+        answer_ref = jnp.arange(emb.shape[0], dtype=jnp.int32)
+    return StaticTier(l2_normalize(emb.astype(jnp.float32)),
+                      cls.astype(jnp.int32), answer_ref.astype(jnp.int32))
+
+
+def make_dynamic_tier(capacity: int, d: int) -> DynamicTier:
+    return DynamicTier(
+        emb=jnp.zeros((capacity, d), jnp.float32),
+        cls=jnp.zeros((capacity,), jnp.int32),
+        answer_ref=jnp.full((capacity,), -1, jnp.int32),
+        static_origin=jnp.zeros((capacity,), bool),
+        valid=jnp.zeros((capacity,), bool),
+        last_used=jnp.zeros((capacity,), jnp.int32),
+        written_at=jnp.zeros((capacity,), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# lookups
+# ---------------------------------------------------------------------------
+
+def static_lookup(tier: StaticTier, q: jax.Array):
+    """q (d,) normalized -> (best similarity, best index)."""
+    sims = tier.emb @ q
+    idx = jnp.argmax(sims)
+    return sims[idx], idx.astype(jnp.int32)
+
+
+def dynamic_lookup(tier: DynamicTier, q: jax.Array):
+    """q (d,) normalized -> (best similarity, best index) over valid rows."""
+    sims = tier.emb @ q
+    sims = jnp.where(tier.valid, sims, -jnp.inf)
+    idx = jnp.argmax(sims)
+    return sims[idx], idx.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# mutations (all functional)
+# ---------------------------------------------------------------------------
+
+def _lru_slot(tier: DynamicTier) -> jax.Array:
+    """Insertion slot: first invalid row, else least-recently-used."""
+    key = jnp.where(tier.valid, tier.last_used, -BIG)
+    return jnp.argmin(key).astype(jnp.int32)
+
+
+def _write(tier: DynamicTier, slot, q, cls, answer_ref, static_origin,
+           now) -> DynamicTier:
+    return DynamicTier(
+        emb=tier.emb.at[slot].set(q),
+        cls=tier.cls.at[slot].set(cls.astype(jnp.int32)),
+        answer_ref=tier.answer_ref.at[slot].set(
+            answer_ref.astype(jnp.int32)),
+        static_origin=tier.static_origin.at[slot].set(static_origin),
+        valid=tier.valid.at[slot].set(True),
+        last_used=tier.last_used.at[slot].set(now),
+        written_at=tier.written_at.at[slot].set(now),
+    )
+
+
+def insert(tier: DynamicTier, q, cls, answer_ref, now,
+           static_origin=False) -> DynamicTier:
+    """Baseline write-back (Alg. 1 line 11): plain LRU insert."""
+    so = jnp.asarray(static_origin)
+    return _write(tier, _lru_slot(tier), q, jnp.asarray(cls),
+                  jnp.asarray(answer_ref), so, now)
+
+
+def upsert(tier: DynamicTier, q, cls, answer_ref, now,
+           static_origin=True, dedup_sim: float = 0.9999,
+           lww: bool = True) -> DynamicTier:
+    """Auxiliary overwrite (Alg. 2 line 21): idempotent, LWW-guarded.
+
+    If a near-identical key exists (sim >= dedup_sim), overwrite that slot
+    (idempotent re-promotion); otherwise take the LRU slot. With
+    ``lww=True`` an existing *newer* entry (written after this task was
+    enqueued, i.e. written_at > now) is left alone.
+    """
+    s, j = dynamic_lookup(tier, q)
+    dup = s >= dedup_sim
+    slot = jnp.where(dup, j, _lru_slot(tier))
+    skip = jnp.logical_and(dup, tier.written_at[j] > now) if lww \
+        else jnp.asarray(False)
+    new = _write(tier, slot, q, jnp.asarray(cls), jnp.asarray(answer_ref),
+                 jnp.asarray(static_origin), now)
+    return jax.tree.map(lambda a, b: jnp.where(skip, a, b), tier, new)
+
+
+def touch(tier: DynamicTier, slot, now) -> DynamicTier:
+    """LRU touch on hit."""
+    return tier._replace(last_used=tier.last_used.at[slot].set(now))
+
+
+def evict_expired(tier: DynamicTier, now, ttl: int) -> DynamicTier:
+    """TTL sweep: invalidate entries older than ttl."""
+    alive = now - tier.written_at <= ttl
+    return tier._replace(valid=jnp.logical_and(tier.valid, alive))
+
+
+@dataclass(frozen=True)
+class CacheConfig:
+    """Thresholds + capacities for the tiered cache."""
+    tau_static: float
+    tau_dynamic: float
+    sigma_min: float = 0.0      # grey-zone lower cutoff (paper: 0)
+    capacity: int = 4096
+    judge_latency: int = 64     # async completion lag, in requests
+    ttl: int = 0                # 0 = disabled
+    dedup: bool = True          # skip judging when a promoted pointer hits
+    judge_rate: float = 1.0     # token-bucket refill per request (1 = 1/req)

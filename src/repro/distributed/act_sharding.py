@@ -1,0 +1,91 @@
+"""Activation sharding constraints (FSDP discipline).
+
+Without constraints, GSPMD sometimes reshards *activations* onto a
+weight's contraction dimension (gathering the batch axis!) instead of
+all-gathering the FSDP-sharded weights — catastrophically wrong for
+big-batch training. Pinning activations to batch-sharded layouts at layer
+boundaries leaves weight-gather as the only consistent strategy, which is
+the FSDP execution we want.
+
+The data-parallel axes are threaded via a contextvar so model code stays
+mesh-agnostic; entering ``use_dp_axes(...)`` happens where the mesh is
+known (workload builders / train loop). The tensor-parallel axis is the
+framework-wide convention 'model'.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_DP_AXES = contextvars.ContextVar("repro_dp_axes", default=None)
+_MESH = contextvars.ContextVar("repro_mesh", default=None)
+TP_AXIS = "model"
+
+
+@contextlib.contextmanager
+def use_dp_axes(axes, mesh=None):
+    tok = _DP_AXES.set(tuple(axes) if axes else None)
+    tok2 = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _DP_AXES.reset(tok)
+        _MESH.reset(tok2)
+
+
+def current_mesh():
+    return _MESH.get()
+
+
+def dp_axes_active():
+    return _DP_AXES.get()
+
+
+def constrain_act(x: jax.Array) -> jax.Array:
+    """Pin leading (batch-like) axis to the DP axes, rest replicated."""
+    axes = _DP_AXES.get()
+    if axes is None:
+        return x
+    spec = P(axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_tp_last(x: jax.Array) -> jax.Array:
+    """Batch on DP axes, last axis on the TP ('model') axis."""
+    axes = _DP_AXES.get()
+    if axes is None:
+        return x
+    spec = P(axes, *([None] * (x.ndim - 2)), TP_AXIS)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_seq(x: jax.Array) -> jax.Array:
+    """Megatron-SP layout: batch on DP axes, *sequence* axis on 'model'.
+    Applied to the layer carry so remat residuals are sharded 16x over
+    the TP axis; layers gather at entry (AG/RS pair is collective-neutral
+    vs the TP all-reduce it replaces)."""
+    axes = _DP_AXES.get()
+    if axes is None:
+        return x
+    spec = P(axes, TP_AXIS, *([None] * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_spec(x: jax.Array, spec_tokens) -> jax.Array:
+    """General constraint: spec_tokens entries are 'dp' (the DP axes),
+    'model' (TP axis), or None. No-op outside a DP context."""
+    axes = _DP_AXES.get()
+    if axes is None:
+        return x
+    parts = []
+    for t in spec_tokens:
+        if t == "dp":
+            parts.append(axes)
+        elif t == "model":
+            parts.append(TP_AXIS)
+        else:
+            parts.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*parts))

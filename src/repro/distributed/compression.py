@@ -1,0 +1,67 @@
+"""Gradient compression for cross-pod (DCN) all-reduce.
+
+int8 block-quantization with error feedback (EF-SGD style): quantize
+(grad + residual), all-reduce the int8 payload (here: the quantized
+values — 4x fewer bytes over DCN), keep the quantization error as local
+residual for the next step. Unbiased enough in practice; EF guarantees
+convergence. Used by the train loop when ``cross_pod_compression`` is on.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x):
+    n = x.size
+    pad = (-n) % BLOCK
+    return jnp.pad(x.reshape(-1), (0, pad)), n
+
+
+def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array, int]:
+    """x (any shape) -> (int8 values (nb, BLOCK), fp32 scales (nb,), n)."""
+    flat, n = _pad_to_block(x.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127)
+    return q.astype(jnp.int8), scale, n
+
+
+def dequantize(q: jax.Array, scale: jax.Array, n: int, shape) -> jax.Array:
+    x = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:n]
+    return x.reshape(shape)
+
+
+def compress_grads_with_feedback(grads: Any, residual: Any):
+    """Returns (quantized_tree, new_residual). quantized_tree leaves are
+    (q, scale, n) tuples ready for the DCN all-reduce; residual carries
+    the per-leaf quantization error (error feedback)."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s, n = quantize(x)
+        deq = dequantize(q, s, n, g.shape)
+        return (q, s, n), x - deq
+    pairs = jax.tree.map(one, grads, residual)
+    qt = jax.tree.map(lambda p: p[0], pairs,
+                      is_leaf=lambda x: isinstance(x, tuple)
+                      and len(x) == 2 and isinstance(x[0], tuple))
+    res = jax.tree.map(lambda p: p[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple)
+                       and len(x) == 2 and isinstance(x[0], tuple))
+    return qt, res
+
+
+def init_residual(grads_like: Any) -> Any:
+    return jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def roundtrip(x: jax.Array) -> jax.Array:
+    """quantize->dequantize (for tests / simulating the DCN payload)."""
+    q, s, n = quantize(x)
+    return dequantize(q, s, n, x.shape)

@@ -1,0 +1,79 @@
+"""Compute/communication overlap helpers.
+
+On TPU, XLA already schedules collectives asynchronously (*-start/*-done
+pairs); what the framework controls is *structure*:
+
+- microbatched gradient accumulation: the per-microbatch bwd compute
+  overlaps the previous microbatch's gradient reduce-scatter, because the
+  scan body's psum is independent of the next iteration's compute;
+- bucketed reductions: many small grad tensors are concatenated into
+  ~bucket_bytes buckets so the interconnect sees few large transfers.
+
+``accumulate_microbatches`` is used by the train loop; bucketing by the
+compression/DCN path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def accumulate_microbatches(loss_fn: Callable, n_micro: int):
+    """loss_fn(params, batch)->scalar  ==>  grad_fn(params, batch) with the
+    batch split into n_micro microbatches along axis 0, accumulated in a
+    scan (bwd of microbatch i overlaps the reduction of i-1 on TPU)."""
+    def split(batch):
+        return jax.tree.map(
+            lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                + x.shape[1:]), batch)
+
+    def grad_fn(params, batch):
+        micro = split(batch)
+        gfn = jax.value_and_grad(loss_fn)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            loss, g = gfn(params, mb)
+            acc = jax.tree.map(jnp.add, acc, g)
+            return (acc, loss_acc + loss), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (g, loss), _ = jax.lax.scan(body, (zeros, jnp.float32(0.0)),
+                                    micro)
+        scale = 1.0 / n_micro
+        return loss * scale, jax.tree.map(lambda x: x * scale, g)
+    return grad_fn
+
+
+def bucket_leaves(tree: Any, bucket_bytes: int = 4 * 2**20):
+    """Group flat leaves into buckets of ~bucket_bytes (returns list of
+    (names, concatenated fp32 vector) plus an unbucket function)."""
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    sizes = [int(x.size) for x in flat]
+    buckets, cur, cur_bytes = [], [], 0
+    for i, x in enumerate(flat):
+        cur.append(i)
+        cur_bytes += sizes[i] * 4
+        if cur_bytes >= bucket_bytes:
+            buckets.append(cur)
+            cur, cur_bytes = [], 0
+    if cur:
+        buckets.append(cur)
+
+    vecs = [jnp.concatenate([flat[i].astype(jnp.float32).reshape(-1)
+                             for i in b]) for b in buckets]
+
+    def unbucket(new_vecs):
+        out = list(flat)
+        for b, v in zip(buckets, new_vecs):
+            off = 0
+            for i in b:
+                out[i] = v[off:off + sizes[i]].reshape(flat[i].shape) \
+                    .astype(flat[i].dtype)
+                off += sizes[i]
+        return jax.tree_util.tree_unflatten(treedef, out)
+    return vecs, unbucket

@@ -1,0 +1,185 @@
+"""Per-family sharding rules (PartitionSpecs) for params, optimizer state,
+inputs, and outputs.
+
+Design (see DESIGN.md §6):
+- LM: FSDP('data' on the d_model-ish dim) x TP('model' on the d_ff /
+  fused-head / vocab dim). Attention-head axes are never the sharded dim
+  (40/8/2 heads don't divide 16); fused head*dim always does.
+- MoE experts: TP *within* experts by default (expert d_ff over 'model');
+  the expert axis itself is sharded only when it divides the axis (EP
+  variant, §Perf).
+- decode KV caches: batch over DP axes, *sequence* over 'model'
+  (flash-decoding split-K under GSPMD).
+- GNN: edges sharded over every axis, node features replicated.
+- RecSys: tables row-sharded over 'model', batch over DP axes.
+- 'pod' axis: pure DP — params replicated across pods, so only gradient
+  all-reduce crosses the DCN.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import GNNConfig, LMConfig, RecSysConfig
+from repro.launch.mesh import dp_axes
+
+
+def _ns(mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def tree_shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: _ns(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+_LM_LAYER_RULES = {
+    # name -> spec for the per-layer shape, EXCLUDING the leading L axis
+    "wq": P("data", "model"),
+    "wk": P("data", "model"),
+    "wv": P("data", "model"),
+    "wo": P("model", "data"),
+    "ln1": P(None), "ln2": P(None),
+    "q_norm": P(None), "k_norm": P(None),
+    # dense ffn
+    "wg": P("data", "model"), "wu": P("data", "model"),
+    "wd": P("model", "data"),
+    # moe (expert axis replicated; TP inside the expert)
+    "router": P("data", None),
+    "shared_wg": P("data", "model"), "shared_wu": P("data", "model"),
+    "shared_wd": P("model", "data"),
+}
+
+_LM_MOE_RULES = {  # (E, d, f) / (E, f, d) expert stacks
+    "wg": P(None, "data", "model"), "wu": P(None, "data", "model"),
+    "wd": P(None, "model", "data"),
+}
+
+
+def lm_param_specs(cfg: LMConfig) -> dict:
+    """PartitionSpec pytree matching transformer.init_params structure."""
+    layer = {}
+    from repro.models.transformer import _layer_shapes
+    for name, shp in _layer_shapes(cfg).items():
+        if cfg.is_moe and name in _LM_MOE_RULES and len(shp) == 3:
+            spec = _LM_MOE_RULES[name]
+        else:
+            spec = _LM_LAYER_RULES[name]
+        layer[name] = P(None, *spec)           # leading scan-layer axis
+    out = {"layers": layer,
+           "embed": P("model", "data"),
+           "final_ln": P(None)}
+    if not cfg.tie_embeddings:
+        out["unembed"] = P("data", "model")
+    return out
+
+
+def lm_batch_spec(mesh) -> dict:
+    dp = dp_axes(mesh)
+    return {"tokens": P(dp, None), "labels": P(dp, None)}
+
+
+def lm_cache_spec(mesh) -> dict:
+    dp = dp_axes(mesh)
+    return {"k": P(None, dp, "model", None, None),
+            "v": P(None, dp, "model", None, None),
+            "length": P(dp)}
+
+
+def lm_prefill_out_spec(mesh):
+    dp = dp_axes(mesh)
+    return (P(dp, "model"), lm_cache_spec(mesh))    # (logits, cache)
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+def gnn_param_specs(cfg: GNNConfig, params_shape) -> Any:
+    # GNN weights are small: replicate.
+    return jax.tree.map(lambda _: P(), params_shape)
+
+
+def gnn_batch_spec(mesh, kind: str, n_levels: int = 2) -> dict:
+    dp = dp_axes(mesh)
+    all_axes = tuple(mesh.axis_names)
+    if kind == "full_graph":
+        return {"feats": P(None, None), "edges": P(all_axes, None),
+                "labels": P(None), "label_mask": P(None)}
+    if kind == "minibatch":
+        spec = {"labels": P(dp)}
+        for i in range(n_levels + 1):
+            spec[f"feat_l{i}"] = P(dp, *([None] * (i + 1)))
+        return spec
+    if kind == "batched_graphs":
+        return {"feats": P(dp, None, None), "edges": P(dp, None, None),
+                "edge_mask": P(dp, None), "labels": P(dp)}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# RecSys
+# ---------------------------------------------------------------------------
+
+def recsys_param_specs(cfg: RecSysConfig, params_shape) -> Any:
+    """Row-shard every large embedding table over 'model'; replicate the
+    dense interaction weights (they are tiny)."""
+    def rule(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        big = ("item_emb", "tables", "wide")
+        if any(b in name for b in big) and leaf.ndim == 2 \
+                and leaf.shape[0] >= 4096:
+            return P("model", None)
+        return P()
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def recsys_batch_spec(mesh, cfg: RecSysConfig, kind: str) -> dict:
+    dp = dp_axes(mesh)
+    b1 = P(dp)
+    bN = P(dp, None)
+    if kind == "retrieval":
+        out = {"cand_ids": P("model")}
+        if cfg.kind == "wide_deep":
+            out.update({"sparse_ids": P(None, None, None),
+                        "sparse_mask": P(None, None, None)})
+        else:
+            out["seq"] = P(None, None)
+        return out
+    if cfg.kind == "sasrec":
+        out = {"seq": bN}
+        if kind == "train":
+            out.update({"pos": bN, "neg": bN})
+        else:
+            out["cands"] = bN
+        return out
+    if cfg.kind == "mind":
+        out = {"seq": bN}
+        if kind == "train":
+            out.update({"pos": b1, "neg": bN})
+        else:
+            out["cands"] = bN
+        return out
+    if cfg.kind == "bst":
+        out = {"seq": bN}
+        if kind == "train":
+            out.update({"target": b1, "label": b1})
+        else:
+            out["cands"] = bN
+        return out
+    if cfg.kind == "wide_deep":
+        out = {"sparse_ids": P(dp, None, None),
+               "sparse_mask": P(dp, None, None)}
+        if kind == "train":
+            out["label"] = b1
+        else:
+            out["cands"] = bN
+        return out
+    raise ValueError(cfg.kind)

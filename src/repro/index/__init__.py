@@ -1,0 +1,3 @@
+from repro.index.flat import cosine_topk, topk_scores, l2_normalize
+
+__all__ = ["cosine_topk", "topk_scores", "l2_normalize"]

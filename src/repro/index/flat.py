@@ -1,0 +1,50 @@
+"""Exact flat vector index: normalize + matmul + top-k.
+
+This is the single-device form of the cache lookup (the paper's serving
+hot path) and of recsys `retrieval_cand`. On TPU the fused Pallas
+``simsearch`` kernel takes over via :mod:`repro.kernels.simsearch.ops`;
+this jnp path is its oracle twin and the CPU/dry-run implementation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def l2_normalize(x: jax.Array, eps: float = 1e-9) -> jax.Array:
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), eps)
+
+
+def cosine_topk(queries: jax.Array, corpus: jax.Array, k: int = 1,
+                corpus_normalized: bool = False):
+    """Cosine similarity top-k.
+
+    queries (B, d), corpus (N, d) -> (scores (B, k), idx (B, k)).
+    """
+    q = l2_normalize(queries.astype(jnp.float32))
+    c = corpus.astype(jnp.float32)
+    if not corpus_normalized:
+        c = l2_normalize(c)
+    sims = q @ c.T
+    return jax.lax.top_k(sims, k)
+
+
+def topk_scores(queries: jax.Array, cand_vecs: jax.Array,
+                cand_ids: jax.Array, k: int):
+    """Raw-dot retrieval scoring: (B, d) x (N, d) -> top-k (scores, ids)."""
+    scores = jnp.einsum("bd,nd->bn", queries, cand_vecs)
+    vals, idx = jax.lax.top_k(scores.astype(jnp.float32), k)
+    return vals, jnp.take(cand_ids, idx)
+
+
+def masked_cosine_topk(queries: jax.Array, corpus: jax.Array,
+                       valid: jax.Array, k: int = 1):
+    """Cosine top-k over a partially-valid corpus (the dynamic tier).
+
+    valid (N,) bool — invalid rows score -inf.
+    """
+    q = l2_normalize(queries.astype(jnp.float32))
+    c = l2_normalize(corpus.astype(jnp.float32))
+    sims = q @ c.T
+    sims = jnp.where(valid[None, :], sims, -jnp.inf)
+    return jax.lax.top_k(sims, k)

@@ -1,0 +1,133 @@
+"""Distributed exact top-k over a corpus sharded across the 'model' axis.
+
+This is the production layout of the Krites static tier (and of recsys
+``retrieval_cand``): corpus rows live row-sharded across chips; each shard
+computes a local top-k with the fused simsearch kernel, and only the tiny
+(k scores, k indices) pairs cross the interconnect for the global merge —
+instead of gathering the corpus or the full score matrix.
+
+Implemented with ``shard_map`` + ``jax.lax`` collectives (all_gather of
+per-shard top-k). The auto-GSPMD path (see index/flat.py under jit) is the
+baseline; this manual-merge version is the optimized variant measured in
+§Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.simsearch.ops import cosine_topk
+
+
+def sharded_cosine_topk(queries: jax.Array, corpus: jax.Array, mesh,
+                        k: int = 4, axis: str = "model",
+                        force: str | None = None):
+    """queries (B, d) replicated; corpus (N, d) sharded over ``axis``.
+
+    Returns (scores (B, k), global indices (B, k)).
+    """
+    n_shards = mesh.shape[axis]
+    N = corpus.shape[0]
+    shard_rows = N // n_shards
+
+    def local(q, c):
+        vals, idx = cosine_topk(q, c, k=k, force=force)
+        shard_id = jax.lax.axis_index(axis)
+        gidx = idx + shard_id * shard_rows
+        # gather the candidate sets from every shard: (n_shards*k,) each
+        all_vals = jax.lax.all_gather(vals, axis, axis=1, tiled=True)
+        all_idx = jax.lax.all_gather(gidx, axis, axis=1, tiled=True)
+        top_v, pos = jax.lax.top_k(all_vals, k)
+        top_i = jnp.take_along_axis(all_idx, pos, axis=1)
+        return top_v, top_i
+
+    other = [a for a in mesh.axis_names if a != axis]
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(*([None] * queries.ndim)), P(axis, None)),
+        out_specs=(P(), P()),
+        check_vma=False)
+    return fn(queries, corpus)
+
+
+def sharded_topk_scores(u: jax.Array, cand_vecs: jax.Array,
+                        cand_ids: jax.Array, mesh, k: int = 100,
+                        axis: str = "model"):
+    """Distributed retrieval scoring: raw-dot top-k with per-shard
+    selection + tiny merge (recsys `retrieval_cand` / cache lookup).
+
+    u: (B, d) or (B, I, d) (multi-interest: max over I) — replicated.
+    cand_vecs (N, d), cand_ids (N,) — sharded over ``axis``.
+    """
+    def local(uq, c, ids):
+        if uq.ndim == 3:
+            scores = jnp.einsum("bid,nd->bin", uq, c).max(axis=1)
+        else:
+            scores = jnp.einsum("bd,nd->bn", uq, c)
+        vals, idx = jax.lax.top_k(scores.astype(jnp.float32), k)
+        gids = jnp.take(ids, idx)
+        # merge: gather the k candidates from every shard (k*n_shards
+        # scalars — instead of gathering the N-row corpus or scores)
+        all_vals = jax.lax.all_gather(vals, axis, axis=1, tiled=True)
+        all_gids = jax.lax.all_gather(gids, axis, axis=1, tiled=True)
+        top_v, pos = jax.lax.top_k(all_vals, k)
+        return top_v, jnp.take_along_axis(all_gids, pos, axis=1)
+
+    uspec = P(*([None] * u.ndim))
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(uspec, P(axis, None), P(axis)),
+                   out_specs=(P(), P()), check_vma=False)
+    return fn(u, cand_vecs, cand_ids)
+
+
+def sharded_topk_local_candidates(u: jax.Array, table: jax.Array,
+                                  cand_ids: jax.Array, mesh, k: int = 100,
+                                  axis: str = "model"):
+    """Retrieval with *range-partitioned* candidates (production layout:
+    each shard's candidate list references rows it owns, as in sharded
+    ANN/DLRM serving). The embedding gather is then shard-LOCAL; the only
+    collective is the k-candidate merge (KBs).
+
+    table (V, d) row-sharded over ``axis``; cand_ids (N,) sharded over
+    ``axis`` with values in the owning shard's row range.
+    """
+    V = table.shape[0]
+    n_shards = mesh.shape[axis]
+    rows_per = V // n_shards
+
+    def local(uq, tab, ids):
+        local_rows = ids - jax.lax.axis_index(axis) * rows_per
+        c = jnp.take(tab, jnp.clip(local_rows, 0, rows_per - 1), axis=0)
+        if uq.ndim == 3:
+            scores = jnp.einsum("bid,nd->bin", uq, c).max(axis=1)
+        else:
+            scores = jnp.einsum("bd,nd->bn", uq, c)
+        vals, idx = jax.lax.top_k(scores.astype(jnp.float32), k)
+        gids = jnp.take(ids, idx)
+        all_vals = jax.lax.all_gather(vals, axis, axis=1, tiled=True)
+        all_gids = jax.lax.all_gather(gids, axis, axis=1, tiled=True)
+        top_v, pos = jax.lax.top_k(all_vals, k)
+        return top_v, jnp.take_along_axis(all_gids, pos, axis=1)
+
+    uspec = P(*([None] * u.ndim))
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(uspec, P(axis, None), P(axis)),
+                   out_specs=(P(), P()), check_vma=False)
+    return fn(u, table, cand_ids)
+
+
+def sharded_static_lookup(mesh, static_emb: jax.Array, axis: str = "model"):
+    """Returns a jitted (queries) -> (best_sim, best_idx) closure over a
+    corpus kept sharded on device — the serving-path static lookup."""
+    sharding = jax.sharding.NamedSharding(mesh, P(axis, None))
+    corpus = jax.device_put(static_emb, sharding)
+
+    @jax.jit
+    def lookup(queries):
+        v, i = sharded_cosine_topk(queries, corpus, mesh, k=1, axis=axis)
+        return v[:, 0], i[:, 0]
+    return lookup

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jitted dispatch wrapper with a jnp fallback off-TPU), and ref.py (the
+pure-jnp oracle used by the interpret-mode test sweeps).
+
+  simsearch        fused cosine top-k (cache lookup / retrieval_cand)
+  flash_attention  causal GQA prefill attention
+  decode_attention flash-decoding over long KV caches
+  embedding_bag    scalar-prefetch gather + weighted bag reduce
+"""

@@ -1,0 +1,101 @@
+"""GQA decode-attention Pallas TPU kernel (flash-decoding style).
+
+One new token per sequence attends over a long KV cache. The cache is
+streamed through VMEM in sequence tiles (split-K); per-(batch, kv-head)
+online-softmax stats live in scratch. The group of G query heads sharing a
+kv head rides in the sublane dimension, so the MXU sees (G, D) x (D, bs)
+matmuls per tile.
+
+Grid: (B*K, n_s) with the sequence axis innermost. Per-sequence valid
+``lengths`` arrive via scalar prefetch and gate both the compute (whole
+tile beyond length is skipped) and the in-tile mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *, bs,
+            n_s, K, scale):
+    bh = pl.program_id(0)
+    sj = pl.program_id(1)
+    b = bh // K
+    length = len_ref[b]
+
+    @pl.when(sj == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    @pl.when(sj * bs < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # (G, D)
+        k = k_ref[0].astype(jnp.float32)                 # (bs, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (G, bs)
+        kpos = sj * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG)
+
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, 1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_s[...] = l_s[...] * alpha + jnp.sum(p, 1, keepdims=True)
+        acc_s[...] = acc_s[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    @pl.when(sj == n_s - 1)
+    def _done():
+        o_ref[0] = (acc_s[...] / l_s[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     lengths: jax.Array, bs: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q (B, H, D); caches (B, S, K, D); lengths (B,) -> (B, H, D)."""
+    B, H, D = q.shape
+    _, S, K, _ = k_cache.shape
+    G = H // K
+    bs = min(bs, S)
+    assert S % bs == 0
+    n_s = S // bs
+
+    qf = q.reshape(B * K, G, D)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * K, S, D)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * K, S, D)
+
+    kern = functools.partial(_kernel, bs=bs, n_s=n_s, K=K, scale=D ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * K, n_s),
+        in_specs=[
+            pl.BlockSpec((1, G, D), lambda bh, sj, lens: (bh, 0, 0)),
+            pl.BlockSpec((1, bs, D), lambda bh, sj, lens: (bh, sj, 0)),
+            pl.BlockSpec((1, bs, D), lambda bh, sj, lens: (bh, sj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda bh, sj, lens: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * K, G, D), jnp.float32),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qf, kf, vf)
+    return out.reshape(B, H, D)

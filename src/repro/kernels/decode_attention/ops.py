@@ -1,0 +1,26 @@
+"""Dispatching wrapper: Pallas decode attention on TPU, jnp split-K off."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attention import kernel as _kernel
+from repro.models import attention as attn_lib
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "force"))
+def decode_attention(q, k_cache, v_cache, lengths, bs: int = 512,
+                     force: str | None = None):
+    """q (B, H, D); caches (B, S, K, D); lengths (B,) -> (B, H, D)."""
+    mode = force or ("pallas" if _on_tpu() else "jnp")
+    if mode == "jnp":
+        out = attn_lib.decode_attention(q[:, None], k_cache, v_cache,
+                                        lengths)
+        return out[:, 0].astype(jax.numpy.float32)
+    return _kernel.decode_attention(q, k_cache, v_cache, lengths, bs=bs,
+                                    interpret=(mode == "interpret"))

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for GQA decode attention with a length-masked KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, lengths: jax.Array):
+    """q (B, H, D); caches (B, S, K, D); lengths (B,) valid positions.
+
+    Returns (B, H, D) fp32.
+    """
+    B, H, D = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    qg = q.astype(jnp.float32).reshape(B, K, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg,
+                   k_cache.astype(jnp.float32)) * D ** -0.5
+    pos = jnp.arange(k_cache.shape[1])
+    valid = pos[None] < lengths[:, None]                 # (B, S)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, D)

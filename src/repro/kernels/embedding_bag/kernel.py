@@ -1,0 +1,56 @@
+"""EmbeddingBag Pallas TPU kernel via scalar-prefetch row DMA.
+
+JAX/TPU has no native EmbeddingBag; this kernel implements the gather +
+weighted reduce with *data-dependent DMA*: the bag ids arrive as scalar
+prefetch, and each grid step's BlockSpec index_map picks the table row to
+stream HBM->VMEM. The (B, m, d) gathered intermediate of the jnp path is
+never materialized.
+
+Grid: (B, m) — bag-major, so the output block (1, d) stays resident in
+VMEM across the m accumulation steps of one bag.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, w_ref, row_ref, o_ref, *, m):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = w_ref[b, j]
+    o_ref[...] += w * row_ref[...].astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag(table: jax.Array, ids: jax.Array, weights: jax.Array,
+                  interpret: bool = False) -> jax.Array:
+    """table (V, d); ids (B, m) int32; weights (B, m) fp32 -> (B, d)."""
+    V, d = table.shape
+    B, m = ids.shape
+
+    kern = functools.partial(_kernel, m=m)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                # ids, weights
+        grid=(B, m),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, j, ids, w: (ids[b, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda b, j, ids, w: (b, 0)),
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, d), jnp.float32),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), weights.astype(jnp.float32), table)
+    return out

@@ -1,0 +1,23 @@
+"""Dispatching wrapper: Pallas embedding-bag on TPU, take+reduce off."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.embedding_bag import kernel as _kernel
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def embedding_bag(table, ids, weights, force: str | None = None):
+    """table (V, d); ids (B, m); weights (B, m) -> (B, d) fp32."""
+    mode = force or ("pallas" if _on_tpu() else "jnp")
+    if mode == "jnp":
+        return embedding_bag_ref(table, ids, weights)
+    return _kernel.embedding_bag(table, ids, weights,
+                                 interpret=(mode == "interpret"))

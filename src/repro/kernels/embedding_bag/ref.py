@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the embedding-bag kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jax.Array, ids: jax.Array,
+                      weights: jax.Array) -> jax.Array:
+    """Weighted bag reduce: table (V, d), ids (B, m), weights (B, m).
+
+    Returns (B, d) fp32 = sum_j weights[b, j] * table[ids[b, j]].
+    (mean mode = weights 1/count; masked entries = weight 0).
+    """
+    rows = jnp.take(table, ids, axis=0).astype(jnp.float32)  # (B, m, d)
+    return jnp.einsum("bmd,bm->bd", rows, weights.astype(jnp.float32))

@@ -1,0 +1,101 @@
+"""Causal GQA flash-attention Pallas TPU kernel (prefill/training fwd).
+
+Grid: (B*H, n_q, n_kv) with the kv axis innermost. Online-softmax running
+stats (m, l, acc) live in VMEM scratch and persist across kv steps; fully
+masked kv blocks (block start beyond the causal frontier) skip all compute
+via ``pl.when``. KV blocks for GQA are selected by index_map arithmetic
+(kv head = q head // group), so kv tiles are DMA'd once per group.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *, bq, bk, n_kv,
+            scale):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    # causal frontier: kv block needed iff kj*bk <= qi*bq + bq - 1
+    @pl.when(kj * bk <= qi * bq + bq - 1)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(qpos >= kpos, s, NEG)
+
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, 1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_s[...] = l_s[...] * alpha + jnp.sum(p, 1, keepdims=True)
+        acc_s[...] = acc_s[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _done():
+        o_ref[0] = (acc_s[...] / l_s[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    bq: int = 512, bk: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q (B, S, H, D); k, v (B, S, K, D) -> (B, S, H, D)."""
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0
+    n_q, n_kv = S // bq, S // bk
+
+    # fold batch*head; kv folded to batch*kv_head
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * K, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * K, S, D)
+
+    def kv_index(bh, qi, kj):
+        b, h = bh // H, bh % H
+        return (b * K + h // G, kj, 0)
+
+    kern = functools.partial(_kernel, bq=bq, bk=bk, n_kv=n_kv,
+                             scale=D ** -0.5)
+    out = pl.pallas_call(
+        kern,
+        grid=(B * H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, D), kv_index),
+            pl.BlockSpec((1, bk, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)

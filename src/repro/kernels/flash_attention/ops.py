@@ -1,0 +1,24 @@
+"""Dispatching wrapper: Pallas flash attention on TPU, jnp blockwise off."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import kernel as _kernel
+from repro.models.attention import causal_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "force"))
+def attention(q, k, v, bq: int = 512, bk: int = 512,
+              force: str | None = None):
+    """Causal GQA attention. q (B,S,H,D); k,v (B,S,K,D) -> (B,S,H,D)."""
+    mode = force or ("pallas" if _on_tpu() else "jnp")
+    if mode == "jnp":
+        return causal_attention(q, k, v, chunk=bq)
+    return _kernel.flash_attention(q, k, v, bq=bq, bk=bk,
+                                   interpret=(mode == "interpret"))

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for causal GQA flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array):
+    """Naive causal GQA attention.
+
+    q (B, S, H, D); k, v (B, S, K, D); returns (B, S, H, D) fp32.
+    """
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.astype(jnp.float32).reshape(B, S, K, G, D)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32))
+    s = s * D ** -0.5
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D)

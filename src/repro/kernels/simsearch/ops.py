@@ -1,0 +1,48 @@
+"""Jitted public wrapper for simsearch: pads, dispatches kernel vs jnp."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.simsearch import kernel as _kernel
+from repro.kernels.simsearch.ref import simsearch_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile_n", "force"))
+def cosine_topk(queries: jax.Array, corpus: jax.Array, k: int = 1,
+                tile_n: int = 512, force: str | None = None):
+    """Cosine top-k with automatic backend dispatch.
+
+    force: None (auto) | 'pallas' | 'interpret' | 'jnp'.
+    Pads the corpus to a tile multiple; padded rows are masked out by
+    scoring them NEG (they can never enter the top-k).
+    """
+    mode = force or ("pallas" if _on_tpu() else "jnp")
+    if mode == "jnp":
+        return simsearch_ref(queries, corpus, k)
+
+    N, d = corpus.shape
+    pad = (-N) % tile_n
+    if pad:
+        # Padded rows are all-zero; give them a strongly negative first
+        # component so normalization keeps them, but real queries never
+        # select them: score of a zero row is 0/eps -> 0; instead we mask
+        # by index after the kernel.
+        corpus = jnp.pad(corpus, ((0, pad), (0, 0)))
+    vals, idx = _kernel.simsearch(queries, corpus, k=k, tile_n=tile_n,
+                                  interpret=(mode == "interpret"))
+    if pad:
+        bad = idx >= N
+        vals = jnp.where(bad, -jnp.inf, vals)
+        idx = jnp.where(bad, 0, idx)
+        # re-sort so masked entries sink to the tail
+        order = jnp.argsort(-vals, axis=1)
+        vals = jnp.take_along_axis(vals, order, axis=1)
+        idx = jnp.take_along_axis(idx, order, axis=1)
+    return vals, idx

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused simsearch kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def simsearch_ref(queries: jax.Array, corpus: jax.Array, k: int):
+    """Cosine-similarity top-k.
+
+    queries (B, d), corpus (N, d) — neither pre-normalized.
+    Returns (scores (B, k) fp32, idx (B, k) int32); ties broken by lowest
+    index (matching the kernel's min-index tie rule).
+    """
+    q = queries.astype(jnp.float32)
+    c = corpus.astype(jnp.float32)
+    q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+    c = c / jnp.maximum(jnp.linalg.norm(c, axis=-1, keepdims=True), 1e-9)
+    sims = q @ c.T
+    vals, idx = jax.lax.top_k(sims, k)
+    return vals, idx.astype(jnp.int32)

@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benches see the 1 real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips).
+
+    Axis semantics: 'pod' = pure data parallelism across DCN; 'data' =
+    in-pod data parallel / FSDP shard axis; 'model' = tensor/expert/
+    sequence parallel axis (ICI).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(n_devices: int | None = None):
+    """Tiny mesh over whatever devices exist (tests / examples)."""
+    n = n_devices or len(jax.devices())
+    model = 2 if n % 2 == 0 else 1
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """Mesh axes used for batch/data parallelism."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

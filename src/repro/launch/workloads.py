@@ -1,0 +1,389 @@
+"""Build (step_fn, abstract args, shardings) for every dry-run cell.
+
+A *workload* is the jit-able function + ShapeDtypeStruct stand-ins for all
+of its inputs (params, optimizer state, batch / cache) + matching
+NamedShardings, for one (architecture x input-shape x mesh) combination.
+Nothing here allocates device memory — everything is abstract until
+``.lower().compile()`` in dryrun.py.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch, get_shape
+from repro.configs.base import GNNConfig, LMConfig, RecSysConfig, ShapeSpec
+from repro.distributed import sharding as shd
+from repro.distributed.act_sharding import use_dp_axes
+from repro.launch.mesh import dp_axes
+from repro.models import gnn, recsys, transformer as tr
+from repro.training import optimizer as opt
+
+ADAMW = opt.AdamWConfig()
+
+
+@dataclass
+class Workload:
+    name: str
+    fn: Callable          # positional args
+    args: Tuple[Any, ...]  # ShapeDtypeStructs (pytrees)
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    # model-level useful flops (6ND etc.) for the roofline analysis
+    model_flops: float
+    arch: str
+    shape: str
+    # buffers consumed by the step (train: params+opt; decode: KV cache) —
+    # donation makes updates in-place, halving state traffic
+    donate_argnums: Tuple[int, ...] = ()
+    # per-device bytes saved for the backward pass per layer (remat carry);
+    # 0 for inference / loop-free workloads
+    residual_bytes_per_layer: float = 0.0
+    n_loop_layers: int = 0
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _shard_tree(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _params_abstract(init_fn):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(init_fn, key)
+
+
+def _opt_abstract(params_abs):
+    return jax.eval_shape(functools.partial(opt.init, cfg=ADAMW),
+                          params_abs)
+
+
+def _opt_specs(param_specs):
+    return {"mu": param_specs, "nu": param_specs, "master": param_specs,
+            "step": P()}
+
+
+# ---------------------------------------------------------------------------
+# LM workloads
+# ---------------------------------------------------------------------------
+
+def _lm_flops(cfg: LMConfig, shape: ShapeSpec) -> float:
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence + KV read has no flops
+    return 2.0 * n_active * shape.global_batch
+
+
+def build_lm(cfg: LMConfig, shape: ShapeSpec, mesh) -> Workload:
+    import os
+    if cfg.is_moe and os.environ.get("REPRO_MOE_DISPATCH"):
+        import dataclasses
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, dispatch=os.environ["REPRO_MOE_DISPATCH"]))
+    dp = dp_axes(mesh)
+    params_abs = _params_abstract(lambda k: tr.init_params(cfg, k))
+    p_specs = shd.lm_param_specs(cfg)
+    p_shard = _shard_tree(mesh, p_specs)
+    name = f"{cfg.name}:{shape.name}"
+    mflops = _lm_flops(cfg, shape)
+
+    if shape.kind == "train":
+        B, S = shape.global_batch, shape.seq_len
+        n_dp = 1
+        for a in dp:
+            n_dp *= mesh.shape[a]
+        # remat(nothing_saveable) saves only the layer input per layer;
+        # under sequence-parallel residuals it is sharded over 'model' too
+        carry = (B // n_dp) * S * cfg.d_model * jnp.dtype(cfg.dtype).itemsize
+        if cfg.seq_parallel and S % 16 == 0:
+            carry //= mesh.shape.get("model", 1)
+        batch = {"tokens": _sds((B, S), "int32"),
+                 "labels": _sds((B, S), "int32")}
+        b_shard = _shard_tree(mesh, {"tokens": P(dp, None),
+                                     "labels": P(dp, None)})
+        opt_abs = _opt_abstract(params_abs)
+        o_shard = _shard_tree(mesh, _opt_specs(p_specs))
+        step0 = opt.make_train_step(
+            lambda p, b: tr.train_loss(cfg, p, b), ADAMW)
+
+        def step(params, opt_state, b):
+            with use_dp_axes(dp, mesh=mesh):
+                return step0(params, opt_state, b)
+        metrics_shard = _shard_tree(mesh, {"loss": P(),
+                                           "grad_norm": P()})
+        return Workload(name, step, (params_abs, opt_abs, batch),
+                        (p_shard, o_shard, b_shard),
+                        (p_shard, o_shard, metrics_shard),
+                        mflops, cfg.name, shape.name,
+                        donate_argnums=(0, 1),
+                        residual_bytes_per_layer=float(carry),
+                        n_loop_layers=cfg.n_layers)
+
+    if shape.kind == "prefill":
+        B, S = shape.global_batch, shape.seq_len
+        tokens = _sds((B, S), "int32")
+        t_shard = _shard_tree(mesh, P(dp, None))
+        out_shard = (_shard_tree(mesh, P(dp, "model")),
+                     _shard_tree(mesh, shd.lm_cache_spec(mesh)))
+        fn = functools.partial(tr.prefill, cfg)
+
+        def prefill_fn(params, toks):
+            with use_dp_axes(dp, mesh=mesh):
+                return fn(params, toks)
+        return Workload(name, prefill_fn, (params_abs, tokens),
+                        (p_shard, t_shard), out_shard,
+                        mflops, cfg.name, shape.name)
+
+    if shape.kind == "decode":
+        B, S = shape.global_batch, shape.seq_len
+        cache = {
+            "k": _sds((cfg.n_layers, B, S, cfg.n_kv_heads, cfg.head_dim),
+                      cfg.dtype),
+            "v": _sds((cfg.n_layers, B, S, cfg.n_kv_heads, cfg.head_dim),
+                      cfg.dtype),
+            "length": _sds((B,), "int32"),
+        }
+        c_shard = _shard_tree(mesh, shd.lm_cache_spec(mesh))
+        token = _sds((B,), "int32")
+        tk_shard = _shard_tree(mesh, P(dp))
+        out_shard = (_shard_tree(mesh, P(dp, "model")), c_shard)
+
+        def decode_fn(params, cache, token):
+            with use_dp_axes(dp):
+                return tr.decode_step(cfg, params, cache, token)
+        return Workload(name, decode_fn, (params_abs, cache, token),
+                        (p_shard, c_shard, tk_shard), out_shard,
+                        mflops, cfg.name, shape.name,
+                        donate_argnums=(1,))
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# GNN workloads
+# ---------------------------------------------------------------------------
+
+def _pad_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def build_gnn(cfg: GNNConfig, shape: ShapeSpec, mesh) -> Workload:
+    dp = dp_axes(mesh)
+    n_dev = mesh.devices.size
+    name = f"{cfg.name}:{shape.name}"
+
+    if shape.kind in ("full_graph", "batched_graphs"):
+        d_feat = shape.d_feat
+    else:
+        d_feat = shape.d_feat or cfg.d_feat
+    params_abs = _params_abstract(
+        lambda k: gnn.init_params(cfg, k, d_feat=d_feat))
+    p_shard = _shard_tree(mesh, jax.tree.map(lambda _: P(), params_abs))
+    opt_abs = _opt_abstract(params_abs)
+    o_shard = _shard_tree(mesh, jax.tree.map(lambda _: P(), opt_abs))
+    metrics_shard = _shard_tree(mesh, {"loss": P(), "grad_norm": P()})
+
+    if shape.kind == "full_graph":
+        N, E = shape.n_nodes, _pad_to(shape.n_edges, n_dev)
+        batch = {"feats": _sds((N, d_feat), "float32"),
+                 "edges": _sds((E, 2), "int32"),
+                 "edge_mask": _sds((E,), "bool"),
+                 "labels": _sds((N,), "int32"),
+                 "label_mask": _sds((N,), "bool")}
+        b_spec = {"feats": P(None, None),
+                  "edges": P(tuple(mesh.axis_names), None),
+                  "edge_mask": P(tuple(mesh.axis_names)),
+                  "labels": P(None), "label_mask": P(None)}
+        loss = functools.partial(gnn.full_graph_loss, cfg)
+        # gradient flops ~ 3x fwd; fwd ~ 2*E*d_in (gather+scatter has no
+        # flops) + matmuls N*(d_in*d + d*d) per layer
+        fwd = 2 * N * (d_feat * cfg.d_hidden * 2) \
+            + 2 * N * (cfg.d_hidden * cfg.d_hidden * 2) * (cfg.n_layers - 1)
+        mflops = 3.0 * fwd
+    elif shape.kind == "minibatch":
+        B = shape.batch_nodes
+        f1, f2 = shape.fanout
+        batch = {"feat_l0": _sds((B, d_feat), "float32"),
+                 "feat_l1": _sds((B, f1, d_feat), "float32"),
+                 "feat_l2": _sds((B, f1, f2, d_feat), "float32"),
+                 "labels": _sds((B,), "int32")}
+        b_spec = {"feat_l0": P(dp, None), "feat_l1": P(dp, None, None),
+                  "feat_l2": P(dp, None, None, None), "labels": P(dp)}
+        loss = functools.partial(gnn.minibatch_loss, cfg)
+        n_vec = B * (1 + f1 + f1 * f2)
+        mflops = 3.0 * 2 * n_vec * d_feat * cfg.d_hidden * 2
+    else:  # batched_graphs
+        G, Ng, Eg = shape.global_batch, shape.n_nodes, shape.n_edges
+        batch = {"feats": _sds((G, Ng, d_feat), "float32"),
+                 "edges": _sds((G, Eg, 2), "int32"),
+                 "edge_mask": _sds((G, Eg), "bool"),
+                 "labels": _sds((G,), "int32")}
+        b_spec = {"feats": P(dp, None, None), "edges": P(dp, None, None),
+                  "edge_mask": P(dp, None), "labels": P(dp)}
+        loss = functools.partial(gnn.batched_graphs_loss, cfg)
+        mflops = 3.0 * 2 * G * Ng * (
+            d_feat * cfg.d_hidden * 2
+            + cfg.d_hidden * cfg.d_hidden * 2 * (cfg.n_layers - 1))
+
+    b_shard = _shard_tree(mesh, b_spec)
+    step = opt.make_train_step(loss, ADAMW)
+    return Workload(name, step, (params_abs, opt_abs, batch),
+                    (p_shard, o_shard, b_shard),
+                    (p_shard, o_shard, metrics_shard),
+                    mflops, cfg.name, shape.name,
+                    donate_argnums=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# RecSys workloads
+# ---------------------------------------------------------------------------
+
+SERVE_SLATE = {"sasrec": 100, "mind": 100, "bst": 1, "wide_deep": 1}
+
+
+def _recsys_batch(cfg: RecSysConfig, kind: str, B: int, n_cands: int):
+    mh = cfg.multi_hot
+    if cfg.kind == "wide_deep":
+        b = {"sparse_ids": _sds((B, cfg.n_sparse, mh), "int32"),
+             "sparse_mask": _sds((B, cfg.n_sparse, mh), "bool")}
+    else:
+        b = {"seq": _sds((B, cfg.seq_len), "int32")}
+    if kind == "train":
+        if cfg.kind == "sasrec":
+            b.update({"pos": _sds((B, cfg.seq_len), "int32"),
+                      "neg": _sds((B, cfg.seq_len), "int32")})
+        elif cfg.kind == "mind":
+            b.update({"pos": _sds((B,), "int32"),
+                      "neg": _sds((B, 16), "int32")})
+        elif cfg.kind == "bst":
+            b.update({"target": _sds((B,), "int32"),
+                      "label": _sds((B,), "float32")})
+        else:
+            b["label"] = _sds((B,), "float32")
+    elif kind == "serve":
+        slate = SERVE_SLATE[cfg.kind]
+        if cfg.kind != "wide_deep":
+            b["cands"] = _sds((B, slate), "int32")
+    else:  # retrieval
+        b["cand_ids"] = _sds((n_cands,), "int32")
+    return b
+
+
+def _recsys_flops(cfg: RecSysConfig, shape: ShapeSpec) -> float:
+    d = cfg.embed_dim
+    if cfg.kind in ("sasrec", "mind", "bst"):
+        S = cfg.seq_len + (1 if cfg.kind == "bst" else 0)
+        blocks = max(cfg.n_blocks, 1)
+        per_ex = blocks * (8 * S * d * d + 4 * S * S * d) \
+            + sum(a * b * 2 for a, b in zip(
+                ((cfg.seq_len + 1) * d,) + tuple(cfg.mlp_dims),
+                tuple(cfg.mlp_dims) + (1,))) * (cfg.kind == "bst")
+        if cfg.kind == "mind":
+            per_ex = cfg.capsule_iters * 4 * S * cfg.n_interests * d \
+                + 2 * S * d * d
+    else:
+        dims = (cfg.n_sparse * d,) + tuple(cfg.mlp_dims) + (1,)
+        per_ex = sum(a * b * 2 for a, b in zip(dims[:-1], dims[1:]))
+    if shape.kind == "train":
+        return 3.0 * per_ex * shape.global_batch
+    if shape.kind == "serve":
+        slate = SERVE_SLATE[cfg.kind]
+        mult = slate if cfg.kind == "bst" else 1
+        return per_ex * shape.global_batch * mult
+    # retrieval: encode once + dot against all candidates
+    return per_ex + 2.0 * shape.n_candidates * cfg.embed_dim
+
+
+def build_recsys(cfg: RecSysConfig, shape: ShapeSpec, mesh) -> Workload:
+    name = f"{cfg.name}:{shape.name}"
+    params_abs = _params_abstract(lambda k: recsys.init_params(cfg, k))
+    p_specs = shd.recsys_param_specs(cfg, params_abs)
+    p_shard = _shard_tree(mesh, p_specs)
+    mflops = _recsys_flops(cfg, shape)
+
+    batch = _recsys_batch(cfg, shape.kind, shape.global_batch,
+                          shape.n_candidates)
+    b_spec = shd.recsys_batch_spec(mesh, cfg, shape.kind)
+    b_spec = {k: b_spec[k] for k in batch}  # align key sets
+    b_shard = _shard_tree(mesh, b_spec)
+
+    if shape.kind == "train":
+        opt_abs = _opt_abstract(params_abs)
+        o_shard = _shard_tree(mesh, _opt_specs(p_specs))
+        step = opt.make_train_step(
+            lambda p, b: recsys.train_loss(cfg, p, b), ADAMW)
+        metrics_shard = _shard_tree(mesh, {"loss": P(), "grad_norm": P()})
+        return Workload(name, step, (params_abs, opt_abs, batch),
+                        (p_shard, o_shard, b_shard),
+                        (p_shard, o_shard, metrics_shard),
+                        mflops, cfg.name, shape.name,
+                        donate_argnums=(0, 1))
+
+    if shape.kind == "serve":
+        dp = dp_axes(mesh)
+
+        def serve_fn(params, b):
+            return recsys.serve_scores(cfg, params, b)
+        out_shard = _shard_tree(mesh, P(dp, None))
+        return Workload(name, serve_fn, (params_abs, batch),
+                        (p_shard, b_shard), out_shard,
+                        mflops, cfg.name, shape.name)
+
+    # retrieval — shard_map per-shard top-k + merge by default; set
+    # REPRO_SHARDED_RETRIEVAL=0 for the auto-GSPMD baseline (§Perf A/B)
+    import os
+    use_sharded = os.environ.get("REPRO_SHARDED_RETRIEVAL", "1") == "1" \
+        and "model" in mesh.axis_names \
+        and shape.n_candidates % mesh.shape["model"] == 0
+
+    def retr_fn(params, b):
+        if use_sharded:
+            return recsys.retrieval_sharded(cfg, params, b, mesh, k=100)
+        return recsys.retrieval(cfg, params, b, k=100)
+    out_shard = _shard_tree(mesh, (P(None, None), P(None, None)))
+    return Workload(name, retr_fn, (params_abs, batch),
+                    (p_shard, b_shard), out_shard,
+                    mflops, cfg.name, shape.name)
+
+
+# ---------------------------------------------------------------------------
+# entry
+# ---------------------------------------------------------------------------
+
+def build_workload(arch_id: str, shape_name: str, mesh,
+                   n_layers_override: int | None = None,
+                   unroll: bool = False) -> Workload:
+    """``n_layers_override``/``unroll`` build the loop-free analysis
+    variants used to correct XLA's while-loop cost undercount (the
+    two-point extrapolation in dryrun.py / analysis.roofline)."""
+    import dataclasses
+    cfg = get_arch(arch_id)
+    shape = get_shape(cfg, shape_name)
+    if isinstance(cfg, LMConfig):
+        if n_layers_override is not None or unroll:
+            # larger attention chunks in the unrolled variants: identical
+            # FLOPs/bytes math, ~4x fewer blocks -> tractable compiles
+            chunk = max(cfg.attn_chunk,
+                        shape.seq_len // 16 if shape.seq_len else 0)
+            cfg = dataclasses.replace(
+                cfg, n_layers=n_layers_override or cfg.n_layers,
+                scan_layers=not unroll, attn_chunk=chunk)
+        return build_lm(cfg, shape, mesh)
+    if isinstance(cfg, GNNConfig):
+        return build_gnn(cfg, shape, mesh)
+    if isinstance(cfg, RecSysConfig):
+        return build_recsys(cfg, shape, mesh)
+    raise TypeError(type(cfg))

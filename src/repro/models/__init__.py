@@ -1,0 +1,3 @@
+from repro.models import attention, gnn, layers, moe, recsys, transformer
+
+__all__ = ["attention", "gnn", "layers", "moe", "recsys", "transformer"]

@@ -1,0 +1,185 @@
+"""Pure-JAX attention with flash-like memory behavior.
+
+Two entry points:
+
+- :func:`causal_attention` — training/prefill. Blockwise online-softmax over
+  a *triangular* block schedule: the (q-chunk, kv-chunk) pairs with
+  kv <= q are flattened into one ``lax.scan``, so no FLOPs are spent on the
+  fully-masked upper triangle and no (S, S) score matrix is ever
+  materialized. This is the jnp twin of ``kernels/flash_attention``; on TPU
+  the Pallas kernel takes over (see kernels/flash_attention/ops.py).
+
+- :func:`decode_attention` — one new token against a long KV cache. Scores
+  are O(S) per token, computed directly; sequence-sharded KV works through
+  GSPMD reduction propagation (flash-decoding-style split-K merge).
+
+Shapes use GQA layout throughout: q (B, S, H, D), k/v (B, S, K, D) with
+H = K * G query heads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _block_pairs(n_chunks: int):
+    """Static lower-triangular (q_chunk, kv_chunk) schedule."""
+    qi, kj = [], []
+    for i in range(n_chunks):
+        for j in range(i + 1):
+            qi.append(i)
+            kj.append(j)
+    return jnp.asarray(qi, jnp.int32), jnp.asarray(kj, jnp.int32)
+
+
+def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     chunk: int = 1024, unroll: bool = False) -> jax.Array:
+    """Exact causal GQA attention, O(S * chunk) memory, no masked-block waste.
+
+    q: (B, S, H, D); k, v: (B, S, K, D). Returns (B, S, H, D) in q.dtype.
+    """
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    chunk = min(chunk, S)
+    if S % chunk:
+        import math
+        chunk = math.gcd(S, chunk)
+        if chunk < 8:           # degenerate: single block
+            chunk = S
+    n = S // chunk
+    scale = D ** -0.5
+
+    # (n, B, C, K, G, D) query chunks; (n, B, C, K, D) kv chunks
+    qc = q.reshape(B, n, chunk, K, G, D).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(B, n, chunk, K, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n, chunk, K, D).transpose(1, 0, 2, 3, 4)
+
+    qi, kj = _block_pairs(n)
+    # Running stats per query chunk: m (max), l (denominator), o (numerator).
+    m0 = jnp.full((n, B, chunk, K, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((n, B, chunk, K, G), jnp.float32)
+    o0 = jnp.zeros((n, B, chunk, K, G, D), jnp.float32)
+
+    rel = jnp.arange(chunk)
+
+    def body(carry, ij):
+        m, l, o = carry
+        i, j = ij
+        qb = jax.lax.dynamic_index_in_dim(qc, i, 0, keepdims=False)
+        kb = jax.lax.dynamic_index_in_dim(kc, j, 0, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vc, j, 0, keepdims=False)
+        # scores: (B, C, K, G, Ck)
+        s = jnp.einsum("bckgd,bxkd->bckgx", qb, kb,
+                       preferred_element_type=jnp.float32) * scale
+        # Causal mask only matters on diagonal blocks (j == i): global
+        # positions i*chunk + rel_q >= j*chunk + rel_k.
+        qpos = i * chunk + rel
+        kpos = j * chunk + rel
+        mask = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+
+        mi = jax.lax.dynamic_index_in_dim(m, i, 0, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, i, 0, keepdims=False)
+        oi = jax.lax.dynamic_index_in_dim(o, i, 0, keepdims=False)
+
+        m_new = jnp.maximum(mi, s.max(axis=-1))
+        alpha = jnp.exp(mi - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = li * alpha + p.sum(axis=-1)
+        o_new = oi * alpha[..., None] + jnp.einsum(
+            "bckgx,bxkd->bckgd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, 0)
+        o = jax.lax.dynamic_update_index_in_dim(o, o_new, i, 0)
+        return (m, l, o), None
+
+    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0), (qi, kj),
+                                unroll=len(qi) if unroll else 1)
+    out = o / l[..., None]
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, D)
+    return out.astype(q.dtype)
+
+
+def causal_attention_masked(q: jax.Array, k: jax.Array, v: jax.Array,
+                            chunk: int = 1024) -> jax.Array:
+    """Reference variant: rectangular block schedule with masking.
+
+    Computes the full n_q x n_kv block grid (2x the FLOPs of
+    :func:`causal_attention` at long S). Kept for A/B roofline comparison
+    (§Perf) and as a cross-check oracle in tests.
+    """
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    chunk = min(chunk, S)
+    n = S // chunk
+    scale = D ** -0.5
+
+    qc = q.reshape(B, n, chunk, K, G, D).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(B, n, chunk, K, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n, chunk, K, D).transpose(1, 0, 2, 3, 4)
+    rel = jnp.arange(chunk)
+
+    def outer(qb_i):
+        qb, i = qb_i
+
+        def inner(carry, kb_vb_j):
+            m, l, o = carry
+            kb, vb, j = kb_vb_j
+            s = jnp.einsum("bckgd,bxkd->bckgx", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = (i * chunk + rel)[:, None] >= (j * chunk + rel)[None, :]
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            o_new = o * alpha[..., None] + jnp.einsum(
+                "bckgx,bxkd->bckgd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, chunk, K, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, chunk, K, G), jnp.float32)
+        o0 = jnp.zeros((B, chunk, K, G, D), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(
+            inner, (m0, l0, o0), (kc, vc, jnp.arange(n)))
+        return o / l[..., None]
+
+    out = jax.lax.map(outer, (qc, jnp.arange(n)))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, D)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array) -> jax.Array:
+    """One-step GQA decode: q (B, 1, H, D) vs caches (B, S, K, D).
+
+    ``length`` (scalar or (B,)) marks the number of valid cache positions
+    (entries at index >= length are masked). Softmax statistics reduce over
+    the cache axis, so a sequence-sharded cache lowers to a split-K
+    (flash-decoding) schedule under GSPMD.
+    """
+    B, _, H, D = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    scale = D ** -0.5
+    qg = q.reshape(B, K, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(k_cache.shape[1])
+    valid = pos[None, :] < jnp.reshape(length, (-1, 1))  # (B, S)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bkgs,bskd->bkgd", (p / l).astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, D).astype(q.dtype)

@@ -1,0 +1,171 @@
+"""GraphSAGE in JAX with segment-sum message passing.
+
+Three compute regimes (matching the assigned shape set):
+
+- full-graph:     edge-index scatter aggregation over the whole graph
+                  (full_graph_sm / ogb_products)
+- minibatch:      sampled neighborhoods from the host-side neighbor sampler
+                  (minibatch_lg, fanout e.g. 15-10) — dense gathered tensors
+- batched graphs: many small padded graphs (molecule)
+
+JAX has no CSR SpMM; message passing is gather(src) -> segment_sum(dst),
+which IS the system per the brief (see kernel_taxonomy §GNN).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+
+def init_params(cfg: GNNConfig, key: jax.Array, d_feat: int | None = None
+                ) -> Params:
+    """Weights for n_layers SAGE layers + linear classifier head."""
+    d_in = d_feat if d_feat is not None else cfg.d_feat
+    dtype = jnp.dtype(cfg.dtype)
+    params: Params = {"layers": []}
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    for i in range(cfg.n_layers):
+        d_out = cfg.d_hidden
+        k1, k2, k3 = jax.random.split(keys[i], 3)
+        params["layers"].append({
+            "w_self": dense_init(k1, (d_in, d_out), dtype),
+            "w_neigh": dense_init(k2, (d_in, d_out), dtype),
+            "bias": jnp.zeros((d_out,), dtype),
+        })
+        d_in = d_out
+    params["head"] = dense_init(keys[-1], (cfg.d_hidden, cfg.n_classes),
+                                dtype)
+    return params
+
+
+def _aggregate(cfg: GNNConfig, feats: jax.Array, src: jax.Array,
+               dst: jax.Array, n_nodes: int) -> jax.Array:
+    """Aggregate neighbor features along edges (src -> dst)."""
+    msgs = feats[src]                                   # gather (E, F)
+    if cfg.aggregator == "mean":
+        summed = jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)
+        deg = jax.ops.segment_sum(jnp.ones_like(dst, feats.dtype), dst,
+                                  num_segments=n_nodes)
+        return summed / jnp.maximum(deg, 1.0)[:, None]
+    if cfg.aggregator == "sum":
+        return jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)
+    if cfg.aggregator == "max":
+        return jax.ops.segment_max(msgs, dst, num_segments=n_nodes)
+    raise ValueError(cfg.aggregator)
+
+
+def _sage_layer(cfg: GNNConfig, p: Params, h_self: jax.Array,
+                h_agg: jax.Array, last: bool) -> jax.Array:
+    out = h_self @ p["w_self"] + h_agg @ p["w_neigh"] + p["bias"]
+    if not last:
+        out = jax.nn.relu(out)
+        # L2-normalize, as in the GraphSAGE paper (Alg. 1 line 7)
+        out = out / jnp.maximum(
+            jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-6)
+    return out
+
+
+def full_graph_forward(cfg: GNNConfig, params: Params, feats: jax.Array,
+                       edges: jax.Array,
+                       edge_mask: jax.Array | None = None) -> jax.Array:
+    """feats (N, F), edges (E, 2) int32 [src, dst] -> logits (N, classes).
+
+    ``edge_mask`` marks valid rows (edges are padded to a multiple of the
+    device count for sharding); masked edges route to a trash segment.
+    """
+    n = feats.shape[0]
+    h = feats
+    if edge_mask is None:
+        src, dst = edges[:, 0], edges[:, 1]
+        segs = n
+    else:
+        src = jnp.where(edge_mask, edges[:, 0], n)
+        dst = jnp.where(edge_mask, edges[:, 1], n)
+        segs = n + 1
+    for i, p in enumerate(params["layers"]):
+        if edge_mask is None:
+            agg = _aggregate(cfg, h, src, dst, segs)
+        else:
+            hp = jnp.concatenate([h, jnp.zeros((1, h.shape[1]), h.dtype)])
+            agg = _aggregate(cfg, hp, src, dst, segs)[:n]
+        h = _sage_layer(cfg, p, h, agg, last=False)
+    return h @ params["head"]
+
+
+def minibatch_forward(cfg: GNNConfig, params: Params,
+                      feat_levels: list[jax.Array]) -> jax.Array:
+    """Sampled-neighborhood forward (GraphSAGE Algorithm 2).
+
+    feat_levels[l]: features of nodes at sampling depth l, shape
+    (B, f_1, ..., f_l, F): level 0 = the batch targets, level l>0 = their
+    sampled neighbors (from the host neighbor sampler). The fanout mean is
+    the dense analogue of the segment mean for a fixed fanout.
+    """
+    h = list(feat_levels)
+    n_layers = len(params["layers"])
+    for li, p in enumerate(params["layers"]):
+        nxt = []
+        for depth in range(n_layers - li):
+            agg = h[depth + 1].mean(axis=-2)            # mean over fanout
+            nxt.append(_sage_layer(cfg, p, h[depth], agg, last=False))
+        h = nxt
+    return h[0] @ params["head"]
+
+
+def batched_graphs_forward(cfg: GNNConfig, params: Params, feats: jax.Array,
+                           edges: jax.Array, edge_mask: jax.Array
+                           ) -> jax.Array:
+    """Padded small-graph batch. feats (G, N, F), edges (G, E, 2),
+    edge_mask (G, E) bool. Returns per-graph logits (G, classes)."""
+    def one(f, e, m):
+        n = f.shape[0]
+        src = jnp.where(m, e[:, 0], n)                  # n = trash segment
+        dst = jnp.where(m, e[:, 1], n)
+        h = f
+        for p in params["layers"]:
+            msgs = jnp.concatenate([h, jnp.zeros((1, h.shape[1]), h.dtype)])
+            agg_sum = jax.ops.segment_sum(msgs[src], dst, num_segments=n + 1)
+            deg = jax.ops.segment_sum(m.astype(h.dtype), dst,
+                                      num_segments=n + 1)
+            agg = (agg_sum / jnp.maximum(deg, 1.0)[:, None])[:n]
+            h = _sage_layer(cfg, p, h, agg, last=False)
+        return h.mean(axis=0) @ params["head"]          # mean readout
+    return jax.vmap(one)(feats, edges, edge_mask)
+
+
+# ---------------------------------------------------------------------------
+# losses / steps
+# ---------------------------------------------------------------------------
+
+def _xent(logits: jax.Array, labels: jax.Array, mask=None) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+def full_graph_loss(cfg: GNNConfig, params: Params, batch) -> jax.Array:
+    logits = full_graph_forward(cfg, params, batch["feats"], batch["edges"],
+                                batch.get("edge_mask"))
+    return _xent(logits, batch["labels"], batch.get("label_mask"))
+
+
+def minibatch_loss(cfg: GNNConfig, params: Params, batch) -> jax.Array:
+    levels = [batch[f"feat_l{i}"] for i in range(cfg.n_layers + 1)]
+    logits = minibatch_forward(cfg, params, levels)
+    return _xent(logits, batch["labels"])
+
+
+def batched_graphs_loss(cfg: GNNConfig, params: Params, batch) -> jax.Array:
+    logits = batched_graphs_forward(cfg, params, batch["feats"],
+                                    batch["edges"], batch["edge_mask"])
+    return _xent(logits, batch["labels"])

@@ -1,0 +1,66 @@
+"""Shared transformer building blocks: RMSNorm, RoPE, SwiGLU, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm in fp32, cast back to input dtype."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dtype)
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int,
+                 theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for rotary embeddings.
+
+    positions: int array of any shape P; returns (P..., head_dim/2) fp32.
+    """
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate-half RoPE. x: (..., n_heads, head_dim); cos/sin broadcastable
+    to (..., head_dim/2) over the position axes (head axis is inserted)."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    c = cos[..., None, :]  # broadcast over head axis
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    """SwiGLU FFN: (x @ Wg).silu * (x @ Wu) @ Wd.
+
+    silu runs in the compute dtype (bf16): upcasting to fp32 here forces
+    fp32 partial-sum all-reduces under TP sharding, doubling the dominant
+    collective bytes (measured, §Perf) for no training-quality gain.
+    """
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def dense_init(key: jax.Array, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    if scale is None:
+        scale = fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape, dtype):
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)
+            ).astype(dtype)

@@ -1,0 +1,281 @@
+"""Mixture-of-experts FFN with sort-based capacity dispatch.
+
+Baseline dispatch is **sort-based** (MegaBlocks/GShard hybrid): token→expert
+assignments are argsorted by expert id, scattered into a bounded (E, C, d)
+buffer (capacity-factor drops on overflow), run through batched per-expert
+SwiGLU matmuls, and gathered back with router-weight combine. This never
+materializes the (tokens, E, C) one-hot dispatch tensor of the original
+GShard einsum formulation (which is ~TB-scale at our token counts).
+
+An einsum-dispatch variant is kept for small problems / cross-checking, and
+an EP (expert-parallel, all_to_all) layout is exercised as a §Perf variant
+for architectures whose expert count divides the model axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import swiglu
+
+
+def router_topk(x: jax.Array, w_router: jax.Array, top_k: int):
+    """Softmax router. x: (T, d), w_router: (d, E).
+
+    Returns (expert_idx (T, k) int32, weights (T, k) fp32, probs (T, E)).
+    Router math in fp32 (standard practice for stability).
+    """
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.clip(weights.sum(-1, keepdims=True), 1e-9)
+    return idx.astype(jnp.int32), weights, probs
+
+
+def load_balance_loss(probs: jax.Array, idx: jax.Array, n_experts: int):
+    """Switch-style auxiliary load-balancing loss."""
+    me = probs.mean(axis=0)                                   # (E,)
+    assign = jax.nn.one_hot(idx[:, 0], n_experts, dtype=jnp.float32)
+    ce = assign.mean(axis=0)                                  # (E,)
+    return n_experts * jnp.sum(me * ce)
+
+
+def capacity(n_tokens: int, top_k: int, n_experts: int, factor: float) -> int:
+    c = int(n_tokens * top_k * factor / n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def _pad_experts(w: jax.Array, e_pad: int) -> jax.Array:
+    """Pad the expert axis with zero experts (for EP divisibility)."""
+    if e_pad == 0:
+        return w
+    pad = [(0, e_pad)] + [(0, 0)] * (w.ndim - 1)
+    return jnp.pad(w, pad)
+
+
+def _moe_ffn_sort_group(x: jax.Array, params: dict, cfg: MoEConfig,
+                        C: int):
+    """Sort-based dispatch MoE for ONE capacity group. x: (T, d) -> (T, d).
+
+    params: router (d, E); wg/wu (E, d, F); wd (E, F, d);
+            optional shared_{wg,wu,wd} dense SwiGLU weights.
+    """
+    T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+
+    idx, weights, probs = router_topk(x, params["router"], k)
+    aux = load_balance_loss(probs, idx, E)
+
+    flat_e = idx.reshape(-1)                       # (T*k,) expert of each slot
+    order = jnp.argsort(flat_e)                    # stable sort by expert
+    sorted_e = flat_e[order]
+    # Position of each sorted slot within its expert's contiguous run.
+    first = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos_in_e = jnp.arange(T * k) - first[sorted_e]
+    keep = pos_in_e < C                            # capacity drop
+    dest = jnp.where(keep, sorted_e * C + pos_in_e, E * C)  # E*C = trash row
+
+    token_of_slot = order // k                     # which token fed this slot
+    buf = jnp.zeros((E * C + 1, d), x.dtype)
+    buf = buf.at[dest].set(x[token_of_slot], mode="drop",
+                           unique_indices=False)
+    buf = buf[:E * C].reshape(E, C, d)
+
+    # Batched per-expert SwiGLU.
+    g = jnp.einsum("ecd,edf->ecf", buf, params["wg"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["wu"])
+    h = jax.nn.silu(g) * u      # bf16 silu: avoids fp32 TP partials
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["wd"]).reshape(E * C, d)
+
+    # Gather back: slot s (unsorted order) lives at dest[inv_order[s]].
+    inv = jnp.argsort(order)
+    slot_dest = jnp.where(keep[inv], dest[inv], E * C)       # (T*k,)
+    gathered = jnp.concatenate([out_buf, jnp.zeros((1, d), x.dtype)], 0)
+    y = gathered[slot_dest].reshape(T, k, d)
+    # combine in the compute dtype: an fp32 combine here propagates fp32
+    # cotangents through the whole dispatch, doubling every MoE
+    # collective payload (measured, §Perf)
+    y = jnp.einsum("tkd,tk->td", y, weights.astype(x.dtype))
+    return y, aux
+
+
+def moe_ffn_sort(x: jax.Array, params: dict, cfg: MoEConfig):
+    """Group-local sort dispatch. x: (T, d) -> ((T, d), aux).
+
+    Tokens are reshaped into ``n_groups`` capacity groups and the per-group
+    dispatch is vmapped, so the argsort/scatter stay *local to the data
+    shard* under GSPMD (the group axis is sharded on 'data'; the sort axis
+    is unsharded). This is the GShard "group" semantics realized without
+    the dense one-hot dispatch tensor.
+
+    NOTE on partitioning (§Perf log): two attempts to reshard the dispatch
+    buffers expert-parallel inside the GSPMD partitioner (constraint pairs
+    around the scatter/gather) REGRESSED 8.5s -> 58s / 19s because GSPMD
+    cannot partition data-dependent scatters along the scattered dim and
+    replicates instead; the production EP path needs an explicit shard_map
+    block (future work, documented in EXPERIMENTS.md).
+    """
+    from repro.distributed.act_sharding import constrain_spec
+    T, d = x.shape
+    g = min(cfg.n_groups, T)
+    while T % g:
+        g //= 2
+    Tg = T // g
+    C = capacity(Tg, cfg.top_k, cfg.n_experts, cfg.capacity_factor)
+    xg = constrain_spec(x.reshape(g, Tg, d), ("dp", None, None))
+    y, aux = jax.vmap(
+        lambda xi: _moe_ffn_sort_group(xi, params, cfg, C))(xg)
+    y = constrain_spec(y, ("dp", None, None)).reshape(T, d)
+    if "shared_wg" in params:
+        y = y + _shared_expert_dp(x, params)
+    return y, aux.mean()
+
+
+def _shared_expert_dp(x: jax.Array, params: dict) -> jax.Array:
+    """Shared-expert SwiGLU with DP-pinned intermediates (forces the
+    partitioner to gather the small shared weights instead of
+    all-reducing activation-sized partials)."""
+    from repro.distributed.act_sharding import constrain_spec
+    g = constrain_spec(
+        jnp.einsum("td,df->tf", x, params["shared_wg"]), ("dp", None))
+    u = constrain_spec(
+        jnp.einsum("td,df->tf", x, params["shared_wu"]), ("dp", None))
+    h = jax.nn.silu(g) * u
+    return constrain_spec(
+        jnp.einsum("tf,fd->td", h, params["shared_wd"]), ("dp", None))
+
+
+def moe_ffn_einsum(x: jax.Array, params: dict, cfg: MoEConfig):
+    """GShard one-hot einsum dispatch (small-T cross-check / decode path)."""
+    T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = capacity(T, k, E, cfg.capacity_factor)
+    idx, weights, probs = router_topk(x, params["router"], k)
+    aux = load_balance_loss(probs, idx, E)
+
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)         # (T, k, E)
+    flat_oh = onehot.reshape(T * k, E)
+    flat_pos = jnp.cumsum(flat_oh, axis=0) - flat_oh           # pos within e
+    pos = jnp.einsum("se,se->s", flat_pos, flat_oh).reshape(T, k)
+    in_cap = pos < C
+    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * in_cap[..., None]
+    dispatch = jnp.einsum("tke,tkc->tec", onehot, pos_oh)      # (T, E, C)
+    combine = jnp.einsum("tec,tk,tke->tec", dispatch, weights, onehot)
+
+    buf = jnp.einsum("tec,td->ecd", dispatch.astype(x.dtype), x)
+    g = jnp.einsum("ecd,edf->ecf", buf, params["wg"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["wu"])
+    h = jax.nn.silu(g) * u      # bf16 silu: avoids fp32 TP partials
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["wd"])
+    y = jnp.einsum("tec,ecd->td", combine.astype(x.dtype), out_buf)
+
+    if "shared_wg" in params:
+        y = y + swiglu(x, params["shared_wg"], params["shared_wu"],
+                       params["shared_wd"])
+    return y, aux
+
+
+def moe_ffn(x: jax.Array, params: dict, cfg: MoEConfig):
+    if cfg.dispatch == "einsum":
+        return moe_ffn_einsum(x, params, cfg)
+    return moe_ffn_sort(x, params, cfg)
+
+
+# ---------------------------------------------------------------------------
+# expert parallelism via shard_map (opt-in: MoEConfig.dispatch="ep")
+# ---------------------------------------------------------------------------
+
+def moe_ffn_ep(x: jax.Array, params: dict, cfg: MoEConfig, mesh):
+    """True expert parallelism: tokens all-to-all to expert owners.
+
+    Per-device flow (device = (data_i, model_j); tokens sharded over BOTH
+    axes, experts padded to a multiple of the 'model' axis and owned
+    model_j -> experts [j*Eloc, (j+1)*Eloc)):
+      1. local router + sort + capacity -> (Ep, C_loc, d) send buffer
+      2. all_to_all over 'model': expert slabs to their owners
+      3. local expert GEMMs (E_loc experts per device)
+      4. all_to_all back + local combine
+    Interconnect carries the TOKEN flow (~C_loc*d per hop) instead of
+    activation-partial all-reduces — the fix GSPMD could not express
+    (EXPERIMENTS.md §Perf Cell C).
+    """
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.act_sharding import dp_axes_active
+
+    T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    n_model = mesh.shape["model"]
+    Ep = -(-E // n_model) * n_model
+    E_loc = Ep // n_model
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    n_tok_shards = 1
+    for a in dp:
+        n_tok_shards *= mesh.shape[a]
+    n_tok_shards *= n_model
+    T_loc = T // n_tok_shards
+    C = capacity(T_loc, k, E, cfg.capacity_factor)
+
+    wg = _pad_experts(params["wg"], Ep - E)
+    wu = _pad_experts(params["wu"], Ep - E)
+    wd = _pad_experts(params["wd"], Ep - E)
+
+    def local(x_loc, router, wg_l, wu_l, wd_l):
+        x_loc = x_loc.reshape(T_loc, d)
+        idx, weights, probs = router_topk(x_loc, router, k)
+        aux = load_balance_loss(probs, idx, E)
+
+        flat_e = idx.reshape(-1)
+        order = jnp.argsort(flat_e)
+        sorted_e = flat_e[order]
+        first = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+        pos = jnp.arange(T_loc * k) - first[sorted_e]
+        keep = pos < C
+        dest = jnp.where(keep, sorted_e * C + pos, Ep * C)
+        tok = order // k
+        send = jnp.zeros((Ep * C + 1, d), x_loc.dtype)
+        send = send.at[dest].set(x_loc[tok])[:Ep * C]
+        send = send.reshape(n_model, E_loc * C, d)
+
+        # exchange expert slabs with their owners
+        recv = jax.lax.all_to_all(send, "model", split_axis=0,
+                                  concat_axis=0, tiled=False)
+        # recv: (n_model, E_loc*C, d) — slabs from every sender
+        recv = recv.reshape(n_model, E_loc, C, d).transpose(1, 0, 2, 3)
+        buf = recv.reshape(E_loc, n_model * C, d)
+
+        g = jnp.einsum("ecd,edf->ecf", buf, wg_l)
+        u = jnp.einsum("ecd,edf->ecf", buf, wu_l)
+        h = jax.nn.silu(g) * u
+        out = jnp.einsum("ecf,efd->ecd", h, wd_l)
+
+        out = out.reshape(E_loc, n_model, C, d).transpose(1, 0, 2, 3)
+        back = jax.lax.all_to_all(
+            out.reshape(n_model, E_loc * C, d), "model",
+            split_axis=0, concat_axis=0, tiled=False)
+        back = back.reshape(Ep * C, d)
+        back = jnp.concatenate([back, jnp.zeros((1, d), x_loc.dtype)], 0)
+
+        inv = jnp.argsort(order)
+        slot = jnp.where(keep[inv], dest[inv], Ep * C)
+        y = back[slot].reshape(T_loc, k, d)
+        y = jnp.einsum("tkd,tk->td", y, weights.astype(x_loc.dtype))
+        aux = jax.lax.pmean(aux, "model")
+        for a in dp:
+            aux = jax.lax.pmean(aux, a)
+        return y, aux
+
+    tok_axes = dp + ("model",)
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(tok_axes, None), P(None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=(P(tok_axes, None), P()),
+        check_vma=False)
+    y, aux = fn(x, params["router"], wg, wu, wd)
+    if "shared_wg" in params:
+        y = y + _shared_expert_dp(x, params)
+    return y, aux

@@ -1,0 +1,420 @@
+"""RecSys models: SASRec, MIND, BST, Wide&Deep — plus EmbeddingBag.
+
+JAX has no native EmbeddingBag or CSR sparse; per the brief, the embedding
+bag is built from ``jnp.take`` + ``jax.ops.segment_sum`` (ragged path) and a
+fixed-multi-hot masked-mean fast path (the common production case). Huge
+tables are row-sharded over the 'model' mesh axis by the sharding rules in
+``repro.distributed.sharding``.
+
+Every model exposes:
+    init_params(cfg, key)
+    train_loss(cfg, params, batch)       # 'train_batch' shape
+    serve_scores(cfg, params, batch)     # 'serve_p99' / 'serve_bulk'
+    user_repr(cfg, params, batch)        # query-side tower
+    retrieval(cfg, params, batch, k)     # 'retrieval_cand': 1 query vs 1M
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecSysConfig
+from repro.models.layers import dense_init, embed_init, rms_norm
+from repro.models.attention import causal_attention
+
+Params = Dict[str, Any]
+
+
+def _table_rows(n: int, mult: int = 2048) -> int:
+    """Round table rows up so row-sharding divides any mesh axis."""
+    return -(-n // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag
+# ---------------------------------------------------------------------------
+
+def embedding_bag_ragged(table: jax.Array, ids: jax.Array,
+                         segment_ids: jax.Array, n_bags: int,
+                         mode: str = "mean") -> jax.Array:
+    """Ragged EmbeddingBag: take + segment_sum.
+
+    table (V, d); ids (T,) row indices; segment_ids (T,) sorted bag index.
+    """
+    rows = jnp.take(table, ids, axis=0)                 # (T, d)
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+        cnt = jax.ops.segment_sum(jnp.ones_like(ids, table.dtype),
+                                  segment_ids, num_segments=n_bags)
+        return s / jnp.maximum(cnt, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, segment_ids, num_segments=n_bags)
+    raise ValueError(mode)
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array,
+                  mask: jax.Array | None = None,
+                  mode: str = "mean") -> jax.Array:
+    """Fixed-shape EmbeddingBag: ids (..., m) -> (..., d), masked reduce."""
+    rows = jnp.take(table, ids, axis=0)                 # (..., m, d)
+    if mask is None:
+        return rows.mean(-2) if mode == "mean" else rows.sum(-2)
+    w = mask.astype(table.dtype)[..., None]
+    s = (rows * w).sum(-2)
+    if mode == "sum":
+        return s
+    return s / jnp.maximum(w.sum(-2), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# shared small blocks
+# ---------------------------------------------------------------------------
+
+def _mlp_init(key, dims, dtype):
+    ws = []
+    keys = jax.random.split(key, len(dims) - 1)
+    for k, (a, b) in zip(keys, zip(dims[:-1], dims[1:])):
+        ws.append({"w": dense_init(k, (a, b), dtype),
+                   "b": jnp.zeros((b,), dtype)})
+    return ws
+
+
+def _mlp(ws, x, final_act=False):
+    for i, l in enumerate(ws):
+        x = x @ l["w"] + l["b"]
+        if i < len(ws) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _attn_block_init(key, d, dtype):
+    k = jax.random.split(key, 7)
+    return {"wq": dense_init(k[0], (d, d), dtype),
+            "wk": dense_init(k[1], (d, d), dtype),
+            "wv": dense_init(k[2], (d, d), dtype),
+            "wo": dense_init(k[3], (d, d), dtype),
+            "ln1": jnp.ones((d,), dtype), "ln2": jnp.ones((d,), dtype),
+            "w1": dense_init(k[4], (d, 4 * d), dtype),
+            "w2": dense_init(k[5], (4 * d, d), dtype)}
+
+
+def _attn_block(p, x, n_heads, causal=True):
+    """Pre-LN transformer block over (B, S, d)."""
+    B, S, d = x.shape
+    h = d // n_heads
+    xn = rms_norm(x, p["ln1"])
+    q = (xn @ p["wq"]).reshape(B, S, n_heads, h)
+    k = (xn @ p["wk"]).reshape(B, S, n_heads, h)
+    v = (xn @ p["wv"]).reshape(B, S, n_heads, h)
+    if causal:
+        o = causal_attention(q, k, v, chunk=min(1024, S))
+    else:
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * h ** -0.5
+        o = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(
+            s.astype(jnp.float32), -1).astype(x.dtype), v)
+    x = x + o.reshape(B, S, d) @ p["wo"]
+    xn = rms_norm(x, p["ln2"])
+    return x + jax.nn.relu(xn @ p["w1"]) @ p["w2"]
+
+
+def _bce(logits, labels):
+    z = logits.astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+# ---------------------------------------------------------------------------
+# SASRec  [arXiv:1808.09781]
+# ---------------------------------------------------------------------------
+
+def sasrec_init(cfg: RecSysConfig, key: jax.Array) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.n_blocks + 2)
+    return {
+        "item_emb": embed_init(keys[0], (_table_rows(cfg.n_items + 1),
+                                     cfg.embed_dim),
+                               dtype) * cfg.embed_dim ** -0.5,
+        "pos_emb": embed_init(keys[1], (cfg.seq_len, cfg.embed_dim),
+                              dtype) * cfg.embed_dim ** -0.5,
+        "blocks": [_attn_block_init(keys[2 + i], cfg.embed_dim, dtype)
+                   for i in range(cfg.n_blocks)],
+        "final_ln": jnp.ones((cfg.embed_dim,), dtype),
+    }
+
+
+def sasrec_encode(cfg: RecSysConfig, params: Params, seq: jax.Array):
+    """seq (B, S) item ids (0 = pad) -> (B, S, d)."""
+    x = jnp.take(params["item_emb"], seq, axis=0) + params["pos_emb"]
+    x = x * (seq > 0)[..., None].astype(x.dtype)
+    for p in params["blocks"]:
+        x = _attn_block(p, x, cfg.n_heads, causal=True)
+    return rms_norm(x, params["final_ln"])
+
+
+def sasrec_train_loss(cfg: RecSysConfig, params: Params, batch):
+    """BCE over (positive, sampled-negative) next items per position."""
+    h = sasrec_encode(cfg, params, batch["seq"])        # (B, S, d)
+    pos_e = jnp.take(params["item_emb"], batch["pos"], axis=0)
+    neg_e = jnp.take(params["item_emb"], batch["neg"], axis=0)
+    pos_s = jnp.einsum("bsd,bsd->bs", h, pos_e)
+    neg_s = jnp.einsum("bsd,bsd->bs", h, neg_e)
+    mask = (batch["pos"] > 0).astype(jnp.float32)
+    z = jnp.stack([pos_s, neg_s], -1).astype(jnp.float32)
+    y = jnp.stack([jnp.ones_like(pos_s), jnp.zeros_like(neg_s)], -1)
+    per = jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    return jnp.sum(per.sum(-1) * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+def sasrec_user_repr(cfg, params, batch):
+    return sasrec_encode(cfg, params, batch["seq"])[:, -1]   # (B, d)
+
+
+def sasrec_serve_scores(cfg, params, batch):
+    """Score candidate items per request: cands (B, n_c)."""
+    u = sasrec_user_repr(cfg, params, batch)
+    c = jnp.take(params["item_emb"], batch["cands"], axis=0)
+    return jnp.einsum("bd,bcd->bc", u, c)
+
+
+# ---------------------------------------------------------------------------
+# MIND  [arXiv:1904.08030]
+# ---------------------------------------------------------------------------
+
+def mind_init(cfg: RecSysConfig, key: jax.Array) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    k = jax.random.split(key, 4)
+    d = cfg.embed_dim
+    return {
+        "item_emb": embed_init(k[0], (_table_rows(cfg.n_items + 1), d),
+                               dtype) * d ** -0.5,
+        "bilinear": dense_init(k[1], (d, d), dtype),
+        # fixed (untrained) routing-logit init, one per (interest, position)
+        "routing_init": embed_init(k[2], (cfg.n_interests, cfg.seq_len),
+                                   dtype) * 0.1,
+        "mlp": _mlp_init(k[3], (d, 4 * d, d), dtype),
+    }
+
+
+def mind_interests(cfg: RecSysConfig, params: Params, seq: jax.Array):
+    """Multi-interest extraction via B2I dynamic routing -> (B, K, d)."""
+    e = jnp.take(params["item_emb"], seq, axis=0)       # (B, S, d)
+    valid = (seq > 0).astype(jnp.float32)               # (B, S)
+    eh = e @ params["bilinear"]                          # shared S matrix
+    b = jnp.broadcast_to(params["routing_init"].astype(jnp.float32)[None],
+                         (seq.shape[0], cfg.n_interests, cfg.seq_len))
+
+    def squash(z):
+        n2 = jnp.sum(jnp.square(z), -1, keepdims=True)
+        return (n2 / (1 + n2)) * z / jnp.sqrt(n2 + 1e-9)
+
+    u = None
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(b, axis=1)                   # over interests
+        w = w * valid[:, None, :]
+        z = jnp.einsum("bks,bsd->bkd", w, eh.astype(jnp.float32))
+        u = squash(z)
+        b = b + jnp.einsum("bkd,bsd->bks", u, eh.astype(jnp.float32))
+    u = _mlp(params["mlp"], u.astype(e.dtype), final_act=False)
+    return u                                             # (B, K, d)
+
+
+def mind_train_loss(cfg: RecSysConfig, params: Params, batch):
+    """Label-aware attention + sampled softmax vs provided negatives."""
+    u = mind_interests(cfg, params, batch["seq"])        # (B, K, d)
+    tgt = jnp.take(params["item_emb"], batch["pos"], axis=0)  # (B, d)
+    att = jax.nn.softmax(
+        jnp.einsum("bkd,bd->bk", u, tgt).astype(jnp.float32) * 2.0, -1)
+    v_u = jnp.einsum("bk,bkd->bd", att.astype(u.dtype), u)    # (B, d)
+    neg = jnp.take(params["item_emb"], batch["neg"], axis=0)  # (B, N, d)
+    pos_s = jnp.einsum("bd,bd->b", v_u, tgt)[:, None]
+    neg_s = jnp.einsum("bd,bnd->bn", v_u, neg)
+    logits = jnp.concatenate([pos_s, neg_s], -1).astype(jnp.float32)
+    return -jnp.mean(jax.nn.log_softmax(logits, -1)[:, 0])
+
+
+def mind_user_repr(cfg, params, batch):
+    return mind_interests(cfg, params, batch["seq"])     # (B, K, d)
+
+
+def mind_serve_scores(cfg, params, batch):
+    u = mind_user_repr(cfg, params, batch)               # (B, K, d)
+    c = jnp.take(params["item_emb"], batch["cands"], axis=0)  # (B, n_c, d)
+    return jnp.einsum("bkd,bcd->bkc", u, c).max(axis=1)  # max over interests
+
+
+# ---------------------------------------------------------------------------
+# BST  [arXiv:1905.06874]
+# ---------------------------------------------------------------------------
+
+def bst_init(cfg: RecSysConfig, key: jax.Array) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.embed_dim
+    k = jax.random.split(key, 5)
+    # sequence includes the target item appended at the end (paper fig. 1)
+    mlp_dims = (cfg.seq_len + 1) * d
+    return {
+        "item_emb": embed_init(k[0], (_table_rows(cfg.n_items + 1), d),
+                               dtype) * d ** -0.5,
+        "pos_emb": embed_init(k[1], (cfg.seq_len + 1, d), dtype) * d ** -0.5,
+        "blocks": [_attn_block_init(k[2 + i], d, dtype)
+                   for i in range(cfg.n_blocks)],
+        "mlp": _mlp_init(k[4], (mlp_dims, *cfg.mlp_dims, 1), dtype),
+        "user_proj": dense_init(k[3], (mlp_dims, d), dtype),
+    }
+
+
+def _bst_encode(cfg, params, seq, target):
+    x_ids = jnp.concatenate([seq, target[:, None]], axis=1)  # (B, S+1)
+    x = jnp.take(params["item_emb"], x_ids, axis=0) + params["pos_emb"]
+    for p in params["blocks"]:
+        x = _attn_block(p, x, cfg.n_heads, causal=False)
+    return x.reshape(x.shape[0], -1)                     # (B, (S+1)*d)
+
+
+def bst_train_loss(cfg: RecSysConfig, params: Params, batch):
+    flat = _bst_encode(cfg, params, batch["seq"], batch["target"])
+    logit = _mlp(params["mlp"], flat)[:, 0]
+    return _bce(logit, batch["label"])
+
+
+def bst_serve_scores(cfg, params, batch):
+    """CTR per (request, candidate): cands (B, n_c)."""
+    B, n_c = batch["cands"].shape
+
+    def score_chunk(c):
+        flat = _bst_encode(cfg, params, batch["seq"], c)
+        return _mlp(params["mlp"], flat)[:, 0]
+    return jax.vmap(score_chunk, in_axes=1, out_axes=1)(batch["cands"])
+
+
+def bst_user_repr(cfg, params, batch):
+    """Target-free user tower (retrieval approximation, see DESIGN.md)."""
+    pad = jnp.zeros((batch["seq"].shape[0],), jnp.int32)
+    flat = _bst_encode(cfg, params, batch["seq"], pad)
+    return flat @ params["user_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Wide&Deep  [arXiv:1606.07792]
+# ---------------------------------------------------------------------------
+
+def wide_deep_init(cfg: RecSysConfig, key: jax.Array) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    k = jax.random.split(key, 4)
+    d = cfg.embed_dim
+    deep_in = cfg.n_sparse * d
+    return {
+        # one big row-sharded table: field f owns rows [f*V, (f+1)*V)
+        "tables": embed_init(
+            k[0], (_table_rows(cfg.n_sparse * cfg.sparse_vocab), d),
+            dtype) * d ** -0.5,
+        "wide": jnp.zeros((_table_rows(cfg.n_sparse * cfg.sparse_vocab), 1),
+                          dtype),
+        "mlp": _mlp_init(k[1], (deep_in, *cfg.mlp_dims, 1), dtype),
+        "user_proj": dense_init(k[2], (cfg.mlp_dims[-1], d), dtype),
+        "item_emb": embed_init(k[3], (_table_rows(cfg.n_items + 1), d),
+                               dtype) * d ** -0.5,
+    }
+
+
+def _wd_field_ids(cfg, ids):
+    """ids (B, n_sparse, m) local ids -> global rows in the fused table."""
+    offs = (jnp.arange(cfg.n_sparse) * cfg.sparse_vocab)[None, :, None]
+    return ids + offs
+
+
+def wide_deep_logit(cfg: RecSysConfig, params: Params, batch):
+    gids = _wd_field_ids(cfg, batch["sparse_ids"])       # (B, F, m)
+    mask = batch.get("sparse_mask")
+    bags = embedding_bag(params["tables"], gids, mask)   # (B, F, d)
+    deep = _mlp(params["mlp"], bags.reshape(bags.shape[0], -1))[:, 0]
+    wide = embedding_bag(params["wide"], gids, mask, mode="sum")
+    return deep + wide.sum(axis=(1, 2))
+
+
+def wide_deep_train_loss(cfg, params, batch):
+    return _bce(wide_deep_logit(cfg, params, batch), batch["label"])
+
+
+def wide_deep_serve_scores(cfg, params, batch):
+    return wide_deep_logit(cfg, params, batch)[:, None]
+
+
+def wide_deep_user_repr(cfg, params, batch):
+    gids = _wd_field_ids(cfg, batch["sparse_ids"])
+    bags = embedding_bag(params["tables"], gids, batch.get("sparse_mask"))
+    ws = params["mlp"]
+    x = bags.reshape(bags.shape[0], -1)
+    for l in ws[:-1]:
+        x = jax.nn.relu(x @ l["w"] + l["b"])
+    return x @ params["user_proj"]
+
+
+# ---------------------------------------------------------------------------
+# retrieval (shared): 1 query vs n_candidates, top-k — the simsearch op
+# ---------------------------------------------------------------------------
+
+def retrieval(cfg: RecSysConfig, params: Params, batch, k: int = 100):
+    """Score user repr against a large candidate set; returns (scores, ids).
+
+    Uses the same batched-dot + top-k primitive as the Krites cache lookup
+    (see repro.index.flat / kernels.simsearch).
+    """
+    from repro.index.flat import topk_scores  # late import (cycle-free)
+    u = user_repr(cfg, params, batch)
+    cand = jnp.take(params["item_emb"], batch["cand_ids"], axis=0)
+    if u.ndim == 3:  # multi-interest: max over interests
+        scores = jnp.einsum("bkd,cd->bkc", u, cand).max(axis=1)
+        vals, idx = jax.lax.top_k(scores, k)
+        return vals, jnp.take(batch["cand_ids"], idx)
+    return topk_scores(u, cand, batch["cand_ids"], k)
+
+
+def user_repr(cfg: RecSysConfig, params: Params, batch):
+    kind = cfg.kind
+    if kind == "sasrec":
+        return sasrec_user_repr(cfg, params, batch)
+    if kind == "mind":
+        return mind_user_repr(cfg, params, batch)        # (B, I, d)
+    if kind == "bst":
+        return bst_user_repr(cfg, params, batch)
+    if kind == "wide_deep":
+        return wide_deep_user_repr(cfg, params, batch)
+    raise ValueError(kind)
+
+
+def retrieval_sharded(cfg: RecSysConfig, params: Params, batch, mesh,
+                      k: int = 100):
+    """§Perf variant: shard-local candidate gather (range-partitioned
+    candidate lists, as in production sharded ANN/DLRM serving) +
+    per-shard top-k + tiny merge via shard_map. The only collective is
+    the k-candidate merge (KBs) instead of the full gathered-candidate /
+    score-row traffic."""
+    from repro.index.sharded import sharded_topk_local_candidates
+    u = user_repr(cfg, params, batch)
+    return sharded_topk_local_candidates(
+        u, params["item_emb"], batch["cand_ids"], mesh, k=k)
+
+
+INIT = {"sasrec": sasrec_init, "mind": mind_init, "bst": bst_init,
+        "wide_deep": wide_deep_init}
+TRAIN_LOSS = {"sasrec": sasrec_train_loss, "mind": mind_train_loss,
+              "bst": bst_train_loss, "wide_deep": wide_deep_train_loss}
+SERVE = {"sasrec": sasrec_serve_scores, "mind": mind_serve_scores,
+         "bst": bst_serve_scores, "wide_deep": wide_deep_serve_scores}
+
+
+def init_params(cfg: RecSysConfig, key: jax.Array) -> Params:
+    return INIT[cfg.kind](cfg, key)
+
+
+def train_loss(cfg: RecSysConfig, params: Params, batch):
+    return TRAIN_LOSS[cfg.kind](cfg, params, batch)
+
+
+def serve_scores(cfg: RecSysConfig, params: Params, batch):
+    return SERVE[cfg.kind](cfg, params, batch)

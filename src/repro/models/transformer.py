@@ -1,0 +1,337 @@
+"""Decoder-only LM (dense or MoE) with scan-over-layers.
+
+Entry points (all pure functions of (params, inputs)):
+
+- ``init_params(cfg, key)``            -> pytree (layer weights stacked on L)
+- ``forward(cfg, params, tokens)``     -> logits (training forward)
+- ``train_loss(cfg, params, batch)``   -> scalar loss (chunked-vocab xent)
+- ``prefill(cfg, params, tokens)``     -> (last-token logits, KVCache)
+- ``decode_step(cfg, params, cache, token, pos)`` -> (logits, KVCache)
+
+KV cache layout: dict(k=(L, B, S, Kv, D), v=(L, B, S, Kv, D), length=(B,)).
+The sequence axis of the cache is the sharding target for long-context
+decode (flash-decoding split-K under GSPMD).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.distributed.act_sharding import (constrain_act, constrain_seq,
+                                            constrain_tp_last)
+from repro.models import attention as attn_lib
+from repro.models.layers import (apply_rope, dense_init, embed_init, rms_norm,
+                                 rope_cos_sin, swiglu)
+from repro.models.moe import moe_ffn, moe_ffn_einsum
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_shapes(cfg: LMConfig):
+    d, h = cfg.d_model, cfg.head_dim
+    shapes = {
+        "wq": (d, cfg.n_heads * h),
+        "wk": (d, cfg.n_kv_heads * h),
+        "wv": (d, cfg.n_kv_heads * h),
+        "wo": (cfg.n_heads * h, d),
+        "ln1": (d,),
+        "ln2": (d,),
+    }
+    if cfg.qk_norm:
+        shapes["q_norm"] = (h,)
+        shapes["k_norm"] = (h,)
+    if cfg.is_moe:
+        m = cfg.moe
+        shapes.update({
+            "router": (d, m.n_experts),
+            "wg": (m.n_experts, d, m.d_ff_expert),
+            "wu": (m.n_experts, d, m.d_ff_expert),
+            "wd": (m.n_experts, m.d_ff_expert, d),
+        })
+        if m.n_shared_experts:
+            f = m.n_shared_experts * m.d_ff_expert
+            shapes.update({"shared_wg": (d, f), "shared_wu": (d, f),
+                           "shared_wd": (f, d)})
+    else:
+        shapes.update({"wg": (d, cfg.d_ff), "wu": (d, cfg.d_ff),
+                       "wd": (cfg.d_ff, d)})
+    return shapes
+
+
+def init_params(cfg: LMConfig, key: jax.Array) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 4)
+    shapes = _layer_shapes(cfg)
+    layer = {}
+    lkeys = jax.random.split(keys[0], len(shapes))
+    for lk, (name, shp) in zip(lkeys, sorted(shapes.items())):
+        stacked = (cfg.n_layers, *shp)
+        if name.startswith("ln") or name.endswith("_norm"):
+            layer[name] = jnp.ones(stacked, dtype)
+        else:
+            # init each stacked layer with a different fold of the key
+            layer[name] = dense_init(lk, stacked, dtype)
+    params: Params = {
+        "layers": layer,
+        "embed": embed_init(keys[1], (cfg.vocab_size, cfg.d_model), dtype),
+        "final_ln": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(
+            keys[2], (cfg.d_model, cfg.vocab_size), dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer body
+# ---------------------------------------------------------------------------
+
+def _attention_block(cfg: LMConfig, p: Params, x: jax.Array,
+                     cos, sin, mode: str, cache_kv=None, length=None):
+    """Shared attention sub-block. x: (B, S, d)."""
+    B, S, d = x.shape
+    h = cfg.head_dim
+    q = constrain_tp_last(jnp.einsum("bsd,dq->bsq", x, p["wq"])).reshape(
+        B, S, cfg.n_heads, h)
+    k = constrain_tp_last(jnp.einsum("bsd,dq->bsq", x, p["wk"])).reshape(
+        B, S, cfg.n_kv_heads, h)
+    v = constrain_tp_last(jnp.einsum("bsd,dq->bsq", x, p["wv"])).reshape(
+        B, S, cfg.n_kv_heads, h)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if mode == "decode":
+        k_cache, v_cache = cache_kv
+        pos = jnp.reshape(length, (-1,))[0]  # uniform position (batched step)
+        # one-hot masked update instead of dynamic_update_slice: a DUS at a
+        # traced offset cannot be partitioned along the (sequence-sharded)
+        # cache axis — GSPMD all-gathers the whole KV cache per layer
+        # (24 GiB/step measured on llama4 decode, §Perf). The where-update
+        # is elementwise and stays fully sharded.
+        sel = (jnp.arange(k_cache.shape[1]) == pos)[None, :, None, None]
+        k_cache = jnp.where(sel, k.astype(k_cache.dtype), k_cache)
+        v_cache = jnp.where(sel, v.astype(v_cache.dtype), v_cache)
+        o = attn_lib.decode_attention(q, k_cache, v_cache, length + 1)
+        new_kv = (k_cache, v_cache)
+    else:
+        o = attn_lib.causal_attention(q, k, v, cfg.attn_chunk,
+                                      unroll=not cfg.scan_layers)
+        new_kv = (k, v)
+    o = constrain_tp_last(o.reshape(B, S, cfg.n_heads * h))
+    return jnp.einsum("bsq,qd->bsd", o, p["wo"]), new_kv
+
+
+def _ffn_block(cfg: LMConfig, p: Params, x: jax.Array, mode: str):
+    B, S, d = x.shape
+    if cfg.is_moe:
+        flat = x.reshape(B * S, d)
+        if mode == "decode":
+            # decode steps have few tokens; the one-hot dispatch is cheap
+            # and avoids sort latency on the serving path.
+            y, aux = moe_ffn_einsum(flat, p, cfg.moe)
+        elif cfg.moe.dispatch == "ep":
+            from repro.distributed.act_sharding import current_mesh
+            from repro.models.moe import moe_ffn_ep
+            mesh = current_mesh()
+            if mesh is not None and flat.shape[0] % mesh.devices.size == 0:
+                y, aux = moe_ffn_ep(flat, p, cfg.moe, mesh)
+            else:
+                y, aux = moe_ffn(flat, p, cfg.moe)
+        else:
+            y, aux = moe_ffn(flat, p, cfg.moe)
+        return y.reshape(B, S, d), aux
+    return swiglu(x, p["wg"], p["wu"], p["wd"]), jnp.float32(0.0)
+
+
+def _layer(cfg: LMConfig, p: Params, x, cos, sin, mode, cache_kv=None,
+           length=None):
+    sp = cfg.seq_parallel and mode != "decode" \
+        and x.shape[1] % 16 == 0
+    x = constrain_act(x)            # gather the seq-sharded carry
+    a, new_kv = _attention_block(
+        cfg, p, rms_norm(x, p["ln1"], cfg.norm_eps), cos, sin, mode,
+        cache_kv, length)
+    x = constrain_act(x + a)
+    f, aux = _ffn_block(cfg, p, rms_norm(x, p["ln2"], cfg.norm_eps), mode)
+    out = x + f
+    # exit in sequence-parallel layout: the scan carry (= remat residual)
+    # is sharded over 'model' on the seq axis
+    out = constrain_seq(out) if sp else constrain_act(out)
+    return out, aux, new_kv
+
+
+# ---------------------------------------------------------------------------
+# stacked forward passes
+# ---------------------------------------------------------------------------
+
+def _scan_layers(cfg: LMConfig, params: Params, x, cos, sin, mode,
+                 cache=None, length=None):
+    """Run all layers; layer weights are stacked on axis 0 and scanned."""
+    layers = params["layers"]
+
+    if mode == "decode":
+        def body(carry, xs):
+            xc, aux = carry
+            p, kc, vc = xs
+            y, a, (nk, nv) = _layer(cfg, p, xc, cos, sin, "decode",
+                                    (kc, vc), length)
+            return (y, aux + a), (nk, nv)
+
+        if not cfg.scan_layers:
+            aux = jnp.float32(0.0)
+            ks, vs = [], []
+            for l in range(cfg.n_layers):
+                p_l = jax.tree.map(lambda a: a[l], layers)
+                x, a, (nk, nv) = _layer(cfg, p_l, x, cos, sin, "decode",
+                                        (cache["k"][l], cache["v"][l]),
+                                        length)
+                aux = aux + a
+                ks.append(nk)
+                vs.append(nv)
+            return x, aux, {"k": jnp.stack(ks), "v": jnp.stack(vs),
+                            "length": cache["length"] + 1}
+
+        (x, aux), (new_k, new_v) = jax.lax.scan(
+            body, (x, jnp.float32(0.0)),
+            (layers, cache["k"], cache["v"]))
+        return x, aux, {"k": new_k, "v": new_v,
+                        "length": cache["length"] + 1}
+
+    layer_fn = functools.partial(_layer, cfg)
+    if cfg.remat:
+        # args after partial: (p, x, cos, sin, mode) -> mode is static
+        layer_fn = jax.checkpoint(
+            layer_fn, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=(4,))
+
+    def body(carry, p):
+        xc, aux = carry
+        y, a, kv = layer_fn(p, xc, cos, sin, mode)
+        out = kv if mode == "prefill" else None
+        return (y, aux + a), out
+
+    if not cfg.scan_layers:
+        # unrolled layer stack (dry-run analysis variants: XLA cost
+        # analysis undercounts while-loop bodies, so analysis lowers
+        # loop-free HLO and extrapolates; see analysis/roofline.py)
+        aux = jnp.float32(0.0)
+        kvs = []
+        for l in range(cfg.n_layers):
+            p_l = jax.tree.map(lambda a: a[l], layers)
+            x, a, kv = layer_fn(p_l, x, cos, sin, mode)
+            aux = aux + a
+            kvs.append(kv)
+        if mode == "prefill":
+            kv = jax.tree.map(lambda *xs: jnp.stack(xs), *kvs)
+        else:
+            kv = None
+        return x, aux, kv
+
+    (x, aux), kv = jax.lax.scan(body, (x, jnp.float32(0.0)), layers)
+    return x, aux, kv
+
+
+def forward(cfg: LMConfig, params: Params, tokens: jax.Array):
+    """Training/scoring forward. tokens: (B, S) int32 -> hidden (B, S, d)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    x = constrain_seq(x) if (cfg.seq_parallel and S % 16 == 0) \
+        else constrain_act(x)
+    cos, sin = rope_cos_sin(jnp.arange(S), cfg.head_dim, cfg.rope_theta)
+    x, aux, _ = _scan_layers(cfg, params, x, cos, sin, "train")
+    return rms_norm(x, params["final_ln"], cfg.norm_eps), aux
+
+
+def _unembed_weight(cfg: LMConfig, params: Params):
+    return params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+
+def train_loss(cfg: LMConfig, params: Params, batch: Dict[str, jax.Array],
+               vocab_chunk_seq: int = 512, aux_weight: float = 0.01):
+    """Next-token xent with sequence-chunked unembedding.
+
+    The (B, S, V) logits tensor is never materialized: the loss is computed
+    in a scan over sequence chunks, keeping peak memory at
+    (B, vocab_chunk_seq, V) fp32 per device shard.
+    """
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, S = tokens.shape
+    hidden, aux = forward(cfg, params, tokens)
+    hidden = constrain_act(hidden)
+    w = _unembed_weight(cfg, params)
+    n_chunks = max(1, S // vocab_chunk_seq)
+    hs = hidden.reshape(B, n_chunks, S // n_chunks, cfg.d_model)
+    ls = labels.reshape(B, n_chunks, S // n_chunks)
+    hs = jnp.moveaxis(hs, 1, 0)
+    ls = jnp.moveaxis(ls, 1, 0)
+
+    def body(acc, xs):
+        h, y = xs
+        logits = jnp.einsum("bsd,dv->bsv", h, w).astype(jnp.float32)
+        logits = constrain_tp_last(logits)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        # gold logit via masked reduce over the (vocab-sharded) last axis —
+        # take_along_axis would force GSPMD to materialize gathered logits
+        vpos = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        gold = jnp.sum(jnp.where(vpos == y[..., None], logits, 0.0), axis=-1)
+        mask = (y >= 0).astype(jnp.float32)
+        return acc + jnp.sum((logz - gold) * mask), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (hs, ls),
+                            unroll=n_chunks if not cfg.scan_layers else 1)
+    n_tok = jnp.maximum(jnp.sum((labels >= 0).astype(jnp.float32)), 1.0)
+    return total / n_tok + aux_weight * aux / cfg.n_layers
+
+
+def prefill(cfg: LMConfig, params: Params, tokens: jax.Array,
+            max_len: int | None = None):
+    """Serving prefill: returns (last-position logits, KVCache)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    x = constrain_seq(x) if (cfg.seq_parallel and S % 16 == 0) \
+        else constrain_act(x)
+    cos, sin = rope_cos_sin(jnp.arange(S), cfg.head_dim, cfg.rope_theta)
+    x, _, kv = _scan_layers(cfg, params, x, cos, sin, "prefill")
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    last = x[:, -1]
+    logits = jnp.einsum("bd,dv->bv", last, _unembed_weight(cfg, params))
+    k, v = kv
+    if max_len is not None and max_len > S:
+        pad = [(0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    cache = {"k": k, "v": v,
+             "length": jnp.full((B,), S, jnp.int32)}
+    return logits.astype(jnp.float32), cache
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "length": jnp.zeros((batch,), jnp.int32)}
+
+
+def decode_step(cfg: LMConfig, params: Params, cache: Dict[str, Any],
+                token: jax.Array):
+    """One decode step. token: (B,) int32. Returns (logits (B, V), cache)."""
+    B = token.shape[0]
+    x = constrain_act(params["embed"][token])[:, None, :]   # (B, 1, d)
+    pos = cache["length"]                                # (B,)
+    cos, sin = rope_cos_sin(pos[:, None], cfg.head_dim, cfg.rope_theta)
+    x, _, new_cache = _scan_layers(cfg, params, x, cos, sin, "decode",
+                                   cache=cache, length=pos)
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, 0], _unembed_weight(cfg, params))
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,3 @@
+from repro.serving.engine import BatchingFrontend, LLMEngine
+
+__all__ = ["BatchingFrontend", "LLMEngine"]

@@ -1,0 +1,95 @@
+"""Hand-rolled sharded AdamW with fp32 master weights.
+
+Optimizer state mirrors the parameter pytree (so it inherits the params'
+2D FSDPxTP sharding — ZeRO-style without extra machinery):
+    state = {"mu": fp32, "nu": fp32, "master": fp32, "step": i32}
+Params may live in bf16; updates are computed against the fp32 master and
+cast back.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # store moments in bf16 to halve optimizer memory (production trick;
+    # master stays fp32)
+    moments_dtype: str = "float32"
+
+
+def init(params: Any, cfg: AdamWConfig) -> dict:
+    mdt = jnp.dtype(cfg.moments_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        # copy=True: for fp32 params astype would ALIAS the param buffer,
+        # breaking donation (same buffer donated twice)
+        "master": jax.tree.map(
+            lambda p: jnp.array(p, jnp.float32, copy=True), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def update(grads: Any, state: dict, params: Any, cfg: AdamWConfig):
+    """Returns (new_params, new_state, grad_norm)."""
+    step = state["step"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moments_dtype)
+
+    def upd(g, mu, nu, master, p):
+        g = g.astype(jnp.float32) * scale
+        mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * g
+        nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * g * g
+        mhat = mu32 / c1
+        vhat = nu32 / c2
+        new_master = master - cfg.lr * (
+            mhat / (jnp.sqrt(vhat) + cfg.eps)
+            + cfg.weight_decay * master)
+        return (mu32.astype(mdt), nu32.astype(mdt), new_master,
+                new_master.astype(p.dtype))
+
+    out = jax.tree.map(upd, grads, state["mu"], state["nu"],
+                       state["master"], params)
+    # unzip the 4-tuples
+    mu = jax.tree.map(lambda t: t[0], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda t: t[1], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_p = jax.tree.map(lambda t: t[3], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"mu": mu, "nu": nu, "master": master, "step": step}, gnorm
+
+
+def make_train_step(loss_fn, opt_cfg: AdamWConfig):
+    """loss_fn(params, batch) -> scalar. Returns jit-able step fn."""
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_p, new_s, gnorm = update(grads, opt_state, params, opt_cfg)
+        return new_p, new_s, {"loss": loss, "grad_norm": gnorm}
+    return step

@@ -1,0 +1,73 @@
+"""Async VerifyAndPromote pool: dedup, rate limiting, retry, ordering."""
+import threading
+import time
+
+from repro.core.async_queue import VerifyAndPromotePool
+
+
+def test_basic_judge_and_promote():
+    promoted = []
+    pool = VerifyAndPromotePool(
+        judge_fn=lambda p: p["ok"],
+        promote_fn=lambda p: promoted.append(p["id"]))
+    for i in range(10):
+        pool.submit(key=("q", i), payload={"ok": i % 2 == 0, "id": i})
+    pool.drain()
+    pool.stop()
+    assert sorted(promoted) == [0, 2, 4, 6, 8]
+    assert pool.stats.judged == 10 and pool.stats.approved == 5
+
+
+def test_dedup_inflight():
+    gate = threading.Event()
+    pool = VerifyAndPromotePool(
+        judge_fn=lambda p: gate.wait(2) or True,
+        promote_fn=lambda p: None, n_workers=1)
+    assert pool.submit(("a", 1), {"x": 1})
+    assert not pool.submit(("a", 1), {"x": 1})   # deduped while inflight
+    gate.set()
+    pool.drain()
+    pool.stop()
+    assert pool.stats.deduped == 1
+
+
+def test_rate_limit():
+    pool = VerifyAndPromotePool(
+        judge_fn=lambda p: True, promote_fn=lambda p: None,
+        rate_per_s=0.0001)
+    accepted = sum(pool.submit(("k", i), {}) for i in range(20))
+    pool.stop()
+    assert accepted <= 1
+    assert pool.stats.rate_limited >= 19
+
+
+def test_retry_then_success():
+    attempts = {"n": 0}
+
+    def judge(p):
+        attempts["n"] += 1
+        if attempts["n"] < 3:
+            raise RuntimeError("transient")
+        return True
+
+    done = []
+    pool = VerifyAndPromotePool(judge_fn=judge,
+                                promote_fn=lambda p: done.append(1),
+                                n_workers=1, backoff_s=0.01)
+    pool.submit(("k", 0), {})
+    pool.drain(5)
+    pool.stop()
+    assert done == [1]
+    assert pool.stats.retried == 2
+
+
+def test_never_blocks_serving_path():
+    """submit() must return fast even with a slow judge."""
+    pool = VerifyAndPromotePool(
+        judge_fn=lambda p: time.sleep(0.5) or True,
+        promote_fn=lambda p: None, n_workers=1)
+    t0 = time.monotonic()
+    for i in range(50):
+        pool.submit(("k", i), {})
+    assert time.monotonic() - t0 < 0.2
+    pool.stop()

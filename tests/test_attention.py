@@ -1,0 +1,76 @@
+"""Attention implementations vs naive oracle."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.attention import (causal_attention,
+                                    causal_attention_masked,
+                                    decode_attention)
+
+
+def naive_causal(q, k, v):
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, D)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k) * D ** -0.5
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v)
+    return o.reshape(B, S, H, D)
+
+
+@pytest.mark.parametrize("B,S,H,K,D,chunk", [
+    (2, 64, 4, 4, 16, 16),     # MHA
+    (1, 96, 8, 2, 32, 32),     # GQA 4:1
+    (2, 128, 4, 1, 8, 64),     # MQA
+    (1, 50, 2, 2, 16, 32),     # non-divisible seq (gcd fallback)
+])
+def test_causal_triangular_matches_naive(B, S, H, K, D, chunk):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, D))
+    ref = naive_causal(q, k, v)
+    out = causal_attention(q, k, v, chunk=chunk)
+    assert jnp.max(jnp.abs(out - ref)) < 2e-5
+
+
+def test_masked_variant_matches_triangular():
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (2, 64, 4, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 64, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 64, 2, 16))
+    a = causal_attention(q, k, v, chunk=16)
+    b = causal_attention_masked(q, k, v, chunk=16)
+    assert jnp.max(jnp.abs(a - b)) < 2e-5
+
+
+def test_decode_matches_full_attention_last_position():
+    """decode(q_S | cache of S-1 keys) == causal attention row S-1."""
+    key = jax.random.PRNGKey(4)
+    B, S, H, K, D = 2, 32, 4, 2, 16
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, D))
+    full = causal_attention(q, k, v, chunk=8)
+    dec = decode_attention(q[:, -1:], k, v,
+                           jnp.full((B,), S, jnp.int32))
+    assert jnp.max(jnp.abs(dec[:, 0] - full[:, -1])) < 2e-5
+
+
+def test_decode_length_masking():
+    key = jax.random.PRNGKey(5)
+    B, S, H, K, D = 2, 16, 2, 2, 8
+    q = jax.random.normal(key, (B, 1, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, D))
+    lens = jnp.array([5, 16])
+    out = decode_attention(q, k, v, lens)
+    # zeroing cache beyond length must not change the output
+    pos = jnp.arange(S)[None, :, None, None]
+    k2 = jnp.where(pos < lens[:, None, None, None], k, 123.0)
+    v2 = jnp.where(pos < lens[:, None, None, None], v, -55.0)
+    out2 = decode_attention(q, k2, v2, lens)
+    assert jnp.max(jnp.abs(out - out2)) < 1e-6

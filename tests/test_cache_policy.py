@@ -1,0 +1,218 @@
+"""Krites policy semantics: tiers, simulator, and invariant properties."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tiers as T
+from repro.core.simulate import (DYN_HIT_PROMOTED, MISS, STATIC_HIT,
+                                 simulate, summarize)
+from repro.core.tiers import CacheConfig
+
+
+def _mk_static(n=4, d=8, seed=0):
+    rng = np.random.default_rng(seed)
+    emb = rng.standard_normal((n, d)).astype(np.float32)
+    emb /= np.linalg.norm(emb, axis=1, keepdims=True)
+    return jnp.asarray(emb), jnp.arange(n, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# dynamic tier unit behavior
+# ---------------------------------------------------------------------------
+
+def test_lru_insert_and_evict():
+    tier = T.make_dynamic_tier(2, 4)
+    v = jnp.eye(4)
+    tier = T.insert(tier, v[0], 0, 0, now=1)
+    tier = T.insert(tier, v[1], 1, 1, now=2)
+    assert bool(tier.valid.all())
+    # touch slot of v[0] -> v[1] becomes LRU and gets evicted next
+    s, j = T.dynamic_lookup(tier, v[0])
+    tier = T.touch(tier, j, now=3)
+    tier = T.insert(tier, v[2], 2, 2, now=4)
+    s0, _ = T.dynamic_lookup(tier, v[0])
+    s1, _ = T.dynamic_lookup(tier, v[1])
+    assert float(s0) > 0.99          # survived
+    assert float(s1) < 0.99          # evicted
+
+
+def test_upsert_idempotent_overwrite():
+    tier = T.make_dynamic_tier(4, 4)
+    v = jnp.asarray([1.0, 0, 0, 0])
+    tier = T.insert(tier, v, cls=7, answer_ref=-1, now=1)
+    before = int(tier.valid.sum())
+    # promotion on an (almost) identical key overwrites in place
+    tier = T.upsert(tier, v, cls=7, answer_ref=3, now=2,
+                    static_origin=True)
+    assert int(tier.valid.sum()) == before
+    _, j = T.dynamic_lookup(tier, v)
+    assert bool(tier.static_origin[j])
+    assert int(tier.answer_ref[j]) == 3
+
+
+def test_upsert_lww_guard():
+    tier = T.make_dynamic_tier(4, 4)
+    v = jnp.asarray([1.0, 0, 0, 0])
+    tier = T.insert(tier, v, cls=7, answer_ref=-1, now=10)  # newer write
+    tier2 = T.upsert(tier, v, cls=7, answer_ref=3, now=5,
+                     static_origin=True)  # stale promotion
+    _, j = T.dynamic_lookup(tier2, v)
+    assert not bool(tier2.static_origin[j])  # stale write skipped
+
+
+def test_ttl_eviction():
+    tier = T.make_dynamic_tier(4, 4)
+    v = jnp.eye(4)
+    tier = T.insert(tier, v[0], 0, 0, now=0)
+    tier = T.insert(tier, v[1], 1, 1, now=50)
+    tier = T.evict_expired(tier, now=100, ttl=60)
+    assert int(tier.valid.sum()) == 1
+
+
+# ---------------------------------------------------------------------------
+# simulator semantics
+# ---------------------------------------------------------------------------
+
+def _run(q_emb, q_cls, cfg, krites, static=None):
+    s_emb, s_cls = static if static is not None else _mk_static()
+    return simulate(s_emb, s_cls, jnp.asarray(q_emb),
+                    jnp.asarray(q_cls, jnp.int32), cfg, krites=krites,
+                    capacity=16)
+
+
+def test_static_hit_exact_repeat():
+    s_emb, s_cls = _mk_static()
+    q = np.repeat(np.asarray(s_emb[:1]), 3, axis=0)
+    res = _run(q, [0, 0, 0], CacheConfig(0.9, 0.9), False,
+               static=(s_emb, s_cls))
+    assert (np.asarray(res.served_by) == STATIC_HIT).all()
+    assert np.asarray(res.static_origin).all()
+
+
+def test_miss_then_dynamic_hit():
+    s_emb, s_cls = _mk_static()
+    rng = np.random.default_rng(1)
+    v = rng.standard_normal(8).astype(np.float32)
+    v /= np.linalg.norm(v)
+    # make sure v is far from the static tier
+    q = np.stack([v, v])
+    res = _run(q, [9, 9], CacheConfig(0.99, 0.9), False,
+               static=(s_emb, s_cls))
+    sb = np.asarray(res.served_by)
+    assert sb[0] == MISS and sb[1] != MISS
+    assert bool(res.correct.all())
+
+
+def test_promotion_after_judge_latency():
+    """Grey-zone query -> judged (approved) -> repeat hits promoted entry."""
+    s_emb, s_cls = _mk_static()
+    base = np.asarray(s_emb[0])
+    # paraphrase at sim ~0.95 of static[0]
+    para = base + 0.33 * np.asarray(s_emb[1])
+    para /= np.linalg.norm(para)
+    sim = float(para @ base)
+    assert 0.9 < sim < 0.99
+    cfg = CacheConfig(tau_static=0.995, tau_dynamic=0.995, sigma_min=0.0,
+                      judge_latency=2)
+    q = np.stack([para] * 6)
+    res_b = _run(q, [0] * 6, cfg, False, static=(s_emb, s_cls))
+    res_k = _run(q, [0] * 6, cfg, True, static=(s_emb, s_cls))
+    # baseline: first is a miss, repeats hit the *dynamic-origin* entry
+    assert not np.asarray(res_b.static_origin).any()
+    # krites: after latency 2, repeats serve the promoted static answer
+    sbk = np.asarray(res_k.served_by)
+    assert (sbk[3:] == DYN_HIT_PROMOTED).all()
+    assert int(res_k.promotions) >= 1
+    assert np.asarray(res_k.static_origin)[3:].all()
+
+
+def test_judge_rejects_wrong_class():
+    s_emb, s_cls = _mk_static()
+    base = np.asarray(s_emb[0])
+    para = base + 0.33 * np.asarray(s_emb[1])
+    para /= np.linalg.norm(para)
+    cfg = CacheConfig(0.995, 0.995, judge_latency=1)
+    q = np.stack([para] * 5)
+    res = _run(q, [42] * 5, cfg, True, static=(s_emb, s_cls))  # class 42 != 0
+    assert int(res.promotions) == 0
+    assert not np.asarray(res.static_origin).any()
+    assert bool(res.correct.all())   # dynamic-origin repeats are correct
+
+
+def test_sigma_min_gates_judging():
+    s_emb, s_cls = _mk_static()
+    base = np.asarray(s_emb[0])
+    para = base + 0.33 * np.asarray(s_emb[1])
+    para /= np.linalg.norm(para)
+    sim = float(para @ base)
+    cfg = CacheConfig(0.995, 0.995, sigma_min=sim + 0.001,
+                      judge_latency=1)
+    res = _run(np.stack([para] * 4), [0] * 4, cfg, True,
+               static=(s_emb, s_cls))
+    assert int(res.judge_calls) == 0
+
+
+# ---------------------------------------------------------------------------
+# properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(10, 60))
+def test_prop_serving_path_identical_static_and_totals(seed, n):
+    """Krites must not change static hits; totals match when the dynamic
+    tier is large enough that promotions never evict live entries."""
+    rng = np.random.default_rng(seed)
+    s_emb, s_cls = _mk_static(6, 8, seed)
+    q = rng.standard_normal((n, 8)).astype(np.float32)
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    cls = rng.integers(0, 6, n)
+    cfg = CacheConfig(0.9, 0.9, judge_latency=3)
+    rb = simulate(s_emb, s_cls, jnp.asarray(q), jnp.asarray(cls), cfg,
+                  krites=False, capacity=4 * n)
+    rk = simulate(s_emb, s_cls, jnp.asarray(q), jnp.asarray(cls), cfg,
+                  krites=True, capacity=4 * n)
+    assert (np.asarray(rb.served_by == STATIC_HIT)
+            == np.asarray(rk.served_by == STATIC_HIT)).all()
+    assert (np.asarray(rb.served_by == MISS)
+            == np.asarray(rk.served_by == MISS)).all()
+    # static-origin can only grow
+    assert np.asarray(rk.static_origin).sum() \
+        >= np.asarray(rb.static_origin).sum()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_prop_disabled_greyzone_equals_baseline(seed):
+    rng = np.random.default_rng(seed)
+    s_emb, s_cls = _mk_static(4, 8, seed)
+    q = rng.standard_normal((30, 8)).astype(np.float32)
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    cls = rng.integers(0, 4, 30)
+    cfg = CacheConfig(0.9, 0.9, sigma_min=2.0)   # empty grey zone
+    rb = simulate(s_emb, s_cls, jnp.asarray(q), jnp.asarray(cls), cfg,
+                  krites=False, capacity=64)
+    rk = simulate(s_emb, s_cls, jnp.asarray(q), jnp.asarray(cls), cfg,
+                  krites=True, capacity=64)
+    assert (np.asarray(rb.served_by) == np.asarray(rk.served_by)).all()
+    assert int(rk.judge_calls) == 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(4, 32))
+def test_prop_tier_capacity_never_exceeded(seed, cap):
+    rng = np.random.default_rng(seed)
+    tier = T.make_dynamic_tier(cap, 4)
+    for i in range(3 * cap):
+        v = rng.standard_normal(4).astype(np.float32)
+        v /= np.linalg.norm(v)
+        if i % 3 == 0:
+            tier = T.upsert(tier, jnp.asarray(v), i, i, now=i,
+                            static_origin=True)
+        else:
+            tier = T.insert(tier, jnp.asarray(v), i, i, now=i)
+        assert int(tier.valid.sum()) <= cap
+    assert int(tier.valid.sum()) == cap

@@ -1,0 +1,120 @@
+"""Checkpointing, restart-on-failure, elastic remesh, compression."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed import checkpoint as ck
+from repro.distributed import compression as comp
+from repro.distributed.fault_tolerance import (HeartbeatMonitor,
+                                               StragglerPolicy,
+                                               run_with_restarts)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 8)),
+            "nested": {"b": jnp.arange(6, dtype=jnp.int32),
+                       "c": [jnp.ones((3,)), jnp.zeros((2, 2))]}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    ck.save(tmp_path, 7, t, extra={"note": "hi"})
+    out = ck.restore(tmp_path, 7, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    t = _tree()
+    path = ck.save(tmp_path, 1, t)
+    victim = next(p for p in path.iterdir() if p.suffix == ".npy")
+    arr = np.load(victim)
+    arr = arr.copy()
+    arr.flat[0] += 1
+    np.save(victim, arr)
+    with pytest.raises(IOError):
+        ck.restore(tmp_path, 1, t)
+
+
+def test_latest_and_prune(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        ck.save(tmp_path, s, t)
+    assert ck.latest_step(tmp_path) == 4
+    ck.prune(tmp_path, keep=2)
+    assert ck.latest_step(tmp_path) == 4
+    assert not (tmp_path / "step_00000001").exists()
+
+
+def test_run_with_restarts_recovers(tmp_path):
+    calls = {"n": 0}
+
+    def step(i, state):
+        calls["n"] += 1
+        if i == 7 and calls["n"] < 9:    # fail once at step 7
+            raise RuntimeError("simulated node failure")
+        return {"x": state["x"] + 1}
+
+    final, report = run_with_restarts(
+        step, {"x": jnp.zeros(())}, n_steps=10,
+        ckpt_dir=str(tmp_path), ckpt_every=2)
+    assert float(final["x"]) == 10
+    assert report.failures == 1 and report.restarts == 1
+
+
+def test_heartbeat_detects_dead():
+    dead = []
+    mon = HeartbeatMonitor(deadline_s=0.05, on_dead=dead.append)
+    mon.beat("w0")
+    mon.beat("w1")
+    import time
+    time.sleep(0.08)
+    mon.beat("w1")
+    newly = mon.check()
+    assert newly == ["w0"] and dead == ["w0"]
+    assert "w0" in mon.dead and "w1" not in mon.dead
+
+
+def test_straggler_redispatch():
+    sp = StragglerPolicy(deadline_s=0.02)
+    sp.started("t1")
+    sp.started("t2")
+    sp.finished("t2")
+    import time
+    time.sleep(0.04)
+    assert sp.stragglers() == ["t1"]
+    assert sp.redispatched == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 2000))
+def test_prop_compression_error_bound(seed, n):
+    """int8 block quantization: |x - roundtrip| <= scale/2 per block."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32)
+                    * rng.uniform(0.01, 100))
+    y = comp.roundtrip(x)
+    q, scale, _ = comp.quantize(x)
+    pad = (-n) % comp.BLOCK
+    bound = np.repeat(np.asarray(scale), comp.BLOCK)[:n] * 0.5 + 1e-6
+    assert (np.abs(np.asarray(x - y)) <= bound).all()
+
+
+def test_error_feedback_reduces_bias():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal((512,)).astype(np.float32))
+    grads = {"w": g}
+    res = comp.init_residual(grads)
+    acc_plain = jnp.zeros_like(g)
+    acc_ef = jnp.zeros_like(g)
+    for _ in range(50):
+        acc_plain = acc_plain + comp.roundtrip(g)
+        qt, res = comp.compress_grads_with_feedback(grads, res)
+        q, s, n = qt["w"]
+        acc_ef = acc_ef + comp.dequantize(q, s, n, g.shape)
+    true = g * 50
+    assert float(jnp.linalg.norm(acc_ef - true)) \
+        <= float(jnp.linalg.norm(acc_plain - true)) + 1e-3

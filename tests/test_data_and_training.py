@@ -1,0 +1,134 @@
+"""Data pipelines, optimizer, train loop, serving engine, embedder."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import smoke_config
+from repro.data.graph_data import NeighborSampler, synthetic_graph
+from repro.data.lm_data import synthetic_lm_batches
+from repro.data.recsys_data import recsys_batches
+from repro.data.tokenizer import ByteTokenizer
+from repro.embedding.embedder import Embedder
+from repro.models.recsys import embedding_bag, embedding_bag_ragged
+from repro.training import optimizer as opt_lib
+from repro.training.train_loop import TrainConfig, lr_schedule
+
+
+def test_tokenizer_roundtrip():
+    tok = ByteTokenizer()
+    for s in ("hello world", "ünïcødé ✓", ""):
+        ids = tok.encode(s)
+        assert tok.decode(ids) == s
+
+
+def test_neighbor_sampler_shapes_and_validity():
+    g = synthetic_graph(200, avg_degree=6, d_feat=8, n_classes=4)
+    s = NeighborSampler(g, fanout=(5, 3))
+    batch = s.sample_batch(np.arange(10))
+    assert batch["feat_l0"].shape == (10, 8)
+    assert batch["feat_l1"].shape == (10, 5, 8)
+    assert batch["feat_l2"].shape == (10, 5, 3, 8)
+    assert batch["labels"].shape == (10,)
+    # sampled neighbors are real in-neighbors (or self for isolated)
+    nbrs = s.sample_neighbors(np.array([0]), 4)
+    lo, hi = g.indptr[0], g.indptr[1]
+    pool = set(g.indices[lo:hi].tolist()) or {0}
+    assert set(nbrs[0].tolist()) <= pool
+
+
+def test_lm_data_is_learnable_mixture():
+    it = synthetic_lm_batches(64, batch=2, seq_len=32)
+    b = next(it)
+    assert b["tokens"].shape == (2, 32)
+    assert (b["labels"][:, :-1] == b["tokens"][:, 1:]).all()
+
+
+def test_recsys_batches_all_kinds():
+    for arch in ("sasrec", "mind", "bst", "wide-deep"):
+        cfg = smoke_config(arch)
+        b = next(recsys_batches(cfg, batch=4))
+        assert all(v.shape[0] == 4 for v in b.values())
+
+
+def test_embedder_clusters_similar_prompts():
+    e = Embedder(d_out=32)
+    a1 = e("can my dog eat honey")
+    a2 = e("hey, can my dog eat honey")
+    b = e("quarterly tax filing deadline")
+    assert float(a1 @ a2) > float(a1 @ b) + 0.15
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_prop_embedding_bag_ragged_matches_fixed(seed):
+    rng = np.random.default_rng(seed)
+    V, d, B, m = 50, 8, 6, 3
+    table = jnp.asarray(rng.standard_normal((V, d)).astype(np.float32))
+    ids = rng.integers(0, V, (B, m))
+    fixed = embedding_bag(table, jnp.asarray(ids))
+    ragged = embedding_bag_ragged(
+        table, jnp.asarray(ids.reshape(-1)),
+        jnp.repeat(jnp.arange(B), m), B)
+    np.testing.assert_allclose(np.asarray(fixed), np.asarray(ragged),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = opt_lib.AdamWConfig(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt_lib.init(params, cfg)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = opt_lib.update(grads, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_grad_clip_bounds_update():
+    cfg = opt_lib.AdamWConfig(lr=1.0, grad_clip=1e-6, weight_decay=0.0)
+    params = {"w": jnp.ones((4,))}
+    state = opt_lib.init(params, cfg)
+    p2, _, gnorm = opt_lib.update({"w": jnp.full((4,), 1e6)}, state,
+                                  params, cfg)
+    assert float(gnorm) > 1e5
+
+
+def test_lr_schedule_shape():
+    t = TrainConfig(n_steps=100, warmup_steps=10, lr=1.0,
+                    lr_min_ratio=0.1)
+    assert float(lr_schedule(t, jnp.int32(0))) == 0.0
+    assert abs(float(lr_schedule(t, jnp.int32(10))) - 1.0) < 1e-6
+    assert float(lr_schedule(t, jnp.int32(100))) < 0.11
+
+
+def test_train_loop_loss_decreases_and_restores(tmp_path):
+    from repro.models import transformer as tr
+    from repro.training.train_loop import train
+    cfg = dataclasses.replace(
+        smoke_config("qwen3-1.7b"), dtype="float32", n_layers=2)
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    data = synthetic_lm_batches(cfg.vocab_size, 4, 32)
+    data = ({"tokens": jnp.asarray(b["tokens"]),
+             "labels": jnp.asarray(b["labels"])} for b in data)
+    tcfg = TrainConfig(n_steps=12, ckpt_dir=str(tmp_path), ckpt_every=6,
+                       log_every=4, lr=5e-3, warmup_steps=2)
+    loss_fn = lambda p, b: tr.train_loss(cfg, p, b, vocab_chunk_seq=16)
+    params, _, hist = train(loss_fn, params, data, tcfg)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    # restart path: a new call resumes from step 12 (no steps run)
+    from repro.distributed.checkpoint import latest_step
+    assert latest_step(tmp_path) == 12
+
+
+def test_serving_engine_generates():
+    from repro.serving.engine import LLMEngine
+    eng = LLMEngine(smoke_config("qwen3-1.7b"), max_len=48)
+    outs = eng.generate_batch(["hello", "world!"], max_new_tokens=4)
+    assert len(outs) == 2
+    assert eng.stats.prefills == 2
+    # deterministic greedy decode
+    outs2 = eng.generate_batch(["hello", "world!"], max_new_tokens=4)
+    assert outs == outs2

@@ -1,0 +1,98 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles: shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.simsearch.kernel import simsearch
+from repro.kernels.simsearch.ops import cosine_topk
+from repro.kernels.simsearch.ref import simsearch_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.embedding_bag.kernel import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+@pytest.mark.parametrize("B,N,d,k,tile", [
+    (4, 256, 32, 1, 128),
+    (8, 1000, 64, 4, 256),     # padding path
+    (16, 512, 128, 8, 64),
+    (1, 64, 16, 2, 64),
+])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_simsearch_sweep(B, N, d, k, tile, dtype):
+    key = jax.random.PRNGKey(B * N + k)
+    q = jax.random.normal(key, (B, d)).astype(dtype)
+    c = jax.random.normal(jax.random.fold_in(key, 1), (N, d)).astype(dtype)
+    v_ref, i_ref = simsearch_ref(q, c, k)
+    v, i = cosine_topk(q, c, k=k, tile_n=tile, force="interpret")
+    np.testing.assert_allclose(np.asarray(v), np.asarray(v_ref),
+                               rtol=2e-2 if dtype == "bfloat16" else 1e-5,
+                               atol=1e-5)
+    if dtype == "float32":
+        assert bool(jnp.all(i == i_ref))
+
+
+@pytest.mark.parametrize("B,S,H,K,D,bq,bk", [
+    (1, 128, 2, 2, 32, 32, 32),
+    (2, 256, 4, 2, 64, 64, 128),
+    (1, 128, 8, 1, 16, 128, 32),   # MQA, single q block
+])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_flash_attention_sweep(B, S, H, K, D, bq, bk, dtype):
+    key = jax.random.PRNGKey(S + H)
+    q = jax.random.normal(key, (B, S, H, D)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (B, S, K, D)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (B, S, K, D)).astype(dtype)
+    out = flash_attention(q, k, v, bq=bq, bk=bk, interpret=True)
+    ref = flash_attention_ref(q, k, v)
+    tol = 3e-2 if dtype == "bfloat16" else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,S,H,K,D,bs", [
+    (2, 128, 4, 2, 32, 32),
+    (3, 256, 8, 2, 32, 64),
+    (1, 64, 2, 1, 64, 64),
+])
+def test_decode_attention_sweep(B, S, H, K, D, bs):
+    key = jax.random.PRNGKey(S)
+    q = jax.random.normal(key, (B, H, D))
+    kc = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, D))
+    vc = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, D))
+    lens = jnp.asarray(
+        np.random.default_rng(0).integers(1, S + 1, B), jnp.int32)
+    out = decode_attention(q, kc, vc, lens, bs=bs, interpret=True)
+    ref = decode_attention_ref(q, kc, vc, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("V,d,B,m", [(64, 32, 4, 3), (512, 128, 16, 8),
+                                     (100, 16, 1, 1)])
+def test_embedding_bag_sweep(V, d, B, m):
+    key = jax.random.PRNGKey(V + m)
+    table = jax.random.normal(key, (V, d))
+    ids = jax.random.randint(jax.random.fold_in(key, 1), (B, m), 0, V)
+    w = jax.random.uniform(jax.random.fold_in(key, 2), (B, m))
+    out = embedding_bag(table, ids, w, interpret=True)
+    ref = embedding_bag_ref(table, ids, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_simsearch_tie_breaking_lowest_index():
+    """Duplicate corpus rows: kernel must return the lowest index first."""
+    q = jnp.zeros((1, 8)).at[0, 0].set(1.0)
+    near = jnp.zeros((8,)).at[0].set(1.0).at[1].set(0.3)
+    exact = jnp.zeros((8,)).at[0].set(1.0)
+    orth = jnp.zeros((8,)).at[1].set(1.0)
+    c = jnp.stack([near, exact, exact, orth])
+    v, i = cosine_topk(q, c, k=3, tile_n=2, force="interpret")
+    assert [int(x) for x in i[0]] == [1, 2, 0]

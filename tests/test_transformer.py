@@ -1,0 +1,117 @@
+"""LM transformer: decode/prefill consistency, training signal, MoE."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import MoEConfig, smoke_config
+from repro.models import transformer as tr
+from repro.models.moe import moe_ffn_einsum, moe_ffn_sort, router_topk
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "glm4-9b",
+                                  "qwen2-moe-a2.7b"])
+def test_decode_matches_prefill(arch):
+    cfg = dataclasses.replace(smoke_config(arch), dtype="float32")
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    lg, cache = tr.prefill(cfg, params, toks[:, :8], max_len=16)
+    for t in range(8, 16):
+        lg, cache = tr.decode_step(cfg, params, cache, toks[:, t])
+    lg_full, _ = tr.prefill(cfg, params, toks)
+    assert float(jnp.max(jnp.abs(lg - lg_full))) < 1e-4
+
+
+def test_unrolled_variant_matches_scan():
+    cfg = dataclasses.replace(smoke_config("qwen3-1.7b"), dtype="float32")
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    l1 = tr.train_loss(cfg, params, batch, vocab_chunk_seq=16)
+    cfg2 = dataclasses.replace(cfg, scan_layers=False)
+    l2 = tr.train_loss(cfg2, params, batch, vocab_chunk_seq=16)
+    assert abs(float(l1) - float(l2)) < 1e-4
+
+
+def test_train_loss_decreases_tiny_model():
+    cfg = dataclasses.replace(
+        smoke_config("qwen3-1.7b"), dtype="float32", n_layers=2)
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (4, 32), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+
+    @jax.jit
+    def step(p):
+        loss, g = jax.value_and_grad(
+            lambda q: tr.train_loss(cfg, q, batch, vocab_chunk_seq=16))(p)
+        return loss, jax.tree.map(lambda a, b: a - 0.05 * b, p, g)
+
+    losses = []
+    for _ in range(12):
+        loss, params = step(params)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_moe_sort_vs_einsum_vs_pertoken():
+    E, k, d, F, T = 6, 2, 16, 32, 24
+    m = MoEConfig(n_experts=E, top_k=k, d_ff_expert=F,
+                  capacity_factor=100.0, n_groups=1)
+    key = jax.random.PRNGKey(3)
+    p = {"router": jax.random.normal(key, (d, E)),
+         "wg": jax.random.normal(jax.random.fold_in(key, 1), (E, d, F)) * .1,
+         "wu": jax.random.normal(jax.random.fold_in(key, 2), (E, d, F)) * .1,
+         "wd": jax.random.normal(jax.random.fold_in(key, 3), (E, F, d)) * .1}
+    x = jax.random.normal(jax.random.fold_in(key, 4), (T, d))
+    y1, _ = moe_ffn_sort(x, p, m)
+    y2, _ = moe_ffn_einsum(x, p, m)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-5)
+    # per-token oracle
+    idx, w, _ = router_topk(x, p["router"], k)
+    for t in range(0, T, 5):
+        acc = jnp.zeros(d)
+        for j in range(k):
+            e = int(idx[t, j])
+            h = jax.nn.silu(x[t] @ p["wg"][e]) * (x[t] @ p["wu"][e])
+            acc += w[t, j] * (h @ p["wd"][e])
+        np.testing.assert_allclose(np.asarray(y1[t]), np.asarray(acc),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity factor << 1, overflow tokens produce zero output."""
+    E, k, d, F, T = 2, 1, 8, 16, 64
+    m = MoEConfig(n_experts=E, top_k=k, d_ff_expert=F,
+                  capacity_factor=0.25, n_groups=1)
+    key = jax.random.PRNGKey(5)
+    p = {"router": jnp.zeros((d, E)).at[:, 0].set(10.0),  # all -> expert 0
+         "wg": jnp.ones((E, d, F)) * 0.1,
+         "wu": jnp.ones((E, d, F)) * 0.1,
+         "wd": jnp.ones((E, F, d)) * 0.1}
+    x = jax.random.normal(key, (T, d))
+    y, _ = moe_ffn_sort(x, p, m)
+    dropped = np.asarray(jnp.all(y == 0.0, axis=1))
+    assert dropped.sum() >= T // 2      # most tokens over capacity
+
+
+def test_group_local_dispatch_matches_single_group():
+    E, k, d, F, T = 4, 2, 8, 16, 32
+    key = jax.random.PRNGKey(7)
+    p = {"router": jax.random.normal(key, (d, E)),
+         "wg": jax.random.normal(jax.random.fold_in(key, 1), (E, d, F)) * .1,
+         "wu": jax.random.normal(jax.random.fold_in(key, 2), (E, d, F)) * .1,
+         "wd": jax.random.normal(jax.random.fold_in(key, 3), (E, F, d)) * .1}
+    x = jax.random.normal(jax.random.fold_in(key, 4), (T, d))
+    m1 = MoEConfig(n_experts=E, top_k=k, d_ff_expert=F,
+                   capacity_factor=100.0, n_groups=1)
+    m4 = dataclasses.replace(m1, n_groups=4)
+    y1, _ = moe_ffn_sort(x, p, m1)
+    y4, _ = moe_ffn_sort(x, p, m4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y4),
+                               rtol=1e-4, atol=1e-5)
