@@ -1,5 +1,14 @@
 """Paper Figure 2: static-origin coverage vs requests processed (cold
-dynamic cache) for both workloads and both policies."""
+dynamic cache) for both workloads and both policies.
+
+Reproduces: Figure 2 — the cumulative static-origin served fraction as a
+function of requests processed, showing Krites' coverage climbing as
+verified promotions land while the baseline plateaus.
+
+Invocation:
+
+    PYTHONPATH=src python -m benchmarks.run --only fig2 [--scale full]
+"""
 from __future__ import annotations
 
 import numpy as np

@@ -1,5 +1,14 @@
 """§3.4 / §5.1: grey-zone ROI — sweep sigma_min, measure judge volume vs
-recovered static-origin traffic; plus judge rate-limit throttling."""
+recovered static-origin traffic; plus judge rate-limit throttling.
+
+Reproduces: the paper's §3.4 grey-zone-width analysis (judge calls per
+request vs recovered curated traffic as sigma_min sweeps the zone shut)
+and the §5.1(iii) rate-limited-judge ablation.
+
+Invocation:
+
+    PYTHONPATH=src python -m benchmarks.run --only greyzone_roi
+"""
 from __future__ import annotations
 
 from benchmarks.common import default_cfg, get_benchmark, run_policies

@@ -4,6 +4,14 @@ derived TPU roofline estimates for the Pallas target shapes).
 The simsearch row corresponds to the paper's cache-lookup hot path at the
 production static-tier size; TPU time estimates use the §Roofline
 constants (197 TF bf16, 819 GB/s HBM).
+
+Reproduces: no paper table directly — this is the kernel-substrate
+baseline for the serving-path cost model (DESIGN.md §9) used by the
+latency and roofline analyses.
+
+Invocation:
+
+    PYTHONPATH=src python -m benchmarks.run --only kernels
 """
 from __future__ import annotations
 

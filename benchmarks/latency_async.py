@@ -7,6 +7,14 @@ the serving path. Latency model over the simulated stream:
 
 Reports mean/p99 with the paper's point: Krites keeps baseline latency
 exactly; blocking pays judge latency on the critical path.
+
+Reproduces: the §5 "Blocking verified caching" comparison (the paper's
+unchanged-critical-path-latency claim, quantified with the latency model
+above).
+
+Invocation:
+
+    PYTHONPATH=src python -m benchmarks.run --only latency_async
 """
 from __future__ import annotations
 

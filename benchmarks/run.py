@@ -2,6 +2,10 @@
 
     PYTHONPATH=src python -m benchmarks.run [--scale small|full] [--only X]
 
+Registered modules (see each module's docstring for what it reproduces):
+``table1``, ``fig2``, ``greyzone_roi``, ``latency_async``,
+``verifier_fidelity``, ``kernels``, ``serve_batched``.
+
 Prints ``name,us_per_call,derived`` CSV rows (derived = remaining fields
 as compact JSON) and writes results/benchmarks.json.
 """
@@ -23,12 +27,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig2, greyzone_roi, kernels_bench,
-                            latency_async, table1, verifier_fidelity)
+                            latency_async, serve_batched, table1,
+                            verifier_fidelity)
     modules = {
         "table1": table1, "fig2": fig2, "greyzone_roi": greyzone_roi,
         "latency_async": latency_async,
         "verifier_fidelity": verifier_fidelity,
         "kernels": kernels_bench,
+        "serve_batched": serve_batched,
     }
     if args.only:
         keep = set(args.only.split(","))

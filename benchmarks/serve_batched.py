@@ -1,0 +1,111 @@
+"""Batched vs scalar live serving path: requests/sec and p50/p99 latency.
+
+Reproduces: no single paper table — this measures the repo's batched
+serving-path extension (DESIGN.md §7) that keeps the paper's critical-path
+contract (embed -> top-k -> threshold check, §2) while amortizing every
+fast primitive over a micro-batch, the scaling direction the paper's
+"unchanged critical path" claim depends on under heavy traffic.
+
+Method: the same synthetic request stream (prompt -> precomputed trace
+embedding, constant-time backend) is served once through scalar
+``BaselinePolicy.serve`` and once through ``serve_batch`` at several batch
+sizes; both paths produce identical per-request decisions (asserted in
+tests/test_serve_batch.py), so the ratio is pure serving-path overhead.
+
+Invocation:
+
+    PYTHONPATH=src python -m benchmarks.run --only serve_batched
+    PYTHONPATH=src python -m benchmarks.serve_batched        # standalone
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import BaselinePolicy
+from repro.core.tiers import CacheConfig, make_static_tier
+from repro.data.synth_traces import LMARENA_LIKE, build_benchmark
+
+BATCH_SIZES = (8, 32)
+
+
+def _setup(n_requests: int):
+    spec = dataclasses.replace(LMARENA_LIKE, n_requests=8000,
+                               n_classes=400)
+    bench = build_benchmark(spec)
+    n = min(n_requests, len(bench.eval_cls))
+    emb = bench.eval_emb[:n]
+    prompts = [f"q{i}" for i in range(n)]
+    table = {p: emb[i] for i, p in enumerate(prompts)}
+    metas = [{"cls": int(bench.eval_cls[i])} for i in range(n)]
+    tier = make_static_tier(jnp.asarray(bench.static_emb),
+                            jnp.asarray(bench.static_cls))
+    answers = [f"curated-{int(c)}" for c in bench.static_cls]
+    d = bench.static_emb.shape[1]
+
+    def policy():
+        return BaselinePolicy(
+            CacheConfig(0.88, 0.88, capacity=2048), tier, answers,
+            embed_fn=lambda p: table[p],
+            backend_fn=lambda p: f"gen({p})", d=d,
+            embed_batch_fn=lambda ps: np.stack([table[p] for p in ps]),
+            backend_batch_fn=lambda ps: [f"gen({p})" for p in ps])
+
+    return prompts, metas, policy
+
+
+def _pcts(lat):
+    lat = np.asarray(lat)
+    return (round(1e3 * float(np.percentile(lat, 50)), 3),
+            round(1e3 * float(np.percentile(lat, 99)), 3))
+
+
+def run(scale: str = "small"):
+    n = 1024 if scale == "small" else 8000
+    prompts, metas, mk_policy = _setup(n)
+    rows = []
+
+    # scalar reference path
+    pol = mk_policy()
+    pol.serve(prompts[0], metas[0])          # warm the jit caches
+    lat = []
+    t0 = time.perf_counter()
+    for p, m in zip(prompts, metas):
+        s = time.perf_counter()
+        pol.serve(p, m)
+        lat.append(time.perf_counter() - s)
+    scalar_wall = time.perf_counter() - t0
+    scalar_rps = n / scalar_wall
+    p50, p99 = _pcts(lat)
+    rows.append({"name": "serve_batched/scalar",
+                 "us_per_call": round(1e6 * scalar_wall / n, 2),
+                 "requests_per_s": round(scalar_rps, 1),
+                 "p50_ms": p50, "p99_ms": p99})
+
+    for bs in BATCH_SIZES:
+        pol = mk_policy()
+        pol.serve_batch(prompts[:bs], metas[:bs])   # warm the jit caches
+        pol = mk_policy()
+        lat = []
+        t0 = time.perf_counter()
+        for i in range(0, n, bs):
+            s = time.perf_counter()
+            pol.serve_batch(prompts[i:i + bs], metas[i:i + bs])
+            lat += [time.perf_counter() - s] * min(bs, n - i)
+        wall = time.perf_counter() - t0
+        rps = n / wall
+        p50, p99 = _pcts(lat)
+        rows.append({"name": f"serve_batched/batch{bs}",
+                     "us_per_call": round(1e6 * wall / n, 2),
+                     "requests_per_s": round(rps, 1),
+                     "speedup_vs_scalar": round(rps / scalar_rps, 2),
+                     "p50_ms": p50, "p99_ms": p99})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

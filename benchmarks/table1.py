@@ -1,5 +1,14 @@
 """Paper Table 1: static-origin served fraction, baseline vs Krites,
-plus the Figure-1a hit-composition check (total hit rate unchanged)."""
+plus the Figure-1a hit-composition check (total hit rate unchanged).
+
+Reproduces: Table 1 (both synthetic workloads, tuned thresholds from
+scripts/calibrate.py) and the Figure-1a invariant that Krites leaves the
+total hit rate and the direct static hit rate unchanged.
+
+Invocation:
+
+    PYTHONPATH=src python -m benchmarks.run --only table1 [--scale full]
+"""
 from __future__ import annotations
 
 from benchmarks.common import default_cfg, get_benchmark, run_policies

@@ -6,6 +6,13 @@ post-hoc flipping approvals with probability eps_fa / eps_fr using the
 same deterministic hash scheme as core.judge.NoisyOracleJudge, re-running
 the simulation with the flipped equivalence labels for promoted pairs.
 Implemented as a sweep over eps using a modified class-label channel.
+
+Reproduces: the §5 verifier-fidelity bound (added cache error
+<= eps_fa * promoted traffic) as an eps sweep.
+
+Invocation:
+
+    PYTHONPATH=src python -m benchmarks.run --only verifier_fidelity
 """
 from __future__ import annotations
 

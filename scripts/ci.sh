@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Tier-1 CI: full test suite + a short benchmark smoke.
+#
+#     bash scripts/ci.sh
+#
+# Mirrors what the README documents: the repo must pass
+# `PYTHONPATH=src python -m pytest -x -q` and the benchmark harness must
+# produce rows end to end (serve_batched is the fastest module, ~30s).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== benchmark smoke (serve_batched, small scale) =="
+python -m benchmarks.run --scale small --only serve_batched
+
+echo "== CI OK =="

@@ -94,6 +94,35 @@ class VerifyAndPromotePool:
                 self._inflight.pop(key, None)
             return False
 
+    def submit_many(self, items) -> int:
+        """Bulk submit for the batched serving path: one lock acquisition
+        for a whole micro-batch of grey-zone triggers. ``items`` is an
+        iterable of (key, payload); returns the number enqueued. Same
+        dedup / token-bucket / drop-on-full semantics as :meth:`submit`,
+        applied per item in order."""
+        accepted = []
+        with self._lock:
+            for key, payload in items:
+                self.stats.submitted += 1
+                if key in self._inflight:
+                    self.stats.deduped += 1
+                    continue
+                if not self._take_token():
+                    self.stats.rate_limited += 1
+                    continue
+                self._inflight[key] = time.monotonic()
+                accepted.append(VerifyTask(key, payload))
+        n = 0
+        for task in accepted:
+            try:
+                self.q.put_nowait(task)
+                n += 1
+            except queue.Full:
+                with self._lock:
+                    self.stats.dropped_full += 1
+                    self._inflight.pop(task.key, None)
+        return n
+
     def _take_token(self) -> bool:
         now = time.monotonic()
         self._tokens = min(self._tokens + (now - self._last_refill)

@@ -8,20 +8,64 @@ These wrap the functional JAX tiers for production serving (the trace
 simulator in core/simulate.py is the batched twin used for evaluation).
 The backend, embedder and judge are injected callables, so the same policy
 fronts an LLM engine, a GNN, or a recsys scorer (DESIGN.md §5).
+
+Two serving entry points share one decision procedure:
+
+- ``serve(prompt)``        — scalar path, one request at a time;
+- ``serve_batch(prompts)`` — the batched hot path (DESIGN.md §7): embeds
+  the whole micro-batch at once, does ONE fused static-tier lookup via
+  ``kernels/simsearch`` (Pallas on TPU, jnp reference elsewhere) and ONE
+  masked dynamic-tier lookup against the tier snapshot, then resolves rows
+  in request order so results are identical to calling ``serve`` per row.
+  Misses go to the backend as a single batch (amortized prefill),
+  grey-zone triggers are bulk-enqueued to the VerifyAndPromote pool, and
+  all tier mutations land as one fused scatter at the end of the batch.
+
+The policy keeps small host-side mirrors of the dynamic tier's decision
+metadata (valid / last_used / static_origin) so per-row bookkeeping (LRU
+slot choice, provenance reads) never costs a device round-trip; the
+functional JAX tier stays the source of truth for state that is looked
+up, checkpointed, or sharded. Every mutation path (scalar serve, batch
+serve, async promote) updates both under ``dyn_lock``.
 """
 from __future__ import annotations
 
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, List, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import tiers as T
 from repro.core.async_queue import VerifyAndPromotePool
 from repro.index.flat import l2_normalize
+
+_BIG = np.int64(2**30)   # host twin of tiers.BIG (LRU key for invalid rows)
+
+
+@jax.jit
+def _bulk_insert(dyn: T.DynamicTier, V, slots, rows, ts, cls
+                 ) -> T.DynamicTier:
+    """Scatter a batch's inserts into the tier in one fused update.
+    Callers pad ``slots``/``rows``/``ts``/``cls`` to a fixed length by
+    repeating their first entry (identical values, so the duplicate
+    scatter is benign) — keeping shapes static across batches."""
+    return dyn._replace(
+        emb=dyn.emb.at[slots].set(V[rows]),
+        cls=dyn.cls.at[slots].set(cls),
+        answer_ref=dyn.answer_ref.at[slots].set(jnp.int32(-1)),
+        static_origin=dyn.static_origin.at[slots].set(False),
+        valid=dyn.valid.at[slots].set(True),
+        written_at=dyn.written_at.at[slots].set(ts))
+
+
+def _pad_to(arr: np.ndarray, n: int) -> np.ndarray:
+    if len(arr) == n:
+        return arr
+    return np.concatenate([arr, np.repeat(arr[:1], n - len(arr), axis=0)])
 
 
 @dataclass
@@ -40,23 +84,46 @@ class BaselinePolicy:
 
     def __init__(self, cfg: T.CacheConfig, static_tier: T.StaticTier,
                  static_answers, embed_fn: Callable,
-                 backend_fn: Callable, d: int):
+                 backend_fn: Callable, d: int, *,
+                 embed_batch_fn: Optional[Callable] = None,
+                 backend_batch_fn: Optional[Callable] = None):
         self.cfg = cfg
         self.static = static_tier
         self.static_answers = static_answers
         self.embed_fn = embed_fn
         self.backend_fn = backend_fn
+        self.embed_batch_fn = embed_batch_fn
+        self.backend_batch_fn = backend_batch_fn
         self.dyn = T.make_dynamic_tier(cfg.capacity, d)
         self.dyn_answers: list = [None] * cfg.capacity
         self.dyn_lock = threading.Lock()
         self.t = 0
         self.events: list = []
+        # host-side copies of the (immutable) static-tier metadata: the
+        # serving loop indexes these per request, which must not cost a
+        # device round-trip each time
+        self._static_ref_np = np.asarray(static_tier.answer_ref)
+        self._static_cls_np = np.asarray(static_tier.cls)
+        # host mirrors of the dynamic tier's decision metadata
+        self._valid_np = np.zeros(cfg.capacity, bool)
+        self._last_used_np = np.zeros(cfg.capacity, np.int64)
+        self._static_origin_np = np.zeros(cfg.capacity, bool)
+        self._dyn_lookup_batch = jax.jit(T.dynamic_lookup_batch)
+        self._touch_many = jax.jit(T.touch_many)
 
     def _serve_static(self, idx: int):
-        return self.static_answers[int(self.static.answer_ref[idx])]
+        return self.static_answers[int(self._static_ref_np[idx])]
 
-    # -- hook for Krites (no-op in the baseline) ---------------------------
+    def _host_lru_slot(self) -> int:
+        """Host twin of tiers._lru_slot over the mirrored metadata."""
+        key = np.where(self._valid_np, self._last_used_np, -_BIG)
+        return int(key.argmin())
+
+    # -- hooks for Krites (no-ops in the baseline) -------------------------
     def _after_static_miss(self, prompt, v, h_idx, s_static, res, meta):
+        return
+
+    def _after_static_miss_batch(self, rows) -> None:
         return
 
     def serve(self, prompt: str, meta: Optional[dict] = None) -> ServeResult:
@@ -76,8 +143,9 @@ class BaselinePolicy:
             s_d, j = float(s_d), int(j)
             if s_d >= self.cfg.tau_dynamic:
                 self.dyn = T.touch(self.dyn, j, self.t)
+                self._last_used_np[j] = self.t
                 res = ServeResult(self.dyn_answers[j], "dynamic",
-                                  bool(self.dyn.static_origin[j]), s_d,
+                                  bool(self._static_origin_np[j]), s_d,
                                   time.monotonic() - t0)
             else:
                 res = None
@@ -85,9 +153,12 @@ class BaselinePolicy:
         if res is None:
             answer = self.backend_fn(prompt)   # outside the lock
             with self.dyn_lock:
-                slot = int(T._lru_slot(self.dyn))
-                self.dyn = T.insert(
-                    self.dyn, v, (meta or {}).get("cls", -1), -1, self.t)
+                slot = self._host_lru_slot()
+                self.dyn = T._write(
+                    self.dyn, slot, v,
+                    jnp.int32((meta or {}).get("cls", -1)),
+                    jnp.int32(-1), jnp.asarray(False), self.t)
+                self._mirror_write(slot, self.t, static_origin=False)
                 self.dyn_answers[slot] = answer
             res = ServeResult(answer, "backend", False, s_d,
                               time.monotonic() - t0)
@@ -97,6 +168,204 @@ class BaselinePolicy:
         # backend call alike); non-blocking, off the critical path.
         self._after_static_miss(prompt, v, h_idx, s_s, res, meta)
         return res
+
+    def _mirror_write(self, slot: int, now: int, static_origin: bool):
+        self._valid_np[slot] = True
+        self._last_used_np[slot] = now
+        self._static_origin_np[slot] = static_origin
+
+    # ------------------------------------------------------------------
+    # batched serving path
+    # ------------------------------------------------------------------
+
+    def _embed_batch(self, prompts: Sequence[str]) -> jax.Array:
+        if self.embed_batch_fn is not None:
+            emb = self.embed_batch_fn(prompts)
+        else:
+            batch = getattr(self.embed_fn, "batch", None)
+            emb = batch(list(prompts)) if batch is not None else \
+                np.stack([np.asarray(self.embed_fn(p)) for p in prompts])
+        return l2_normalize(jnp.asarray(emb, jnp.float32))
+
+    def _backend_batch(self, prompts: List[str]) -> List[object]:
+        if self.backend_batch_fn is not None:
+            return list(self.backend_batch_fn(prompts))
+        return [self.backend_fn(p) for p in prompts]
+
+    def _snap_best_excluding(self, snap: T.DynamicTier, v, exclude):
+        """Masked top-1 over the batch-start snapshot with ``exclude``d
+        slots removed — the rare repair when an intra-batch insert evicts
+        the snapshot argmax of a later row."""
+        excl = np.zeros(self.cfg.capacity, bool)
+        excl[list(exclude)] = True
+        sims = jnp.where(jnp.logical_and(snap.valid,
+                                         jnp.asarray(~excl)),
+                         snap.emb @ v, -jnp.inf)
+        j = int(jnp.argmax(sims))
+        return float(sims[j]), j
+
+    def serve_batch(self, prompts: Sequence[str],
+                    metas: Optional[Sequence[Optional[dict]]] = None
+                    ) -> List[ServeResult]:
+        """Serve a micro-batch. Equivalent, request for request, to
+        calling :meth:`serve` on each prompt in order (same answers,
+        served_by, static_origin and promotions); the fast primitives are
+        batched instead of per-row.
+
+        The dynamic-tier lock is held for the whole batch (backend call
+        included), so concurrent promotions land between batches — they
+        are asynchronous anyway, and this keeps the in-batch decision
+        sequence deterministic.
+
+        If the batched backend call raises, the batch's inserts are
+        rolled back (no answerless cache entries) and the exception
+        propagates; hits decided before the failure keep their LRU
+        touches, mirroring the scalar path's failure behavior.
+        """
+        if not prompts:
+            return []
+        t0 = time.monotonic()
+        B = len(prompts)
+        metas = list(metas) if metas is not None else [None] * B
+        # pad the batch to a power-of-two bucket: device shapes (and the
+        # compiled executables behind them) stay fixed across the varying
+        # batch sizes a router produces
+        Bp = 1 << (B - 1).bit_length()
+        V = self._embed_batch(prompts)                        # (B, d)
+        if Bp != B:
+            V = jnp.pad(V, ((0, Bp - B), (0, 0)))
+        V_np = np.asarray(V)[:B]
+        s_sb, h_idxb = jax.device_get(
+            T.static_lookup_batch(self.static, V))            # fused top-1
+        s_sb, h_idxb = s_sb[:B], h_idxb[:B]
+
+        results: List[Optional[ServeResult]] = [None] * B
+        grey_rows = []          # static-miss rows, for the Krites hook
+        ev0 = len(self.events)  # rollback point: a failed batch serves
+        with self.dyn_lock:     # nobody, so it must record no events
+            # one masked lookup against the dynamic-tier snapshot; the
+            # tier object is immutable, so `snap` stays the batch-start
+            # state while mutations accumulate on the host
+            snap = self.dyn
+            s_db, j_db = jax.device_get(self._dyn_lookup_batch(snap, V))
+            s_db, j_db = s_db[:B], j_db[:B]
+
+            written: dict = {}   # slot -> backend row that wrote it last
+            w_meta: dict = {}    # slot -> (row, t, cls) for the bulk write
+            saved: dict = {}     # slot -> pre-write mirror state (rollback)
+            touched: set = set()
+            backend_rows: List[int] = []
+            backend_slots: List[int] = []
+            deferred = []        # (row, producer backend row)
+
+            for i in range(B):
+                self.t += 1
+                ti = self.t
+                ss_i, h_i = float(s_sb[i]), int(h_idxb[i])
+                if ss_i >= self.cfg.tau_static:
+                    results[i] = ServeResult(self._serve_static(h_i),
+                                             "static", True, ss_i, 0.0)
+                    self.events.append(("static", True))
+                    continue
+
+                # dynamic candidate = snapshot best, repaired for slots
+                # overwritten this batch, merged with intra-batch inserts
+                s_d, j = float(s_db[i]), int(j_db[i])
+                if j in written:
+                    s_d, j = self._snap_best_excluding(snap, V[i], written)
+                for slot, wrow in written.items():
+                    sw = float(V_np[i] @ V_np[wrow])
+                    if sw > s_d or (sw == s_d and slot < j):
+                        s_d, j = sw, slot
+
+                if s_d >= self.cfg.tau_dynamic:
+                    self._last_used_np[j] = ti
+                    touched.add(j)
+                    if j in written:  # answer arrives with the batch call
+                        origin = False
+                        results[i] = ServeResult(None, "dynamic", False,
+                                                 s_d, 0.0)
+                        deferred.append((i, written[j]))
+                    else:
+                        origin = bool(self._static_origin_np[j])
+                        results[i] = ServeResult(self.dyn_answers[j],
+                                                 "dynamic", origin, s_d,
+                                                 0.0)
+                    self.events.append(("dynamic", origin))
+                else:
+                    slot = self._host_lru_slot()
+                    if slot not in saved:
+                        saved[slot] = (bool(self._valid_np[slot]),
+                                       int(self._last_used_np[slot]),
+                                       bool(self._static_origin_np[slot]),
+                                       self.dyn_answers[slot])
+                    self._mirror_write(slot, ti, static_origin=False)
+                    self.dyn_answers[slot] = None
+                    written[slot] = i
+                    w_meta[slot] = (i, ti,
+                                    (metas[i] or {}).get("cls", -1))
+                    backend_rows.append(i)
+                    backend_slots.append(slot)
+                    results[i] = ServeResult(None, "backend", False, s_d,
+                                             0.0)
+                    self.events.append(("backend", False))
+                grey_rows.append((prompts[i], V_np[i], h_i, ss_i,
+                                  results[i], metas[i], ti))
+
+            # backend first: a failed batch must not commit its inserts
+            # (the scalar path likewise only inserts after the backend
+            # returns), so a backend outage can't poison the cache with
+            # answerless entries
+            answers: List[object] = []
+            if backend_rows:
+                try:
+                    # one batched backend call amortizes prefill
+                    answers = self._backend_batch(
+                        [prompts[i] for i in backend_rows])
+                except Exception:
+                    for slot, st in saved.items():
+                        (self._valid_np[slot], self._last_used_np[slot],
+                         self._static_origin_np[slot],
+                         self.dyn_answers[slot]) = st
+                    del self.events[ev0:]
+                    self._apply_batch_writes(V, {}, touched, Bp)
+                    raise
+            self._apply_batch_writes(V, w_meta, touched, Bp)
+            if backend_rows:
+                for slot, i, ans in zip(backend_slots, backend_rows,
+                                        answers):
+                    self.dyn_answers[slot] = ans
+                    results[i].answer = ans
+                for i, producer in deferred:
+                    results[i].answer = results[producer].answer
+
+        lat = time.monotonic() - t0
+        for r in results:
+            r.latency_s = lat
+        self._after_static_miss_batch(grey_rows)
+        return results  # type: ignore[return-value]
+
+    def _apply_batch_writes(self, V: jax.Array, w_meta: dict,
+                            touched: set, B: int) -> None:
+        """Push a batch's accumulated inserts + LRU touches to the JAX
+        tier as one fused scatter per field (vs one dispatch per row).
+        Index arrays are padded to the batch's power-of-two bucket so
+        shapes — and hence compiled executables — stay fixed even when a
+        router produces ragged batch sizes."""
+        dyn = self.dyn
+        if w_meta:
+            slots = np.fromiter(w_meta.keys(), np.int64, len(w_meta))
+            rows = np.asarray([w_meta[s][0] for s in slots])
+            ts = np.asarray([w_meta[s][1] for s in slots], np.int32)
+            cls = np.asarray([w_meta[s][2] for s in slots], np.int32)
+            dyn = _bulk_insert(dyn, V, _pad_to(slots, B), _pad_to(rows, B),
+                               _pad_to(ts, B), _pad_to(cls, B))
+        upd = set(w_meta) | touched
+        if upd:
+            sl = np.fromiter(upd, np.int64, len(upd))
+            dyn = self._touch_many(dyn, _pad_to(sl, B),
+                                   _pad_to(self._last_used_np[sl], B))
+        self.dyn = dyn
 
     def stats(self) -> dict:
         n = max(len(self.events), 1)
@@ -117,35 +386,55 @@ class KritesPolicy(BaselinePolicy):
     def __init__(self, cfg: T.CacheConfig, static_tier: T.StaticTier,
                  static_answers, embed_fn, backend_fn, judge_fn, d: int,
                  n_workers: int = 2,
-                 judge_rate_per_s: float = float("inf")):
+                 judge_rate_per_s: float = float("inf"), *,
+                 embed_batch_fn: Optional[Callable] = None,
+                 backend_batch_fn: Optional[Callable] = None):
         super().__init__(cfg, static_tier, static_answers, embed_fn,
-                         backend_fn, d)
+                         backend_fn, d, embed_batch_fn=embed_batch_fn,
+                         backend_batch_fn=backend_batch_fn)
         self.pool = VerifyAndPromotePool(
             judge_fn=lambda payload: judge_fn(**payload["judge_args"]),
             promote_fn=self._promote,
             n_workers=n_workers,
             rate_per_s=judge_rate_per_s)
 
-    def _after_static_miss(self, prompt, v, h_idx, s_static, res, meta):
+    def _grey_submission(self, prompt, v, h_idx, s_static, res, meta,
+                         enq_t):
+        """Alg. 2 grey-zone gate -> (key, payload) for the pool, or None."""
         if not (self.cfg.sigma_min <= s_static < self.cfg.tau_static):
-            return
+            return None
         if self.cfg.dedup and res.served_by == "dynamic" \
                 and res.static_origin:
-            return  # a promoted pointer already serves this query
-        fp = hash(np.asarray(v).tobytes())
-        self.pool.submit(
-            key=(fp, h_idx),
-            payload={
-                "v": np.asarray(v),
-                "h_idx": h_idx,
-                "enq_t": self.t,
-                "judge_args": {
-                    "q_cls": (meta or {}).get("cls", -1),
-                    "h_cls": int(self.static.cls[h_idx]),
-                    "q_text": prompt or "",
-                    "h_text": "", "answer": "",
-                },
-            })
+            return None  # a promoted pointer already serves this query
+        va = np.asarray(v)
+        fp = hash(va.tobytes())
+        return ((fp, h_idx), {
+            "v": va,
+            "h_idx": h_idx,
+            "enq_t": enq_t,
+            "judge_args": {
+                "q_cls": (meta or {}).get("cls", -1),
+                "h_cls": int(self._static_cls_np[h_idx]),
+                "q_text": prompt or "",
+                "h_text": "", "answer": "",
+            },
+        })
+
+    def _after_static_miss(self, prompt, v, h_idx, s_static, res, meta):
+        sub = self._grey_submission(prompt, v, h_idx, s_static, res, meta,
+                                    self.t)
+        if sub is not None:
+            self.pool.submit(*sub)
+
+    def _after_static_miss_batch(self, rows) -> None:
+        items = []
+        for prompt, v, h_idx, s_static, res, meta, enq_t in rows:
+            sub = self._grey_submission(prompt, v, h_idx, s_static, res,
+                                        meta, enq_t)
+            if sub is not None:
+                items.append(sub)
+        if items:
+            self.pool.submit_many(items)
 
     def _promote(self, payload: dict):
         """Auxiliary overwrite: upsert the curated static answer under the
@@ -156,12 +445,13 @@ class KritesPolicy(BaselinePolicy):
         with self.dyn_lock:
             s_d, j = T.dynamic_lookup(self.dyn, v)
             dup = float(s_d) >= 0.9999
-            slot = int(j) if dup else int(T._lru_slot(self.dyn))
+            slot = int(j) if dup else self._host_lru_slot()
             self.dyn = T._write(
                 self.dyn, slot, v,
-                jnp.int32(int(self.static.cls[h_idx])),
-                jnp.int32(int(self.static.answer_ref[h_idx])),
+                jnp.int32(int(self._static_cls_np[h_idx])),
+                jnp.int32(int(self._static_ref_np[h_idx])),
                 jnp.asarray(True), payload["enq_t"])
+            self._mirror_write(slot, payload["enq_t"], static_origin=True)
             self.dyn_answers[slot] = answer
 
     def stats(self) -> dict:

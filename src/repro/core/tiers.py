@@ -76,6 +76,28 @@ def dynamic_lookup(tier: DynamicTier, q: jax.Array):
     return sims[idx], idx.astype(jnp.int32)
 
 
+def static_lookup_batch(tier: StaticTier, q: jax.Array):
+    """Batched twin of :func:`static_lookup` for the serving hot path.
+
+    q (B, d) normalized -> (best sims (B,), best idx (B,)). One fused
+    top-1 pass over the whole micro-batch via ``kernels/simsearch``
+    (Pallas kernel on TPU, jnp reference elsewhere — see DESIGN.md §7).
+    """
+    from repro.kernels.simsearch.ops import cosine_topk
+    vals, idx = cosine_topk(q, tier.emb, k=1)
+    return vals[:, 0], idx[:, 0].astype(jnp.int32)
+
+
+def dynamic_lookup_batch(tier: DynamicTier, q: jax.Array):
+    """Batched twin of :func:`dynamic_lookup`: one masked matmul for the
+    whole micro-batch. q (B, d) -> (best sims (B,), best idx (B,))."""
+    sims = q @ tier.emb.T
+    sims = jnp.where(tier.valid[None, :], sims, -jnp.inf)
+    idx = jnp.argmax(sims, axis=1)
+    return (jnp.take_along_axis(sims, idx[:, None], 1)[:, 0],
+            idx.astype(jnp.int32))
+
+
 # ---------------------------------------------------------------------------
 # mutations (all functional)
 # ---------------------------------------------------------------------------
@@ -131,6 +153,17 @@ def upsert(tier: DynamicTier, q, cls, answer_ref, now,
 def touch(tier: DynamicTier, slot, now) -> DynamicTier:
     """LRU touch on hit."""
     return tier._replace(last_used=tier.last_used.at[slot].set(now))
+
+
+def touch_many(tier: DynamicTier, slots, nows) -> DynamicTier:
+    """Batched LRU touch: one scatter for a whole micro-batch of hits.
+
+    Callers must deduplicate ``slots`` (keep the latest ``now`` per slot)
+    — XLA scatter order is unspecified for duplicate indices.
+    """
+    return tier._replace(
+        last_used=tier.last_used.at[jnp.asarray(slots, jnp.int32)].set(
+            jnp.asarray(nows, jnp.int32)))
 
 
 def evict_expired(tier: DynamicTier, now, ttl: int) -> DynamicTier:

@@ -17,8 +17,22 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+try:                                   # jax >= 0.5: public API, `check_vma`
+    from jax import shard_map as _shard_map
+    _CHECK_KW = "check_vma"
+except ImportError:                    # jax 0.4.x: experimental, `check_rep`
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, **kw):
+    """Version-portable shard_map: translates the replication-check kwarg
+    (`check_vma` on new jax, `check_rep` on 0.4.x)."""
+    if "check_vma" in kw and _CHECK_KW != "check_vma":
+        kw[_CHECK_KW] = kw.pop("check_vma")
+    return _shard_map(f, **kw)
 
 from repro.kernels.simsearch.ops import cosine_topk
 

@@ -1,3 +1,4 @@
 from repro.serving.engine import BatchingFrontend, LLMEngine
+from repro.serving.router import CacheRouter
 
-__all__ = ["BatchingFrontend", "LLMEngine"]
+__all__ = ["BatchingFrontend", "CacheRouter", "LLMEngine"]

@@ -7,11 +7,10 @@ at full scale on TPU; smoke configs on CPU for the examples/tests).
 """
 from __future__ import annotations
 
-import queue
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from dataclasses import dataclass
+from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -99,53 +98,30 @@ class LLMEngine:
         return self.generate_batch([prompt], max_new_tokens)[0]
 
 
-@dataclass
-class _Pending:
-    prompt: str
-    done: threading.Event = field(default_factory=threading.Event)
-    result: Optional[str] = None
-
-
 class BatchingFrontend:
     """Continuous-batching-lite: coalesce concurrent requests into
-    engine batches (max_batch or max_wait_ms, whichever first)."""
+    engine batches (max_batch or max_wait_ms, whichever first). The
+    queue/collector machinery is the shared ``_MicroBatcher`` — the same
+    one ``CacheRouter`` uses over ``Policy.serve_batch``."""
 
     def __init__(self, engine: LLMEngine, max_batch: int = 8,
                  max_wait_ms: float = 5.0, max_new_tokens: int = 32):
+        from repro.serving.router import _MicroBatcher
         self.engine = engine
-        self.max_batch = max_batch
-        self.max_wait = max_wait_ms / 1e3
         self.max_new = max_new_tokens
-        self.q: "queue.Queue[_Pending]" = queue.Queue()
-        self._stop = threading.Event()
-        self._worker = threading.Thread(target=self._run, daemon=True)
-        self._worker.start()
+        self._mb = _MicroBatcher(self._serve, max_batch, max_wait_ms / 1e3,
+                                 name="batching-frontend")
 
     def submit(self, prompt: str, timeout_s: float = 60.0) -> str:
-        p = _Pending(prompt)
-        self.q.put(p)
+        p = self._mb.submit(prompt)
         p.done.wait(timeout_s)
         return p.result if p.result is not None else ""
 
-    def _run(self):
-        while not self._stop.is_set():
-            try:
-                first = self.q.get(timeout=0.1)
-            except queue.Empty:
-                continue
-            batch = [first]
-            t0 = time.monotonic()
-            while len(batch) < self.max_batch \
-                    and time.monotonic() - t0 < self.max_wait:
-                try:
-                    batch.append(self.q.get_nowait())
-                except queue.Empty:
-                    time.sleep(0.001)
-            results = self.engine.generate_batch(
-                [p.prompt for p in batch], self.max_new)
-            for p, r in zip(batch, results):
-                p.result = r
-                p.done.set()
+    def _serve(self, batch):
+        results = self.engine.generate_batch(
+            [p.prompt for p in batch], self.max_new)
+        for p, r in zip(batch, results):
+            p.result = r
 
     def stop(self):
-        self._stop.set()
+        self._mb.stop()

@@ -1,0 +1,190 @@
+"""Micro-batching request router in front of a cache policy.
+
+``CacheRouter`` is the serving front door (DESIGN.md §7): concurrent
+callers ``submit()`` prompts; a collector thread coalesces them into
+micro-batches (``max_batch`` requests or ``max_wait_ms``, whichever first)
+and drives ``policy.serve_batch`` — so the embed, the fused static-tier
+top-k, the masked dynamic lookup and the backend prefill are all amortized
+across in-flight requests, while per-request semantics stay identical to
+the scalar ``policy.serve`` path.
+
+The router also owns the serving telemetry: per-tier hit counters, batch
+occupancy, error counts, and end-to-end (enqueue -> answer) latency
+percentiles.
+
+The queue + collector machinery lives in ``_MicroBatcher`` and is shared
+with :class:`repro.serving.engine.BatchingFrontend`, which batches raw
+engine requests the same way.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+
+@dataclass
+class _PendingRequest:
+    prompt: str
+    meta: Optional[dict] = None
+    enq_t: float = field(default_factory=time.monotonic)
+    done: threading.Event = field(default_factory=threading.Event)
+    result: object = None
+    error: Optional[BaseException] = None
+    latency_s: float = 0.0
+
+
+class _MicroBatcher:
+    """Queue + collector thread coalescing submissions into batches.
+
+    ``serve_fn(batch)`` receives a list of :class:`_PendingRequest` and
+    fills each ``result``; if it raises, every request in the batch gets
+    the exception on ``error`` instead. Completion events are always set,
+    so callers never hang on a failed batch.
+    """
+
+    def __init__(self, serve_fn: Callable[[List[_PendingRequest]], None],
+                 max_batch: int, max_wait_s: float,
+                 name: str = "micro-batcher"):
+        self.serve_fn = serve_fn
+        self.max_batch = max_batch
+        self.max_wait = max_wait_s
+        self.q: "queue.Queue[_PendingRequest]" = queue.Queue()
+        self._stop = threading.Event()
+        self._worker = threading.Thread(target=self._run, daemon=True,
+                                        name=name)
+        self._worker.start()
+
+    def submit(self, prompt: str,
+               meta: Optional[dict] = None) -> _PendingRequest:
+        p = _PendingRequest(prompt, meta)
+        self.q.put(p)
+        return p
+
+    def _run(self):
+        while not self._stop.is_set():
+            try:
+                first = self.q.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            batch = [first]
+            t0 = time.monotonic()
+            while len(batch) < self.max_batch \
+                    and time.monotonic() - t0 < self.max_wait:
+                try:
+                    batch.append(self.q.get_nowait())
+                except queue.Empty:
+                    time.sleep(0.0005)
+            try:
+                self.serve_fn(batch)
+            except Exception as e:  # noqa: BLE001 — surface, don't strand
+                for p in batch:
+                    p.error = e
+            finally:
+                now = time.monotonic()
+                for p in batch:
+                    p.latency_s = now - p.enq_t
+                    p.done.set()
+
+    def stop(self):
+        self._stop.set()
+        self._worker.join(timeout=2.0)
+
+
+class CacheRouter:
+    """Request queue + micro-batcher over ``policy.serve_batch``."""
+
+    def __init__(self, policy, max_batch: int = 32,
+                 max_wait_ms: float = 2.0, latency_window: int = 100_000):
+        self.policy = policy
+        self._lock = threading.Lock()
+        self._tier_counts = {"static": 0, "dynamic": 0, "backend": 0}
+        self._static_origin = 0
+        self._requests = 0
+        # latency percentiles come from a bounded window so a long-lived
+        # router neither leaks memory nor sorts its whole history
+        self._latencies: deque = deque(maxlen=latency_window)
+        self._batches = 0
+        self._batched_requests = 0
+        self._errors = 0
+        self._last_error = ""
+        self._mb = _MicroBatcher(self._serve, max_batch,
+                                 max_wait_ms / 1e3, name="cache-router")
+
+    # -- client side -------------------------------------------------------
+    def submit(self, prompt: str, meta: Optional[dict] = None,
+               timeout_s: float = 60.0):
+        """Enqueue one request and block until its ServeResult is ready.
+        Returns None if the batch failed (see ``stats()['errors']``) or
+        the timeout elapsed."""
+        p = self._mb.submit(prompt, meta)
+        p.done.wait(timeout_s)
+        return p.result
+
+    def submit_many(self, prompts: Sequence[str],
+                    metas: Optional[Sequence[Optional[dict]]] = None,
+                    timeout_s: float = 60.0):
+        """Enqueue a pre-formed group; blocks until every result is in.
+
+        Unlike :meth:`submit` from N threads, this hands the collector the
+        whole group at once, so it batches without waiting ``max_wait``.
+        """
+        metas = list(metas) if metas is not None else [None] * len(prompts)
+        pending = [self._mb.submit(p, m) for p, m in zip(prompts, metas)]
+        for p in pending:
+            p.done.wait(timeout_s)
+        return [p.result for p in pending]
+
+    # -- collector callback ------------------------------------------------
+    def _serve(self, batch: List[_PendingRequest]):
+        try:
+            results = self.policy.serve_batch(
+                [p.prompt for p in batch], [p.meta for p in batch])
+        except Exception as e:  # noqa: BLE001 — count, then fail the batch
+            with self._lock:
+                self._errors += len(batch)
+                self._last_error = repr(e)
+            raise
+        now = time.monotonic()
+        with self._lock:
+            self._batches += 1
+            self._batched_requests += len(batch)
+            self._requests += len(batch)
+            for p, r in zip(batch, results):
+                p.result = r
+                self._latencies.append(now - p.enq_t)
+                self._tier_counts[r.served_by] = \
+                    self._tier_counts.get(r.served_by, 0) + 1
+                self._static_origin += bool(r.static_origin)
+
+    # -- telemetry ---------------------------------------------------------
+    def stats(self) -> dict:
+        import numpy as np
+        with self._lock:
+            lat = np.asarray(self._latencies, np.float64)
+            n = max(self._requests, 1)
+            out = {
+                "requests": self._requests,
+                "batches": self._batches,
+                "mean_batch_size": round(
+                    self._batched_requests / max(self._batches, 1), 2),
+                "static_hit_rate": self._tier_counts["static"] / n,
+                "dynamic_hit_rate": self._tier_counts["dynamic"] / n,
+                "backend_rate": self._tier_counts["backend"] / n,
+                "static_origin_rate": self._static_origin / n,
+                "errors": self._errors,
+            }
+            if self._last_error:
+                out["last_error"] = self._last_error
+            if lat.size:
+                out["p50_latency_ms"] = round(
+                    1e3 * float(np.percentile(lat, 50)), 3)
+                out["p99_latency_ms"] = round(
+                    1e3 * float(np.percentile(lat, 99)), 3)
+        return out
+
+    def stop(self):
+        self._mb.stop()

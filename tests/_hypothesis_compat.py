@@ -1,0 +1,39 @@
+"""Run the suite with or without ``hypothesis`` installed.
+
+Property-based tests import ``given, settings, st`` from this shim instead
+of from ``hypothesis`` directly. When hypothesis is available they run as
+normal property tests; when it is missing they are collected but skipped,
+and every example-based test in the same module still runs (a plain
+``pytest.importorskip`` at module scope would skip those too).
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies``: every attribute is a
+        callable returning None (the decorated test never runs)."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    def given(*_a, **_k):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped(*args, **kwargs):
+                pass  # pragma: no cover
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco

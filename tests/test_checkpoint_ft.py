@@ -3,7 +3,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.distributed import checkpoint as ck
 from repro.distributed import compression as comp
