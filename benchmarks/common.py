@@ -6,7 +6,8 @@ import time
 
 import jax.numpy as jnp
 
-from repro.core.simulate import simulate, summarize
+from repro.core.simulate import (simulate, simulate_sweep, summarize,
+                                 summarize_sweep, sweep_from_configs)
 from repro.core.tiers import CacheConfig
 from repro.data.synth_traces import (LMARENA_LIKE, SEARCH_LIKE,
                                      build_benchmark)
@@ -42,6 +43,28 @@ def run_policies(bench, cfg: CacheConfig, policies=("baseline", "krites")):
         s["us_per_req"] = 1e6 * s["wall_s"] / s["requests"]
         out[pol] = (res, s)
     return out
+
+
+def run_policy_sweep(bench, cfgs, krites):
+    """Evaluate many (CacheConfig, krites) variants over one trace in a
+    single ``simulate_sweep`` dispatch (DESIGN.md §10).
+
+    ``krites`` is a bool or a per-config list. Returns (per-config
+    summaries, shared wall seconds, us per simulated request summed over
+    all configs)."""
+    t0 = time.time()
+    res = simulate_sweep(jnp.asarray(bench.static_emb),
+                         jnp.asarray(bench.static_cls),
+                         jnp.asarray(bench.eval_emb),
+                         jnp.asarray(bench.eval_cls),
+                         sweep_from_configs(cfgs, krites))
+    rows = summarize_sweep(res)
+    wall = time.time() - t0
+    us = 1e6 * wall / (len(cfgs) * bench.eval_emb.shape[0])
+    for r in rows:
+        r["wall_s"] = round(wall, 2)
+        r["us_per_req"] = us
+    return rows, wall, us
 
 
 def default_cfg(name: str, **kw) -> CacheConfig:

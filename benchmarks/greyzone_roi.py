@@ -5,27 +5,39 @@ Reproduces: the paper's §3.4 grey-zone-width analysis (judge calls per
 request vs recovered curated traffic as sigma_min sweeps the zone shut)
 and the §5.1(iii) rate-limited-judge ablation.
 
+The entire grid — 1 baseline + 6 sigma_min points + 3 judge rates — runs
+as a single ``simulate_sweep`` dispatch (DESIGN.md §10).
+
 Invocation:
 
     PYTHONPATH=src python -m benchmarks.run --only greyzone_roi
 """
 from __future__ import annotations
 
-from benchmarks.common import default_cfg, get_benchmark, run_policies
+import dataclasses
+
+from benchmarks.common import default_cfg, get_benchmark, run_policy_sweep
+
+SIGMAS = (0.0, 0.3, 0.5, 0.6, 0.7, 0.8)
+RATES = (1.0, 0.2, 0.05)
 
 
 def run(scale: str = "small", wl: str = "lmarena_like"):
     bench = get_benchmark(wl, scale)
+    base_cfg = default_cfg(wl)
+    cfgs = ([base_cfg]
+            + [dataclasses.replace(base_cfg, sigma_min=s) for s in SIGMAS]
+            + [dataclasses.replace(base_cfg, judge_rate=r) for r in RATES])
+    krites = [False] + [True] * (len(SIGMAS) + len(RATES))
+    sums, _, us = run_policy_sweep(bench, cfgs, krites)
+
+    base = sums[0]
     rows = []
-    base = run_policies(bench, default_cfg(wl),
-                        policies=("baseline",))["baseline"][1]
-    for sigma in (0.0, 0.3, 0.5, 0.6, 0.7, 0.8):
-        cfg = default_cfg(wl, sigma_min=sigma)
-        k = run_policies(bench, cfg, policies=("krites",))["krites"][1]
+    for sigma, k in zip(SIGMAS, sums[1:1 + len(SIGMAS)]):
         recovered = k["static_origin_rate"] - base["static_origin_rate"]
         rows.append({
             "name": f"greyzone_roi/{wl}/sigma={sigma}",
-            "us_per_call": round(k["us_per_req"], 2),
+            "us_per_call": round(us, 2),
             "judge_calls": k["judge_calls"],
             "judge_calls_per_req": round(
                 k["judge_calls"] / k["requests"], 4),
@@ -35,12 +47,10 @@ def run(scale: str = "small", wl: str = "lmarena_like"):
                 recovered * k["requests"] / max(k["judge_calls"], 1), 3),
         })
     # throttled judge (rate limit budget), paper §5.1 (iii)
-    for rate in (1.0, 0.2, 0.05):
-        cfg = default_cfg(wl, judge_rate=rate)
-        k = run_policies(bench, cfg, policies=("krites",))["krites"][1]
+    for rate, k in zip(RATES, sums[1 + len(SIGMAS):]):
         rows.append({
             "name": f"greyzone_roi/{wl}/rate={rate}",
-            "us_per_call": round(k["us_per_req"], 2),
+            "us_per_call": round(us, 2),
             "judge_calls": k["judge_calls"],
             "enq_dropped": k["enq_dropped"],
             "static_origin_rate": round(k["static_origin_rate"], 4),

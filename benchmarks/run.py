@@ -4,7 +4,7 @@
 
 Registered modules (see each module's docstring for what it reproduces):
 ``table1``, ``fig2``, ``greyzone_roi``, ``latency_async``,
-``verifier_fidelity``, ``kernels``, ``serve_batched``.
+``verifier_fidelity``, ``kernels``, ``serve_batched``, ``sweep``.
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = remaining fields
 as compact JSON) and writes results/benchmarks.json.
@@ -27,7 +27,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig2, greyzone_roi, kernels_bench,
-                            latency_async, serve_batched, table1,
+                            latency_async, serve_batched, sweep, table1,
                             verifier_fidelity)
     modules = {
         "table1": table1, "fig2": fig2, "greyzone_roi": greyzone_roi,
@@ -35,6 +35,7 @@ def main() -> None:
         "verifier_fidelity": verifier_fidelity,
         "kernels": kernels_bench,
         "serve_batched": serve_batched,
+        "sweep": sweep,
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -1,0 +1,121 @@
+"""Multi-config sweep: one vmapped-sweep dispatch vs the sequential
+per-config simulate loop, plus the threshold-sensitivity surface.
+
+Reproduces: the paper's Figure-3-style threshold analysis (hit rate and
+error rate over the tau_static x tau_dynamic plane) and quantifies the
+speedup that makes dense grids cheap (DESIGN.md §10): the sweep shares
+one hoisted static-tier lookup and one compiled program across all
+configs, while the sequential loop re-runs both per config. Target:
+>= 5x wall-clock at 64 configs on CPU (measured ~6-10x; grows with
+static-tier size and trace length).
+
+Both paths are warmed first, so the reported speedup is steady-state
+compute, not compilation. The sequential baseline benefits from the
+same traced-config refactor (no per-config recompilation) — against the
+pre-refactor static-argument jit it would also recompile 64 times.
+
+Invocation:
+
+    PYTHONPATH=src python -m benchmarks.run --only sweep
+    PYTHONPATH=src python -m benchmarks.sweep --configs 16   # CI smoke
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import TSTAR, get_benchmark
+from repro.core.simulate import simulate, simulate_sweep, sweep_grid
+from repro.core.tiers import CacheConfig
+
+# capacity regime for the grid benchmark: small dynamic tier (the
+# capacity-pressure corner of the paper's ablations) keeps the sequential
+# loop overhead-bound, which is exactly the regime dense sweeps target
+CAPACITY = 64
+
+
+def _grid(wl: str, side: int, capacity: int):
+    t = TSTAR[wl]
+    taus = np.round(np.linspace(t - 0.06, t + 0.08, side), 4)
+    base = CacheConfig(tau_static=t, tau_dynamic=t, sigma_min=0.0,
+                       capacity=capacity, judge_latency=64)
+    return taus, base, sweep_grid(base, krites=True,
+                                  tau_static=taus, tau_dynamic=taus)
+
+
+def run(scale: str = "small", wl: str = "lmarena_like", side: int = 8,
+        capacity: int = CAPACITY, sequential: bool = True):
+    bench = get_benchmark(wl, scale)
+    taus, base, sweep = _grid(wl, side, capacity)
+    K = sweep.n
+    args = (jnp.asarray(bench.static_emb), jnp.asarray(bench.static_cls),
+            jnp.asarray(bench.eval_emb), jnp.asarray(bench.eval_cls))
+    n_req = bench.eval_emb.shape[0]
+
+    # --- one-dispatch sweep (warm, then timed) ---
+    t0 = time.time()
+    res = simulate_sweep(*args, sweep)
+    jax.block_until_ready(res)
+    sweep_cold = time.time() - t0
+    t0 = time.time()
+    res = simulate_sweep(*args, sweep)
+    jax.block_until_ready(res)
+    sweep_s = time.time() - t0
+
+    # --- sequential per-config loop (warm, then timed) ---
+    seq_s = float("nan")
+    if sequential:
+        cfg0 = dataclasses.replace(base, tau_static=float(taus[0]),
+                                   tau_dynamic=float(taus[0]))
+        jax.block_until_ready(simulate(*args, cfg0, krites=True))
+        t0 = time.time()
+        for ts in taus:
+            for td in taus:
+                cfg = dataclasses.replace(base, tau_static=float(ts),
+                                          tau_dynamic=float(td))
+                r = simulate(*args, cfg, krites=True)
+        jax.block_until_ready(r)
+        seq_s = time.time() - t0
+
+    # --- threshold-sensitivity surface (Figure-3-style) ---
+    sb = np.asarray(res.served_by)                     # (K, N)
+    hit = (sb != 0).mean(axis=1)
+    err = ((sb != 0) & ~np.asarray(res.correct)).mean(axis=1)
+    rows = [{
+        "name": f"sweep/{wl}/K={K}",
+        "us_per_call": round(1e6 * sweep_s / (K * n_req), 3),
+        "configs": K,
+        "requests": n_req,
+        "capacity": capacity,
+        "sweep_wall_s": round(sweep_s, 3),
+        "sweep_compile_s": round(sweep_cold - sweep_s, 3),
+        "sequential_wall_s": round(seq_s, 3),
+        "speedup": round(seq_s / sweep_s, 2),
+    }, {
+        "name": f"sweep/{wl}/surface",
+        "us_per_call": 0,
+        "tau_grid": taus.tolist(),
+        "hit_rate": np.round(hit.reshape(side, side), 4).tolist(),
+        "error_rate": np.round(err.reshape(side, side), 4).tolist(),
+    }]
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--configs", type=int, default=64,
+                    help="grid size (squared down to side*side)")
+    ap.add_argument("--scale", choices=["small", "full"], default="small")
+    ap.add_argument("--wl", default="lmarena_like")
+    ap.add_argument("--no-sequential", action="store_true",
+                    help="skip the sequential baseline (smoke mode)")
+    a = ap.parse_args()
+    side = max(2, int(np.sqrt(a.configs)))
+    for row in run(scale=a.scale, wl=a.wl, side=side,
+                   sequential=not a.no_sequential):
+        print(row)

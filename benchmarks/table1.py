@@ -11,7 +11,7 @@ Invocation:
 """
 from __future__ import annotations
 
-from benchmarks.common import default_cfg, get_benchmark, run_policies
+from benchmarks.common import default_cfg, get_benchmark, run_policy_sweep
 
 PAPER = {  # from Table 1
     "lmarena_like": {"baseline": 0.082, "krites": 0.194, "gain": 1.365},
@@ -23,9 +23,10 @@ def run(scale: str = "small"):
     rows = []
     for wl in ("lmarena_like", "search_like"):
         bench = get_benchmark(wl, scale)
-        out = run_policies(bench, default_cfg(wl))
-        b = out["baseline"][1]
-        k = out["krites"][1]
+        # baseline and Krites share one sweep dispatch (DESIGN.md §10)
+        cfg = default_cfg(wl)
+        (b, k), _, _ = run_policy_sweep(bench, [cfg, cfg],
+                                        krites=[False, True])
         gain = k["static_origin_rate"] / max(b["static_origin_rate"],
                                              1e-9) - 1
         rows.append({

@@ -1,9 +1,26 @@
-"""Calibration driver: tune t*, run baseline vs Krites, print Table-1 analogue."""
-import sys, time, json
-import numpy as np, jax.numpy as jnp
+"""Calibration driver: tune t*, run baseline vs Krites, print Table-1
+analogue; with ``--sweep``, trace the hit-rate/error Pareto frontier over
+a dense tau_static x tau_dynamic grid in one ``simulate_sweep`` dispatch.
+
+    PYTHONPATH=src python scripts/calibrate.py [workloads...] [--fixed]
+    PYTHONPATH=src python scripts/calibrate.py --sweep [workloads...]
+
+Outputs land in results/table1_full.json / results/sweep_<wl>.json (see
+EXPERIMENTS.md for the measured operating points).
+"""
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
 from repro.data.synth_traces import WORKLOADS, build_benchmark, tune_threshold
-from repro.core.simulate import simulate, summarize
+from repro.core.simulate import (simulate, summarize, simulate_sweep,
+                                 summarize_sweep, sweep_grid)
 from repro.core.tiers import CacheConfig
+
 
 def run(name, capacity=8192, judge_latency=64, tstar=None):
     spec = WORKLOADS[name]
@@ -26,17 +43,73 @@ def run(name, capacity=8192, judge_latency=64, tstar=None):
     print(f"[{name}] static-origin: {out['baseline']['static_origin_rate']:.3f} -> {out['krites']['static_origin_rate']:.3f}  (+{100*gain:.0f}%)  t*={tstar}")
     return out, tstar
 
+
+def pareto(rows):
+    """Non-dominated subset: maximal hit rate per error level."""
+    order = sorted(range(len(rows)),
+                   key=lambda i: (rows[i]["error_rate"],
+                                  -rows[i]["total_hit_rate"]))
+    front, best_hit = [], -1.0
+    for i in order:
+        if rows[i]["total_hit_rate"] > best_hit:
+            best_hit = rows[i]["total_hit_rate"]
+            front.append(i)
+    return front
+
+
+def run_sweep(name, capacity=8192, judge_latency=64, side=8,
+              krites=True, sample=20000):
+    """Dense threshold grid -> per-config metrics + Pareto frontier,
+    one device dispatch for the whole grid (DESIGN.md §10). Like
+    tune_threshold, runs on a prefix sample of the eval stream."""
+    spec = WORKLOADS[name]
+    b = build_benchmark(spec)
+    t = {"lmarena_like": 0.88, "search_like": 0.86}.get(name, 0.88)
+    taus = np.round(np.linspace(t - 0.08, t + 0.08, side), 4)
+    base = CacheConfig(tau_static=t, tau_dynamic=t, capacity=capacity,
+                       judge_latency=judge_latency)
+    sweep = sweep_grid(base, krites=krites, tau_static=taus,
+                       tau_dynamic=taus)
+    t0 = time.time()
+    res = simulate_sweep(jnp.asarray(b.static_emb),
+                         jnp.asarray(b.static_cls),
+                         jnp.asarray(b.eval_emb[:sample]),
+                         jnp.asarray(b.eval_cls[:sample]), sweep)
+    rows = summarize_sweep(res)
+    wall = time.time() - t0
+    grid = [(float(ts), float(td)) for ts in taus for td in taus]
+    for (ts, td), r in zip(grid, rows):
+        r["tau_static"], r["tau_dynamic"] = ts, td
+    front = pareto(rows)
+    print(f"[{name}] swept {len(rows)} configs in {wall:.1f}s "
+          f"({1e3*wall/len(rows):.0f} ms/config incl. compile)")
+    for i in front:
+        r = rows[i]
+        print(f"  pareto: tau_s={r['tau_static']:.3f} "
+              f"tau_d={r['tau_dynamic']:.3f} hit={r['total_hit_rate']:.4f} "
+              f"err={r['error_rate']:.4f} "
+              f"static_origin={r['static_origin_rate']:.4f}")
+    return {"workload": name, "capacity": capacity, "wall_s": wall,
+            "configs": rows, "pareto": front}
+
+
 if __name__ == "__main__":
-    import pathlib
     args = sys.argv[1:]
     fixed = {"lmarena_like": 0.88, "search_like": 0.86}
-    out = {}
     names = [a for a in args if not a.startswith("--")] or list(fixed)
-    for n in names:
-        tstar = fixed.get(n) if "--fixed" in args else None
-        res, t = run(n, tstar=tstar)
-        out[n] = {"tstar": t, **{k: {kk: vv for kk, vv in v.items()}
-                                 for k, v in res.items()}}
     pathlib.Path("results").mkdir(exist_ok=True)
-    pathlib.Path("results/table1_full.json").write_text(json.dumps(out, indent=1))
-    print("wrote results/table1_full.json")
+    if "--sweep" in args:
+        for n in names:
+            out = run_sweep(n)
+            p = pathlib.Path(f"results/sweep_{n}.json")
+            p.write_text(json.dumps(out, indent=1))
+            print(f"wrote {p}")
+    else:
+        out = {}
+        for n in names:
+            tstar = fixed.get(n) if "--fixed" in args else None
+            res, t = run(n, tstar=tstar)
+            out[n] = {"tstar": t, **{k: {kk: vv for kk, vv in v.items()}
+                                     for k, v in res.items()}}
+        pathlib.Path("results/table1_full.json").write_text(json.dumps(out, indent=1))
+        print("wrote results/table1_full.json")

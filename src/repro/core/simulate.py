@@ -1,5 +1,7 @@
 """Trace-driven simulator for Algorithm 1 (baseline) and Algorithm 2
-(Krites), as one jittable ``lax.scan`` over the request stream.
+(Krites), as one jittable ``lax.scan`` over the request stream — plus
+``simulate_sweep``, the vmapped multi-config variant that evaluates an
+entire grid of configs in a single device dispatch (DESIGN.md §10).
 
 Faithful to the paper's evaluation (§4):
 - serving decisions use fixed thresholds tau_static / tau_dynamic;
@@ -7,15 +9,24 @@ Faithful to the paper's evaluation (§4):
   VerifyAndPromote whose judge is the *oracle* over ground-truth
   equivalence classes (approve iff query and static neighbor share a
   class);
-- the async pool is modeled as a delay line: a task enqueued at request t
-  completes at request t + judge_latency (queue depth affects promotion
-  lag only — never the serving decision of the triggering request, which
-  is decided before the queue is touched).
+- the async pool is modeled as a fixed-size pending ring: a task
+  enqueued at request t carries ``due_at = t + judge_latency`` and is
+  completed at the first step >= due_at, at most one completion per step
+  (queue depth affects promotion lag only — never the serving decision
+  of the triggering request, which is decided before the queue is
+  touched).
+
+Every decision input (thresholds, sigma_min, judge rate, capacity,
+latency, the dedup flag, the Krites flag itself) is a *traced* value,
+so one compiled program serves any config, and batching over those
+scalars yields the sweep path. Only array shapes (trace length,
+embedding dim, tier capacity, ring size) are static.
 
 The static-tier lookup is hoisted out of the scan (the static tier is
 immutable) into one batched matmul — on TPU this is the fused
 ``kernels/simsearch`` kernel; the per-step dynamic lookup stays inside the
-scan because the tier mutates.
+scan because the tier mutates. For the sweep the hoisted lookup is shared
+across all configs (it is config-independent).
 
 Outputs both aggregate counters and a per-request event stream (for the
 Figure-2 coverage-vs-requests curves).
@@ -23,43 +34,99 @@ Figure-2 coverage-vs-requests curves).
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+import itertools
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import tiers as T
-from repro.index.flat import l2_normalize
 
 # served-by codes in the event stream
 MISS, STATIC_HIT, DYN_HIT_DYNAMIC, DYN_HIT_PROMOTED = 0, 1, 2, 3
 
 
 class SimState(NamedTuple):
-    dyn: T.DynamicTier
-    # pending VerifyAndPromote delay line (length = judge_latency)
-    p_valid: jax.Array   # (L,) bool
-    p_emb: jax.Array     # (L, d)
-    p_qcls: jax.Array    # (L,) int32
-    p_hcls: jax.Array    # (L,) int32 static neighbor's class
-    p_href: jax.Array    # (L,) int32 static answer handle
-    p_flip: jax.Array    # (L,) bool — noisy-judge false approvals
-    budget: jax.Array    # token bucket for judge rate limiting
+    """Scan carry: every leaf has a leading (K,) config axis.
+
+    The pending VerifyAndPromote queue is a *bit ring* of R slots: bit
+    (k, t mod R) records whether config k enqueued a task at step t. The
+    payload (query embedding, classes, handles, flip bit) is never stored
+    — the task enqueued at step t is exactly request t of the shared
+    trace, so at completion time it is re-gathered from the trace at
+    index t - judge_latency. This keeps the carry small and the per-step
+    ring traffic to one column write + one gather.
+    """
+    dyn: T.DynamicTier   # batched: (K, C, d) / (K, C) leaves
+    ring: jax.Array      # (K, R) bool enqueue bits
+    budget: jax.Array    # (K,) token bucket for judge rate limiting
     t: jax.Array
-    judge_calls: jax.Array
-    judge_approved: jax.Array
-    promotions: jax.Array
-    enq_dropped: jax.Array
+    judge_calls: jax.Array     # (K,)
+    judge_approved: jax.Array  # (K,)
+    promotions: jax.Array      # (K,)
+    enq_dropped: jax.Array     # (K,)
 
 
 class SimResult(NamedTuple):
-    served_by: jax.Array        # (N,) int8 event codes
+    served_by: jax.Array        # (N,) int8 event codes ((K, N) for sweeps)
     correct: jax.Array          # (N,) bool (True for misses too)
     static_origin: jax.Array    # (N,) bool — curated answer served
     judge_calls: jax.Array
     judge_approved: jax.Array
     promotions: jax.Array
     enq_dropped: jax.Array
+
+
+class SweepConfig(NamedTuple):
+    """One row per config; every field is a (K,) array.
+
+    Each scalar maps onto the matching :class:`tiers.CacheConfig` field;
+    ``krites`` is the Algorithm-1-vs-2 switch (the grey-zone trigger),
+    swept like any other knob so baseline and Krites share one dispatch.
+    """
+    tau_static: jax.Array    # (K,) f32
+    tau_dynamic: jax.Array   # (K,) f32
+    sigma_min: jax.Array     # (K,) f32
+    judge_rate: jax.Array    # (K,) f32
+    capacity: jax.Array      # (K,) i32, each <= tier's static max capacity
+    judge_latency: jax.Array  # (K,) i32, each <= static ring size
+    krites: jax.Array        # (K,) bool
+    dedup: jax.Array         # (K,) bool — skip judging on promoted hits
+
+    @property
+    def n(self) -> int:
+        return int(self.tau_static.shape[0])
+
+
+def sweep_from_configs(cfgs: Sequence[T.CacheConfig],
+                       krites) -> SweepConfig:
+    """Pack CacheConfigs (+ per-config or shared ``krites`` flag) into a
+    SweepConfig."""
+    kr = np.broadcast_to(np.asarray(krites, bool), (len(cfgs),))
+    return SweepConfig(
+        tau_static=jnp.asarray([c.tau_static for c in cfgs], jnp.float32),
+        tau_dynamic=jnp.asarray([c.tau_dynamic for c in cfgs],
+                                jnp.float32),
+        sigma_min=jnp.asarray([c.sigma_min for c in cfgs], jnp.float32),
+        judge_rate=jnp.asarray([c.judge_rate for c in cfgs], jnp.float32),
+        capacity=jnp.asarray([c.capacity for c in cfgs], jnp.int32),
+        judge_latency=jnp.asarray([c.judge_latency for c in cfgs],
+                                  jnp.int32),
+        krites=jnp.asarray(kr),
+        dedup=jnp.asarray([c.dedup for c in cfgs], bool),
+    )
+
+
+def sweep_grid(base: T.CacheConfig, krites=True, **axes) -> SweepConfig:
+    """Cartesian product over ``axes`` (CacheConfig field name -> values),
+    every other field taken from ``base``. Row-major: the last axis
+    varies fastest, like ``itertools.product``."""
+    import dataclasses
+    names = list(axes)
+    cfgs = [dataclasses.replace(base, **dict(zip(names, combo)))
+            for combo in itertools.product(*(axes[n] for n in names))]
+    return sweep_from_configs(cfgs, krites)
 
 
 def _static_sims(static_emb: jax.Array, q_emb: jax.Array,
@@ -80,7 +147,482 @@ def _static_sims(static_emb: jax.Array, q_emb: jax.Array,
     return s.reshape(-1)[:n], i.reshape(-1)[:n]
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "krites", "capacity"))
+def _make_batched_tier(K: int, C: int, d: int) -> T.DynamicTier:
+    """K per-config dynamic tiers as one batched struct-of-arrays."""
+    return T.DynamicTier(
+        emb=jnp.zeros((K, C, d), jnp.float32),
+        cls=jnp.zeros((K, C), jnp.int32),
+        answer_ref=jnp.full((K, C), -1, jnp.int32),
+        static_origin=jnp.zeros((K, C), bool),
+        valid=jnp.zeros((K, C), bool),
+        last_used=jnp.zeros((K, C), jnp.int32),
+        written_at=jnp.zeros((K, C), jnp.int32),
+    )
+
+
+def _lru_slots(valid, last_used, cap) -> jax.Array:
+    """Batched :func:`tiers._lru_slot`: first invalid row, else LRU,
+    restricted to rows [0, cap_k) per config. (K,) int32."""
+    C = valid.shape[1]
+    key = jnp.where(valid, last_used, -T.BIG)
+    key = jnp.where(jnp.arange(C)[None, :] < cap[:, None], key, T.BIG)
+    return jnp.argmin(key, axis=1).astype(jnp.int32)
+
+
+def _row_write(dyn: T.DynamicTier, ks, slot, cond, q, cls, ref, so,
+               now) -> T.DynamicTier:
+    """Conditionally write one tier row per config: semantically
+    ``jnp.where(cond, T._write(...), dyn)`` but touching a single row per
+    field (a K-row scatter) instead of copying whole tiers — the
+    difference between O(K*d) and O(K*C*d) write traffic per scan step.
+
+    ``q`` is (K, d) or broadcastable; ``cls``/``ref`` are (K,) or
+    scalar; ``cond``/``slot`` are (K,)."""
+    qk = jnp.broadcast_to(q, dyn.emb.shape[:1] + dyn.emb.shape[2:])
+    cond2 = cond[:, None]
+
+    def upd(arr, new):
+        old = arr[ks, slot]
+        c = cond2 if arr.ndim == 3 else cond
+        return arr.at[ks, slot].set(jnp.where(c, new, old))
+
+    return T.DynamicTier(
+        emb=upd(dyn.emb, qk),
+        cls=upd(dyn.cls, jnp.broadcast_to(jnp.asarray(cls, jnp.int32),
+                                          ks.shape)),
+        answer_ref=upd(dyn.answer_ref,
+                       jnp.broadcast_to(jnp.asarray(ref, jnp.int32),
+                                        ks.shape)),
+        static_origin=upd(dyn.static_origin, so),
+        valid=upd(dyn.valid, True),
+        last_used=upd(dyn.last_used, now),
+        written_at=upd(dyn.written_at, now),
+    )
+
+
+def _scan_core(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
+               tau_s, tau_d, sigma, rate, cap, lat, kr, dd,
+               C: int, R: int) -> SimResult:
+    """All K configs' full-trace scan, in explicit batched form — the
+    general path that supports *per-config* judge_latency (uniform
+    sweeps take :func:`_scan_core_blocked` instead).
+
+    Config scalars arrive as (K,) traced arrays; only shapes (K, C, R,
+    trace length) are static. Each step does one
+    serving lookup (one gemv over the batched tier, shared query) and
+    one promotion-dedup lookup (batched per-config queries). The tier
+    row promoted this step is excluded from the shared pre-write pass
+    and patched back in as one O(d) candidate, which reproduces the
+    post-write argmax exactly (lowest-index tie-break included). See
+    DESIGN.md §10.
+    """
+    N, d = q_emb.shape
+    K = tau_s.shape[0]
+    ks = jnp.arange(K)
+    lat = jnp.clip(jnp.asarray(lat, jnp.int32), 1, R)
+
+    state = SimState(
+        dyn=_make_batched_tier(K, C, d),
+        ring=jnp.zeros((K, R), bool),
+        budget=jnp.full((K,), 1.0, jnp.float32),
+        t=jnp.int32(0),
+        judge_calls=jnp.zeros((K,), jnp.int32),
+        judge_approved=jnp.zeros((K,), jnp.int32),
+        promotions=jnp.zeros((K,), jnp.int32),
+        enq_dropped=jnp.zeros((K,), jnp.int32),
+    )
+
+    def step(st: SimState, xs):
+        q, qc, ss, hc = xs
+        t = st.t
+        dyn = st.dyn
+
+        # ---- 1. async completion due now. The task due at step t is the
+        # one enqueued at t - latency (exactly one candidate per step:
+        # one enqueue per step, constant per-config latency), so its
+        # payload is re-gathered from the shared trace.
+        idx_due = t - lat                                   # (K,)
+        due = jnp.logical_and(st.ring[ks, jnp.mod(idx_due, R)],
+                              idx_due >= 0)
+        src = jnp.clip(idx_due, 0)
+        p_qc, p_hc, p_hr = q_cls[src], h_cls[src], h_idx[src]
+        approve = jnp.logical_and(
+            due, jnp.logical_or(p_qc == p_hc, judge_flip[src]))
+
+        # ---- tier passes: serving sims (shared query) + promotion-dedup
+        # sims (per-config delayed queries) ----
+        emb2 = dyn.emb.reshape(K * C, d)
+        promo_qk = q_emb[src]                               # (K, d)
+        s_serve_raw = (emb2 @ q).reshape(K, C)
+        s_promo_raw = jnp.einsum('kcd,kd->kc', dyn.emb, promo_qk)
+
+        # inlined T.upsert semantics (dedup overwrite + LWW guard) as one
+        # conditional K-row write, on the pre-write tier
+        s_promo = jnp.where(dyn.valid, s_promo_raw, -jnp.inf)
+        j_dup = jnp.argmax(s_promo, axis=1)
+        dup = jnp.take_along_axis(s_promo, j_dup[:, None], 1)[:, 0] \
+            >= 0.9999
+        pslot = jnp.where(dup, j_dup, _lru_slots(dyn.valid,
+                                                 dyn.last_used, cap))
+        stale = jnp.logical_and(dup, dyn.written_at[ks, j_dup] > t)
+        do_promote = jnp.logical_and(approve, ~stale)
+        dyn = _row_write(dyn, ks, pslot, do_promote, promo_qk, p_hc,
+                         p_hr, True, t)
+        judge_calls = st.judge_calls + due.astype(jnp.int32)
+        judge_approved = st.judge_approved + approve.astype(jnp.int32)
+        promotions = st.promotions + approve.astype(jnp.int32)
+
+        # ---- 2. serving path (identical for baseline and Krites).
+        # The shared sims are pre-promotion: mask out the row just
+        # promoted (its sims entry is stale) and compare its fresh
+        # similarity as the one external candidate. Exactly reproduces
+        # argmax over the post-write tier, including first-index
+        # tie-breaking, because the candidate is the only changed row.
+        promoted_col = jnp.logical_and(
+            do_promote[:, None], jnp.arange(C)[None, :] == pslot[:, None])
+        s_serve = jnp.where(jnp.logical_and(dyn.valid, ~promoted_col),
+                            s_serve_raw, -jnp.inf)
+        j0 = jnp.argmax(s_serve, axis=1)
+        s0 = jnp.take_along_axis(s_serve, j0[:, None], 1)[:, 0]
+        patch_sim = promo_qk @ q                            # (K,)
+        cand = jnp.logical_and(
+            do_promote,
+            jnp.logical_or(patch_sim > s0,
+                           jnp.logical_and(patch_sim == s0, pslot < j0)))
+        s_dyn = jnp.where(cand, patch_sim, s0)
+        j_dyn = jnp.where(cand, pslot, j0).astype(jnp.int32)
+
+        static_hit = ss >= tau_s
+        dyn_hit = jnp.logical_and(~static_hit, s_dyn >= tau_d)
+        miss = jnp.logical_and(~static_hit, ~dyn_hit)
+
+        served_cls = jnp.where(static_hit, hc,
+                               jnp.where(dyn_hit, dyn.cls[ks, j_dyn], qc))
+        is_promoted = jnp.logical_and(dyn_hit,
+                                      dyn.static_origin[ks, j_dyn])
+        served_by = jnp.where(
+            static_hit, STATIC_HIT,
+            jnp.where(is_promoted, DYN_HIT_PROMOTED,
+                      jnp.where(dyn_hit, DYN_HIT_DYNAMIC, MISS))
+        ).astype(jnp.int8)
+        correct = served_cls == qc
+        static_origin = jnp.logical_or(static_hit, is_promoted)
+
+        # LRU touch on dynamic hit (single-row conditional update)
+        dyn = dyn._replace(last_used=dyn.last_used.at[ks, j_dyn].set(
+            jnp.where(dyn_hit, t, dyn.last_used[ks, j_dyn])))
+        # baseline write-back on miss (backend answer has the query's class)
+        dyn = _row_write(dyn, ks,
+                         _lru_slots(dyn.valid, dyn.last_used, cap),
+                         miss, q, qc, jnp.int32(-1), False, t)
+
+        # ---- 3. grey-zone trigger (Krites only; off-path) ----
+        grey = jnp.logical_and(ss >= sigma, ss < tau_s)
+        want = jnp.logical_and(grey, kr)
+        # dedup: skip if a promoted pointer already serves this query
+        want = jnp.logical_and(
+            want, ~jnp.logical_and(
+                dd, jnp.logical_and(is_promoted, s_dyn >= tau_d)))
+        budget = jnp.minimum(st.budget + rate, 1e9)
+        can = jnp.logical_and(want, budget >= 1.0)
+        budget = jnp.where(can, budget - 1.0, budget)
+        # enqueue = set bit (k, t mod R); the slot's previous occupant was
+        # consumed at its due step (R >= latency), so plain overwrite
+        ring = st.ring.at[:, jnp.mod(t, R)].set(can)
+
+        new_state = SimState(
+            dyn=dyn, ring=ring, budget=budget, t=t + 1,
+            judge_calls=judge_calls, judge_approved=judge_approved,
+            promotions=promotions,
+            enq_dropped=st.enq_dropped
+            + jnp.logical_and(want, ~can).astype(jnp.int32))
+        return new_state, (served_by, correct, static_origin)
+
+    # the pending-queue payloads (h_idx, judge_flip, classes) are
+    # re-gathered from the closed-over trace at completion time, so the
+    # per-step xs carry only what the serving decision itself reads
+    xs = (q_emb, q_cls, s_static, h_cls)
+    final, (served_by, correct, static_origin) = jax.lax.scan(
+        step, state, xs)
+    # ys stack as (N, K): transpose to the (K, N) config-major layout
+    return SimResult(served_by.T, correct.T, static_origin.T,
+                     final.judge_calls, final.judge_approved,
+                     final.promotions, final.enq_dropped)
+
+
+_BLOCK = 64  # blocked-core window; per-block sims buffer = 2*B*K*C fp32
+
+
+def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
+                       tau_s, tau_d, sigma, rate, cap, lat, kr, dd,
+                       C: int, R: int) -> SimResult:
+    """Blocked variant of :func:`_scan_core` for the common case where
+    every swept config shares one judge_latency.
+
+    The per-step tier pass of the stepwise core is memory-bound: each
+    request re-reads all K*C*d tier embeddings twice (serving + dedup
+    lookup) through a gemv. Here the trace is processed in windows of
+    B = _BLOCK requests and the tier embeddings are read once per
+    window via two gemms:
+
+      snap = [Q_block ; Q_block_delayed] @ tier_snapshot.T   (2B, K*C)
+      QQ   = Qstack @ Qstack.T                               (2B, 2B)
+
+    which is exact because *every row written during a window is a trace
+    element*: a miss inserts the current query q_t, a promotion inserts
+    the delayed query q_{t-latency} (the task enqueued at t-latency IS
+    request t-latency). A per-row registry ``dqi`` records which Qstack
+    row overwrote a tier row this window; a step's true similarity is
+    then QQ[s, dqi] for rewritten rows and snap[s] otherwise, and the
+    full-array argmax keeps the exact lowest-index tie-break of the
+    sequential simulator. Embeddings are materialized once at window end
+    (one masked gather). Per-step work drops from O(K*C*d) to O(K*C),
+    and the gemms run at matmul (not gemv) throughput — this is what
+    buys the sweep its order-of-magnitude over the sequential loop
+    (benchmarks/sweep.py).
+    """
+    N, d = q_emb.shape
+    K = tau_s.shape[0]
+    B = _BLOCK
+    NB = -(-N // B) * B
+    ks = jnp.arange(K)
+    lat0 = jnp.clip(jnp.asarray(lat, jnp.int32)[0], 1, R)
+
+    pad = NB - N
+    q_emb_p = jnp.pad(q_emb, ((0, pad), (0, 0)))
+    q_cls_p = jnp.pad(q_cls, (0, pad))
+    h_cls_p = jnp.pad(h_cls, (0, pad))
+    h_idx_p = jnp.pad(h_idx, (0, pad))
+    flip_p = jnp.pad(judge_flip, (0, pad))
+    ss_p = jnp.pad(s_static, (0, pad), constant_values=-jnp.inf)
+    # front-padded twins so the delayed window t0-lat .. t0+B-1-lat can be
+    # dynamic-sliced with a nonnegative start (R >= lat); the zero rows
+    # are only addressed while nothing is due (idx_due < 0)
+    q_del_src = jnp.concatenate([jnp.zeros((R, d), q_emb.dtype), q_emb_p])
+    qc_del_src = jnp.concatenate([jnp.zeros((R,), jnp.int32), q_cls_p])
+    hc_del_src = jnp.concatenate([jnp.zeros((R,), jnp.int32), h_cls_p])
+    hr_del_src = jnp.concatenate([jnp.zeros((R,), jnp.int32), h_idx_p])
+    fl_del_src = jnp.concatenate([jnp.zeros((R,), bool), flip_p])
+
+    state = SimState(
+        dyn=_make_batched_tier(K, C, d),
+        ring=jnp.zeros((K, R), bool),
+        budget=jnp.full((K,), 1.0, jnp.float32),
+        t=jnp.int32(0),
+        judge_calls=jnp.zeros((K,), jnp.int32),
+        judge_approved=jnp.zeros((K,), jnp.int32),
+        promotions=jnp.zeros((K,), jnp.int32),
+        enq_dropped=jnp.zeros((K,), jnp.int32),
+    )
+
+    iota_c = jnp.arange(C)[None, :]
+
+    def block(st: SimState, xs):
+        qb, qcb, ssb, hcb = xs               # (B, ...) current window
+        t0 = st.t
+        dyn = st.dyn
+
+        # delayed window (promotion payloads), sliced once per block
+        start = t0 - lat0 + R
+        q_del = jax.lax.dynamic_slice(q_del_src, (start, 0), (B, d))
+        p_qc = jax.lax.dynamic_slice(qc_del_src, (start,), (B,))
+        p_hc = jax.lax.dynamic_slice(hc_del_src, (start,), (B,))
+        p_hr = jax.lax.dynamic_slice(hr_del_src, (start,), (B,))
+        p_fl = jax.lax.dynamic_slice(fl_del_src, (start,), (B,))
+
+        qstack = jnp.concatenate([qb, q_del])            # (2B, d)
+        snap = (qstack @ dyn.emb.reshape(K * C, d).T
+                ).reshape(2 * B, K, C)
+        qq = qstack @ qstack.T                           # (2B, 2B)
+
+        # window-start snapshots (read-only inside the window). The only
+        # per-step (K, C) carries are `key` (the LRU ordering) and `dqi`
+        # (which Qstack row rewrote a tier row this window, -1 if none);
+        # everything else about a rewritten row — validity, class,
+        # provenance, write time, embedding — is *derived from dqi* at
+        # read time and materialized once at window end. Mutating a
+        # (K, C) carry costs a full copy per step on CPU, so carrying two
+        # instead of seven is most of the blocked core's speedup.
+        valid0, cls0, so0, wa0 = (dyn.valid, dyn.cls, dyn.static_origin,
+                                  dyn.written_at)
+        key0 = jnp.where(iota_c < cap[:, None],
+                         jnp.where(valid0, dyn.last_used, -T.BIG), T.BIG)
+
+        def wa_of(dqi_row, wa_snap):
+            """Current written_at of gathered rows: window writes happen
+            at step t0 + (dqi mod B)."""
+            return jnp.where(dqi_row >= 0, t0 + jnp.mod(dqi_row, B),
+                             wa_snap)
+
+        def step(carry, sxs):
+            key, dqi, ring, budget, jc, ja, pr, drop = carry
+            (s_idx, qc, ss, hc, snap_cur, snap_del, qq_cur, qq_del,
+             pqc, phc, phr, pfl) = sxs
+            t = t0 + s_idx
+            active = t < N
+            written = dqi >= 0
+            dq = jnp.clip(dqi, 0)
+            valid = jnp.logical_or(valid0, written)
+
+            # ---- 1. async completion due now (= request t - latency) --
+            idx_due = t - lat0
+            due = jnp.logical_and(
+                ring[:, jnp.mod(idx_due, R)],
+                jnp.logical_and(idx_due >= 0, active))
+            approve = jnp.logical_and(
+                due, jnp.logical_or(pqc == phc, pfl))
+
+            # promotion-dedup lookup on the combined sims (T.upsert
+            # semantics: near-dup overwrite + LWW guard). The LRU argmin
+            # rides in the same fused reduction as a -key lane: int32
+            # keys here are {-BIG, lu <= N < 2^24, BIG}, all exact in
+            # f32, and argmax(-key) keeps argmin's first-index tie-break.
+            s_promo = jnp.where(valid,
+                                jnp.where(written, qq_del[dq], snap_del),
+                                -jnp.inf)
+            both = jnp.stack([s_promo, -key.astype(jnp.float32)], 1)
+            jj = jnp.argmax(both, axis=2).astype(jnp.int32)   # (K, 2)
+            j_dup = jj[:, 0]
+            dup = jnp.take_along_axis(s_promo, j_dup[:, None], 1)[:, 0] \
+                >= 0.9999
+            pslot = jnp.where(dup, j_dup, jj[:, 1])
+            stale = jnp.logical_and(
+                dup, wa_of(dqi[ks, j_dup], wa0[ks, j_dup]) > t)
+            do_promote = jnp.logical_and(approve, ~stale)
+            p_hot = jnp.logical_and(do_promote[:, None],
+                                    iota_c == pslot[:, None])
+            key = jnp.where(p_hot, t, key)
+            dqi = jnp.where(p_hot, B + s_idx, dqi)
+            written = dqi >= 0
+            dq = jnp.clip(dqi, 0)
+            valid = jnp.logical_or(valid0, written)
+            jc = jc + due.astype(jnp.int32)
+            ja = ja + approve.astype(jnp.int32)
+            pr = pr + approve.astype(jnp.int32)
+
+            # ---- 2. serving path (sees this step's promotion: dqi was
+            # updated above, so the promoted row reads QQ, not snap) ----
+            s_serve = jnp.where(valid,
+                                jnp.where(written, qq_cur[dq], snap_cur),
+                                -jnp.inf)
+            j_dyn = jnp.argmax(s_serve, axis=1).astype(jnp.int32)
+            s_dyn = jnp.take_along_axis(s_serve, j_dyn[:, None], 1)[:, 0]
+
+            static_hit = ss >= tau_s
+            dyn_hit = jnp.logical_and(~static_hit, s_dyn >= tau_d)
+            miss = jnp.logical_and(
+                active, jnp.logical_and(~static_hit, ~dyn_hit))
+            dyn_hit = jnp.logical_and(dyn_hit, active)
+
+            # winning row's class/provenance, derived from dqi: window
+            # rows carry the writing request's payload
+            dqi_j = dqi[ks, j_dyn]
+            w_j = jnp.mod(dqi_j, B)
+            cls_j = jnp.where(dqi_j < 0, cls0[ks, j_dyn],
+                              jnp.where(dqi_j < B, qcb[jnp.clip(w_j, 0)],
+                                        p_hc[w_j]))
+            so_j = jnp.where(dqi_j < 0, so0[ks, j_dyn], dqi_j >= B)
+
+            served_cls = jnp.where(static_hit, hc,
+                                   jnp.where(dyn_hit, cls_j, qc))
+            is_promoted = jnp.logical_and(dyn_hit, so_j)
+            served_by = jnp.where(
+                static_hit, STATIC_HIT,
+                jnp.where(is_promoted, DYN_HIT_PROMOTED,
+                          jnp.where(dyn_hit, DYN_HIT_DYNAMIC, MISS))
+            ).astype(jnp.int8)
+            correct = served_cls == qc
+            static_origin = jnp.logical_or(static_hit, is_promoted)
+
+            # LRU touch, then write-back on miss
+            key = jnp.where(jnp.logical_and(dyn_hit[:, None],
+                                            iota_c == j_dyn[:, None]),
+                            t, key)
+            islot = jnp.argmin(key, axis=1).astype(jnp.int32)
+            i_hot = jnp.logical_and(miss[:, None],
+                                    iota_c == islot[:, None])
+            key = jnp.where(i_hot, t, key)
+            dqi = jnp.where(i_hot, s_idx, dqi)
+
+            # ---- 3. grey-zone trigger ----
+            grey = jnp.logical_and(ss >= sigma, ss < tau_s)
+            want = jnp.logical_and(jnp.logical_and(grey, kr), active)
+            # dedup: skip if a promoted pointer already serves this query
+            want = jnp.logical_and(
+                want, ~jnp.logical_and(
+                    dd, jnp.logical_and(is_promoted, s_dyn >= tau_d)))
+            new_budget = jnp.minimum(budget + rate, 1e9)
+            can = jnp.logical_and(want, new_budget >= 1.0)
+            new_budget = jnp.where(can, new_budget - 1.0, new_budget)
+            budget = jnp.where(active, new_budget, budget)
+            ring = ring.at[:, jnp.mod(t, R)].set(can)
+            drop = drop + jnp.logical_and(want, ~can).astype(jnp.int32)
+
+            return ((key, dqi, ring, budget, jc, ja, pr, drop),
+                    (served_by, correct, static_origin))
+
+        carry0 = (key0, jnp.full((K, C), -1, jnp.int32),
+                  st.ring, st.budget, st.judge_calls, st.judge_approved,
+                  st.promotions, st.enq_dropped)
+        sxs = (jnp.arange(B, dtype=jnp.int32), qcb, ssb, hcb,
+               snap[:B], snap[B:], qq[:B], qq[B:],
+               p_qc, p_hc, p_hr, p_fl)
+        (key, dqi, ring, budget, jc, ja, pr, drop), ys = jax.lax.scan(
+            step, carry0, sxs)
+
+        # materialize this window's row writes into the tier
+        mask = dqi >= 0
+        w = jnp.mod(dqi, B)
+        emb = jnp.where(mask[:, :, None], qstack[jnp.clip(dqi, 0)],
+                        dyn.emb)
+        cls_a = jnp.where(mask, jnp.where(dqi < B, qcb[jnp.clip(w, 0)],
+                                          p_hc[w]), cls0)
+        ref_a = jnp.where(mask, jnp.where(dqi < B, -1, p_hr[w]),
+                          dyn.answer_ref)
+        so_a = jnp.where(mask, dqi >= B, so0)
+        wa_a = jnp.where(mask, t0 + w, wa0)
+        valid_a = jnp.logical_or(dyn.valid, mask)
+        # rows neither touched nor written kept their old clock; key holds
+        # the new clock for everything else (sentinels mark untouched
+        # invalid rows and rows beyond this config's capacity)
+        lu_a = jnp.where(jnp.logical_and(key > -T.BIG, key < T.BIG),
+                         key, dyn.last_used)
+        new_dyn = T.DynamicTier(emb=emb, cls=cls_a, answer_ref=ref_a,
+                                static_origin=so_a, valid=valid_a,
+                                last_used=lu_a, written_at=wa_a)
+        new_state = SimState(dyn=new_dyn, ring=ring, budget=budget,
+                             t=t0 + B, judge_calls=jc, judge_approved=ja,
+                             promotions=pr, enq_dropped=drop)
+        return new_state, ys
+
+    xs = tuple(a.reshape((NB // B, B) + a.shape[1:])
+               for a in (q_emb_p, q_cls_p, ss_p, h_cls_p))
+    final, (served_by, correct, static_origin) = jax.lax.scan(
+        block, state, xs)
+    # (nb, B, K) -> (K, N)
+    unblock = lambda a: a.reshape(NB, K)[:N].T
+    return SimResult(unblock(served_by), unblock(correct),
+                     unblock(static_origin),
+                     final.judge_calls, final.judge_approved,
+                     final.promotions, final.enq_dropped)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("C", "R", "uniform_lat"))
+def _run_sweep(static_emb, static_cls, q_emb, q_cls, judge_flip,
+               sweep: SweepConfig, C: int, R: int,
+               uniform_lat: bool) -> SimResult:
+    # the hoisted static lookup is config-independent: computed once,
+    # shared across every swept config
+    s_static, h_idx = _static_sims(static_emb, q_emb)
+    core = _scan_core_blocked if uniform_lat else _scan_core
+    return core(s_static, static_cls[h_idx], h_idx, q_emb, q_cls,
+                judge_flip, sweep.tau_static, sweep.tau_dynamic,
+                sweep.sigma_min, sweep.judge_rate, sweep.capacity,
+                sweep.judge_latency, sweep.krites, sweep.dedup,
+                C=C, R=R)
+
+
 def simulate(static_emb, static_cls, q_emb, q_cls, cfg: T.CacheConfig,
              krites: bool, capacity: int | None = None,
              judge_flip=None) -> SimResult:
@@ -90,120 +632,54 @@ def simulate(static_emb, static_cls, q_emb, q_cls, cfg: T.CacheConfig,
     q_emb (N, d) [normalized], q_cls (N,).
     judge_flip (N,) bool (optional): requests whose VerifyAndPromote is
     *falsely approved* regardless of class (noisy-verifier study, §5).
+
+    Config scalars are traced, so re-invoking with different thresholds
+    (e.g. a tuning loop) reuses the compiled program; only shapes
+    (trace length, capacity, ring size) retrigger compilation.
+    """
+    import dataclasses
+    C = capacity or cfg.capacity
+    if capacity is not None:
+        cfg = dataclasses.replace(cfg, capacity=capacity)
+    res = simulate_sweep(static_emb, static_cls, q_emb, q_cls,
+                         sweep_from_configs([cfg], krites),
+                         judge_flip=judge_flip, max_capacity=C)
+    return slice_config(res, 0)
+
+
+def simulate_sweep(static_emb, static_cls, q_emb, q_cls,
+                   sweep: SweepConfig, judge_flip=None,
+                   max_capacity: int | None = None,
+                   ring: int | None = None) -> SimResult:
+    """Evaluate K configs over one request stream in a single dispatch.
+
+    Returns a :class:`SimResult` whose every field carries a leading
+    (K,) config axis. Per config, results are bit-identical to a
+    sequential :func:`simulate` call with the matching
+    :class:`tiers.CacheConfig` (the equivalence contract of DESIGN.md
+    §10, enforced by ``tests/test_sweep.py``).
+
+    The dynamic tier is allocated once at ``max_capacity`` (default:
+    the largest swept capacity) with per-config capacity masks, and the
+    pending ring at ``ring`` slots (default: the largest swept latency).
     """
     N, d = q_emb.shape
     if judge_flip is None:
         judge_flip = jnp.zeros((N,), bool)
-    C = capacity or cfg.capacity
-    L = max(1, cfg.judge_latency)
-
-    s_static, h_idx = _static_sims(static_emb, q_emb)
-    h_cls = static_cls[h_idx]
-
-    state = SimState(
-        dyn=T.make_dynamic_tier(C, d),
-        p_valid=jnp.zeros((L,), bool),
-        p_emb=jnp.zeros((L, d), jnp.float32),
-        p_qcls=jnp.zeros((L,), jnp.int32),
-        p_hcls=jnp.zeros((L,), jnp.int32),
-        p_href=jnp.zeros((L,), jnp.int32),
-        p_flip=jnp.zeros((L,), bool),
-        budget=jnp.float32(1.0),
-        t=jnp.int32(0),
-        judge_calls=jnp.int32(0),
-        judge_approved=jnp.int32(0),
-        promotions=jnp.int32(0),
-        enq_dropped=jnp.int32(0),
-    )
-
-    def step(st: SimState, xs):
-        q, qc, ss, hc, hr, fl = xs
-        t = st.t
-        dyn = st.dyn
-
-        # ---- 1. async completions due now (slot t mod L, enqueued t-L) —
-        # processed before serving, consistent with "completed earlier".
-        slot = jnp.mod(t, L)
-        due = jnp.logical_and(st.p_valid[slot], t >= L)
-        approve = jnp.logical_and(
-            due, jnp.logical_or(st.p_qcls[slot] == st.p_hcls[slot],
-                                st.p_flip[slot]))
-        promoted_dyn = T.upsert(dyn, st.p_emb[slot], st.p_hcls[slot],
-                                st.p_href[slot], now=t, static_origin=True)
-        dyn = jax.tree.map(lambda a, b: jnp.where(approve, b, a), dyn,
-                           promoted_dyn)
-        judge_calls = st.judge_calls + due.astype(jnp.int32)
-        judge_approved = st.judge_approved + approve.astype(jnp.int32)
-        promotions = st.promotions + approve.astype(jnp.int32)
-        p_valid = st.p_valid.at[slot].set(False)
-
-        # ---- 2. serving path (identical for baseline and Krites) ----
-        static_hit = ss >= cfg.tau_static
-        s_dyn, j_dyn = T.dynamic_lookup(dyn, q)
-        dyn_hit = jnp.logical_and(~static_hit, s_dyn >= cfg.tau_dynamic)
-        miss = jnp.logical_and(~static_hit, ~dyn_hit)
-
-        served_cls = jnp.where(static_hit, hc,
-                               jnp.where(dyn_hit, dyn.cls[j_dyn], qc))
-        is_promoted = jnp.logical_and(dyn_hit, dyn.static_origin[j_dyn])
-        served_by = jnp.where(
-            static_hit, STATIC_HIT,
-            jnp.where(is_promoted, DYN_HIT_PROMOTED,
-                      jnp.where(dyn_hit, DYN_HIT_DYNAMIC, MISS))
-        ).astype(jnp.int8)
-        correct = served_cls == qc
-        static_origin = jnp.logical_or(static_hit, is_promoted)
-
-        # LRU touch on dynamic hit
-        touched = T.touch(dyn, j_dyn, t)
-        dyn = jax.tree.map(lambda a, b: jnp.where(dyn_hit, b, a), dyn,
-                           touched)
-        # baseline write-back on miss (backend answer has the query's class)
-        inserted = T.insert(dyn, q, qc, jnp.int32(-1), now=t,
-                            static_origin=False)
-        dyn = jax.tree.map(lambda a, b: jnp.where(miss, b, a), dyn,
-                           inserted)
-
-        # ---- 3. grey-zone trigger (Krites only; off-path) ----
-        grey = jnp.logical_and(ss >= cfg.sigma_min, ss < cfg.tau_static)
-        want = jnp.logical_and(grey, bool(krites))
-        if cfg.dedup:
-            # skip if a promoted pointer already serves this query
-            want = jnp.logical_and(
-                want, ~jnp.logical_and(is_promoted,
-                                       s_dyn >= cfg.tau_dynamic))
-        budget = jnp.minimum(st.budget + cfg.judge_rate, 1e9)
-        can = jnp.logical_and(want, budget >= 1.0)
-        budget = jnp.where(can, budget - 1.0, budget)
-        dropped = jnp.logical_and(want, ~can)
-
-        p_valid = p_valid.at[slot].set(can)
-        p_emb = st.p_emb.at[slot].set(jnp.where(can, q, st.p_emb[slot]))
-        p_qcls = st.p_qcls.at[slot].set(
-            jnp.where(can, qc, st.p_qcls[slot]))
-        p_hcls = st.p_hcls.at[slot].set(
-            jnp.where(can, hc, st.p_hcls[slot]))
-        p_href = st.p_href.at[slot].set(
-            jnp.where(can, hr, st.p_href[slot]))
-        p_flip = st.p_flip.at[slot].set(
-            jnp.where(can, fl, st.p_flip[slot]))
-
-        new_state = SimState(
-            dyn=dyn, p_valid=p_valid, p_emb=p_emb, p_qcls=p_qcls,
-            p_hcls=p_hcls, p_href=p_href, p_flip=p_flip,
-            budget=budget, t=t + 1,
-            judge_calls=judge_calls, judge_approved=judge_approved,
-            promotions=promotions,
-            enq_dropped=st.enq_dropped + dropped.astype(jnp.int32))
-        return new_state, (served_by, correct, static_origin)
-
-    xs = (q_emb, q_cls.astype(jnp.int32), s_static, h_cls, h_idx,
-          judge_flip)
-    final, (served_by, correct, static_origin) = jax.lax.scan(
-        step, state, xs)
-    return SimResult(served_by, correct, static_origin,
-                     final.judge_calls, final.judge_approved,
-                     final.promotions, final.enq_dropped)
+    caps = np.asarray(sweep.capacity)
+    lats = np.clip(np.asarray(sweep.judge_latency), 1, None)
+    C = int(max_capacity or caps.max())
+    R = int(ring or lats.max())
+    if caps.max() > C:
+        raise ValueError(f"swept capacity {caps.max()} > tier rows {C}")
+    if lats.max() > R:
+        raise ValueError(f"swept judge_latency {lats.max()} > ring {R}")
+    return _run_sweep(jnp.asarray(static_emb),
+                      jnp.asarray(static_cls, jnp.int32),
+                      jnp.asarray(q_emb),
+                      jnp.asarray(q_cls, jnp.int32), judge_flip,
+                      sweep, C=C, R=R,
+                      uniform_lat=bool((lats == lats[0]).all()))
 
 
 # ---------------------------------------------------------------------------
@@ -229,6 +705,18 @@ def summarize(res: SimResult) -> dict:
         "enq_dropped": int(res.enq_dropped),
     }
     return out
+
+
+def slice_config(res: SimResult, k: int) -> SimResult:
+    """Extract config k's single-config SimResult from a sweep result."""
+    return jax.tree.map(lambda a: a[k], res)
+
+
+def summarize_sweep(res: SimResult) -> list[dict]:
+    """Per-config :func:`summarize` rows for a ``simulate_sweep`` result."""
+    host = jax.tree.map(np.asarray, res)   # one device->host transfer
+    return [summarize(slice_config(host, k))
+            for k in range(host.served_by.shape[0])]
 
 
 def coverage_curve(res: SimResult, n_points: int = 100):

@@ -102,9 +102,17 @@ def dynamic_lookup_batch(tier: DynamicTier, q: jax.Array):
 # mutations (all functional)
 # ---------------------------------------------------------------------------
 
-def _lru_slot(tier: DynamicTier) -> jax.Array:
-    """Insertion slot: first invalid row, else least-recently-used."""
+def _lru_slot(tier: DynamicTier, cap=None) -> jax.Array:
+    """Insertion slot: first invalid row, else least-recently-used.
+
+    ``cap`` (optional, traceable int) restricts the choice to rows
+    ``[0, cap)`` — the capacity-sweep path runs one max-capacity tier and
+    masks the tail per config (DESIGN.md §10). Rows at or beyond ``cap``
+    are never written, hence never valid, so lookups need no mask.
+    """
     key = jnp.where(tier.valid, tier.last_used, -BIG)
+    if cap is not None:
+        key = jnp.where(jnp.arange(key.shape[0]) < cap, key, BIG)
     return jnp.argmin(key).astype(jnp.int32)
 
 
@@ -123,16 +131,16 @@ def _write(tier: DynamicTier, slot, q, cls, answer_ref, static_origin,
 
 
 def insert(tier: DynamicTier, q, cls, answer_ref, now,
-           static_origin=False) -> DynamicTier:
+           static_origin=False, cap=None) -> DynamicTier:
     """Baseline write-back (Alg. 1 line 11): plain LRU insert."""
     so = jnp.asarray(static_origin)
-    return _write(tier, _lru_slot(tier), q, jnp.asarray(cls),
+    return _write(tier, _lru_slot(tier, cap), q, jnp.asarray(cls),
                   jnp.asarray(answer_ref), so, now)
 
 
 def upsert(tier: DynamicTier, q, cls, answer_ref, now,
            static_origin=True, dedup_sim: float = 0.9999,
-           lww: bool = True) -> DynamicTier:
+           lww: bool = True, cap=None) -> DynamicTier:
     """Auxiliary overwrite (Alg. 2 line 21): idempotent, LWW-guarded.
 
     If a near-identical key exists (sim >= dedup_sim), overwrite that slot
@@ -142,7 +150,7 @@ def upsert(tier: DynamicTier, q, cls, answer_ref, now,
     """
     s, j = dynamic_lookup(tier, q)
     dup = s >= dedup_sim
-    slot = jnp.where(dup, j, _lru_slot(tier))
+    slot = jnp.where(dup, j, _lru_slot(tier, cap))
     skip = jnp.logical_and(dup, tier.written_at[j] > now) if lww \
         else jnp.asarray(False)
     new = _write(tier, slot, q, jnp.asarray(cls), jnp.asarray(answer_ref),

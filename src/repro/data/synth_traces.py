@@ -204,9 +204,15 @@ def tune_threshold(bench: Benchmark, error_budget: float = 0.02,
     """Tune the single baseline threshold t* (paper §4.2): choose the
     lowest threshold whose baseline error rate stays within the budget
     (Pareto point at ~1-2%% error), on a prefix sample of the eval stream.
+
+    The whole grid runs as ONE ``simulate_sweep`` dispatch (DESIGN.md
+    §10); the selection rule is unchanged from the sequential tuner —
+    lowest threshold among those within budget that maximizes total hit
+    rate — so the returned t* is identical.
     """
     import jax.numpy as jnp
-    from repro.core.simulate import simulate, summarize
+    from repro.core.simulate import (simulate_sweep, summarize_sweep,
+                                     sweep_from_configs)
     from repro.core.tiers import CacheConfig
 
     if grid is None:
@@ -215,14 +221,14 @@ def tune_threshold(bench: Benchmark, error_budget: float = 0.02,
     cls = jnp.asarray(bench.eval_cls[:sample])
     s_emb = jnp.asarray(bench.static_emb)
     s_cls = jnp.asarray(bench.static_cls)
+    cfgs = [CacheConfig(tau_static=float(t), tau_dynamic=float(t),
+                        capacity=capacity) for t in grid]
+    res = simulate_sweep(s_emb, s_cls, emb, cls,
+                         sweep_from_configs(cfgs, krites=False))
     best_t, best_hit = float(grid[-1]), -1.0
-    for t in grid:
-        cfg = CacheConfig(tau_static=float(t), tau_dynamic=float(t),
-                          capacity=capacity)
-        res = summarize(simulate(s_emb, s_cls, emb, cls, cfg,
-                                 krites=False))
-        if res["error_rate"] <= error_budget \
-                and res["total_hit_rate"] > best_hit:
-            best_hit = res["total_hit_rate"]
+    for t, row in zip(grid, summarize_sweep(res)):
+        if row["error_rate"] <= error_budget \
+                and row["total_hit_rate"] > best_hit:
+            best_hit = row["total_hit_rate"]
             best_t = float(t)
     return best_t

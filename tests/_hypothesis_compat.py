@@ -1,39 +1,118 @@
 """Run the suite with or without ``hypothesis`` installed.
 
-Property-based tests import ``given, settings, st`` from this shim instead
-of from ``hypothesis`` directly. When hypothesis is available they run as
-normal property tests; when it is missing they are collected but skipped,
-and every example-based test in the same module still runs (a plain
-``pytest.importorskip`` at module scope would skip those too).
+Property-based tests import ``given, settings, st`` from this shim
+instead of from ``hypothesis`` directly. When hypothesis is available
+they run as full property tests (shrinking, example database, the
+works). When it is missing they still RUN — the fallback draws a fixed
+number of deterministic pseudo-random examples per test (seeded from the
+test's qualified name, so failures reproduce) instead of being skipped.
+A plain ``pytest.importorskip`` at module scope would skip every
+example-based test in the same module too; the old shim skipped just
+the property tests, which silently dropped their coverage on machines
+without hypothesis — the mini-runner keeps them counting.
+
+The fallback implements only the strategy surface this suite uses:
+``st.integers``, ``st.floats``, ``st.booleans``, ``st.sampled_from``,
+``st.lists``, ``st.tuples``, plus ``.map`` / ``.filter``.
 """
 from __future__ import annotations
 
-import pytest
+import zlib
 
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True
 except ModuleNotFoundError:
+    import numpy as np
+
     HAVE_HYPOTHESIS = False
+    _FALLBACK_MAX_EXAMPLES = 20
 
-    class _AnyStrategy:
-        """Stands in for ``hypothesis.strategies``: every attribute is a
-        callable returning None (the decorated test never runs)."""
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
 
-        def __getattr__(self, _name):
-            return lambda *a, **k: None
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
 
-    st = _AnyStrategy()
+        def filter(self, pred, _tries: int = 100):
+            def draw(rng):
+                for _ in range(_tries):
+                    v = self._draw(rng)
+                    if pred(v):
+                        return v
+                raise ValueError("filter predicate too restrictive "
+                                 "for the hypothesis-fallback runner")
+            return _Strategy(draw)
 
-    def settings(*_a, **_k):
-        return lambda fn: fn
+    class _St:
+        @staticmethod
+        def integers(min_value=-2**31, max_value=2**31 - 1):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
 
-    def given(*_a, **_k):
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(
+                lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elem._draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(
+                lambda rng: tuple(s._draw(rng) for s in strats))
+
+    st = _St()
+
+    def given(*strats, **kw_strats):
+        if kw_strats:
+            raise TypeError("fallback @given supports positional "
+                            "strategies only")
+
         def deco(fn):
-            @pytest.mark.skip(reason="hypothesis not installed")
-            def _skipped(*args, **kwargs):
-                pass  # pragma: no cover
-            _skipped.__name__ = fn.__name__
-            _skipped.__doc__ = fn.__doc__
-            return _skipped
+            def runner(*args, **kwargs):
+                n = getattr(runner, "_compat_max_examples",
+                            _FALLBACK_MAX_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for i in range(n):
+                    drawn = tuple(s._draw(rng) for s in strats)
+                    try:
+                        fn(*args, *drawn, **kwargs)
+                    except AssertionError as e:
+                        raise AssertionError(
+                            f"falsifying example #{i} (fallback "
+                            f"runner, seed={seed}): {drawn!r}") from e
+                return None
+            # keep identity for reporting, but hide the parameter list —
+            # pytest would otherwise read the strategy args as fixtures
+            runner.__name__ = fn.__name__
+            runner.__qualname__ = fn.__qualname__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+        return deco
+
+    def settings(max_examples: int = _FALLBACK_MAX_EXAMPLES, **_kw):
+        def deco(fn):
+            # @settings sits above @given, so fn is the runner; stash
+            # the budget where the runner reads it at call time
+            fn._compat_max_examples = max_examples
+            return fn
         return deco

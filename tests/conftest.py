@@ -1,0 +1,53 @@
+"""Suite-wide pytest config: a per-test timeout that works with or
+without the ``pytest-timeout`` plugin.
+
+CI runs the suite with ``--timeout=<seconds>`` (scripts/ci.sh) so a
+single wedged test cannot hang the pipeline silently. When
+``pytest-timeout`` is installed it owns that flag (and its
+process-level enforcement). When it is not — this container image has
+no network access to install it — a SIGALRM-based fallback defined here
+enforces the same flag: the alarm fires in the main thread and fails
+the test with a traceback. The fallback cannot interrupt a test stuck
+in non-Python code (e.g. a wedged C extension holding the GIL), which
+the real plugin's thread/process methods can — install pytest-timeout
+where possible (it is in the ``test`` extra).
+"""
+from __future__ import annotations
+
+import signal
+
+import pytest
+
+try:
+    import pytest_timeout  # noqa: F401
+    HAVE_PYTEST_TIMEOUT = True
+except ModuleNotFoundError:
+    HAVE_PYTEST_TIMEOUT = False
+
+
+if not HAVE_PYTEST_TIMEOUT:
+
+    def pytest_addoption(parser):
+        parser.addoption(
+            "--timeout", type=float, default=0,
+            help="per-test timeout in seconds, 0 = disabled "
+                 "(SIGALRM fallback; install pytest-timeout for "
+                 "process-level enforcement)")
+
+    @pytest.hookimpl(wrapper=True)
+    def pytest_runtest_call(item):
+        timeout = item.config.getoption("--timeout")
+        if not timeout or not hasattr(signal, "SIGALRM"):
+            return (yield)
+
+        def _on_alarm(signum, frame):
+            pytest.fail(f"test exceeded --timeout={timeout:g}s "
+                        "(SIGALRM fallback)", pytrace=True)
+
+        old = signal.signal(signal.SIGALRM, _on_alarm)
+        signal.setitimer(signal.ITIMER_REAL, timeout)
+        try:
+            return (yield)
+        finally:
+            signal.setitimer(signal.ITIMER_REAL, 0)
+            signal.signal(signal.SIGALRM, old)

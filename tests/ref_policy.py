@@ -1,0 +1,185 @@
+"""Pure-numpy reference simulator: Algorithm 1 (baseline) and Algorithm 2
+(Krites) as a plain Python loop over the request stream.
+
+This is the *independent oracle* for the JAX simulator
+(``repro.core.simulate``): no jit, no scan, no vmap — every rule of the
+paper's Algorithms 1/2 written out imperatively, one request at a time.
+``tests/test_ref_differential.py`` enforces that ``simulate`` and
+``simulate_sweep`` match it decision-for-decision.
+
+Semantics mirrored (see DESIGN.md §3-4, §10):
+- serving: static threshold, then dynamic threshold over valid rows,
+  else miss + LRU write-back; LRU touch on dynamic hit;
+- grey-zone trigger (Krites only): sigma_min <= s_static < tau_static,
+  optional dedup skip when a promoted pointer already serves the query,
+  token-bucket rate limiting;
+- async VerifyAndPromote: a task enqueued at request t completes at
+  request t + max(1, judge_latency), at most one completion per step
+  (earliest due first), processed before the step's serving decision;
+- promotion upsert: near-duplicate overwrite (sim >= 0.9999), else LRU
+  slot; last-writer-wins guard on the duplicate's ``written_at``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+MISS, STATIC_HIT, DYN_HIT_DYNAMIC, DYN_HIT_PROMOTED = 0, 1, 2, 3
+DEDUP_SIM = 0.9999
+
+
+@dataclass
+class _Dyn:
+    """Mutable dynamic tier (struct-of-arrays, numpy)."""
+    emb: np.ndarray
+    cls: np.ndarray
+    answer_ref: np.ndarray
+    static_origin: np.ndarray
+    valid: np.ndarray
+    last_used: np.ndarray
+    written_at: np.ndarray
+
+    @classmethod
+    def make(cls_, capacity: int, d: int) -> "_Dyn":
+        return cls_(
+            emb=np.zeros((capacity, d), np.float32),
+            cls=np.zeros(capacity, np.int32),
+            answer_ref=np.full(capacity, -1, np.int32),
+            static_origin=np.zeros(capacity, bool),
+            valid=np.zeros(capacity, bool),
+            last_used=np.zeros(capacity, np.int32),
+            written_at=np.zeros(capacity, np.int32),
+        )
+
+    def lookup(self, q: np.ndarray):
+        """Best (similarity, index) over valid rows; (-inf, 0) if none."""
+        sims = (self.emb @ q).astype(np.float32)
+        sims[~self.valid] = -np.inf
+        j = int(np.argmax(sims))
+        return float(sims[j]), j
+
+    def lru_slot(self) -> int:
+        """First invalid row, else least-recently-used."""
+        key = np.where(self.valid, self.last_used.astype(np.int64),
+                       -2**40)
+        return int(np.argmin(key))
+
+    def write(self, slot, q, cls, ref, so, now):
+        self.emb[slot] = q
+        self.cls[slot] = cls
+        self.answer_ref[slot] = ref
+        self.static_origin[slot] = so
+        self.valid[slot] = True
+        self.last_used[slot] = now
+        self.written_at[slot] = now
+
+    def upsert(self, q, cls, ref, now, so=True):
+        """Idempotent, LWW-guarded promotion write (Alg. 2 line 21)."""
+        s, j = self.lookup(q)
+        dup = s >= DEDUP_SIM
+        if dup and self.written_at[j] > now:
+            return                     # stale judgment: newer entry wins
+        self.write(j if dup else self.lru_slot(), q, cls, ref, so, now)
+
+
+@dataclass
+class _Task:
+    due: int
+    emb: np.ndarray
+    qcls: int
+    hcls: int
+    href: int
+    flip: bool
+
+
+def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
+                 capacity=None, judge_flip=None) -> dict:
+    """Reference run; returns plain-numpy analogues of ``SimResult``.
+
+    ``cfg`` is any object with the :class:`repro.core.tiers.CacheConfig`
+    fields (tau_static, tau_dynamic, sigma_min, capacity, judge_latency,
+    dedup, judge_rate).
+    """
+    static_emb = np.asarray(static_emb, np.float32)
+    static_cls = np.asarray(static_cls, np.int32)
+    q_emb = np.asarray(q_emb, np.float32)
+    q_cls = np.asarray(q_cls, np.int32)
+    N, d = q_emb.shape
+    if judge_flip is None:
+        judge_flip = np.zeros(N, bool)
+
+    C = capacity or cfg.capacity
+    lat = max(1, cfg.judge_latency)
+    dyn = _Dyn.make(C, d)
+    pending: list[_Task] = []
+    budget = np.float32(1.0)
+
+    # hoisted static lookup, like the simulator
+    sims = q_emb @ static_emb.T
+    h_idx = np.argmax(sims, axis=1)
+    s_static = sims[np.arange(N), h_idx].astype(np.float32)
+    h_cls = static_cls[h_idx]
+
+    served_by = np.zeros(N, np.int8)
+    correct = np.zeros(N, bool)
+    static_origin = np.zeros(N, bool)
+    judge_calls = judge_approved = promotions = enq_dropped = 0
+
+    for t in range(N):
+        q, qc = q_emb[t], int(q_cls[t])
+        ss, hc, hr = float(s_static[t]), int(h_cls[t]), int(h_idx[t])
+
+        # ---- 1. async completion due now (earliest first, one per step)
+        due_i = min((i for i, p in enumerate(pending) if p.due <= t),
+                    key=lambda i: pending[i].due, default=None)
+        if due_i is not None:
+            task = pending.pop(due_i)
+            judge_calls += 1
+            if task.qcls == task.hcls or task.flip:
+                judge_approved += 1
+                promotions += 1
+                dyn.upsert(task.emb, task.hcls, task.href, now=t)
+
+        # ---- 2. serving path ----
+        static_hit = ss >= cfg.tau_static
+        s_dyn, j_dyn = dyn.lookup(q)
+        dyn_hit = (not static_hit) and s_dyn >= cfg.tau_dynamic
+        miss = not (static_hit or dyn_hit)
+
+        is_promoted = dyn_hit and bool(dyn.static_origin[j_dyn])
+        if static_hit:
+            served_by[t], served_cls = STATIC_HIT, hc
+        elif is_promoted:
+            served_by[t], served_cls = DYN_HIT_PROMOTED, int(dyn.cls[j_dyn])
+        elif dyn_hit:
+            served_by[t], served_cls = DYN_HIT_DYNAMIC, int(dyn.cls[j_dyn])
+        else:
+            served_by[t], served_cls = MISS, qc
+        correct[t] = served_cls == qc
+        static_origin[t] = static_hit or is_promoted
+
+        if dyn_hit:
+            dyn.last_used[j_dyn] = t          # LRU touch
+        if miss:
+            dyn.write(dyn.lru_slot(), q, qc, -1, False, t)
+
+        # ---- 3. grey-zone trigger (off-path) ----
+        grey = cfg.sigma_min <= ss < cfg.tau_static
+        want = grey and bool(krites)
+        if cfg.dedup and is_promoted and s_dyn >= cfg.tau_dynamic:
+            want = False
+        budget = np.float32(min(budget + np.float32(cfg.judge_rate), 1e9))
+        if want and budget >= 1.0:
+            budget = np.float32(budget - np.float32(1.0))
+            pending.append(_Task(t + lat, q.copy(), qc, hc, hr,
+                                 bool(judge_flip[t])))
+        elif want:
+            enq_dropped += 1
+
+    return {
+        "served_by": served_by, "correct": correct,
+        "static_origin": static_origin, "judge_calls": judge_calls,
+        "judge_approved": judge_approved, "promotions": promotions,
+        "enq_dropped": enq_dropped,
+    }

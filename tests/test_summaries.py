@@ -1,0 +1,139 @@
+"""Event-code accounting of `summarize` / `coverage_curve` on hand-built
+SimResults, and the tune_threshold determinism contract: the sweep-based
+tuner must return the identical t* a sequential per-config loop picks,
+on both workload presets.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.simulate import (DYN_HIT_DYNAMIC, DYN_HIT_PROMOTED, MISS,
+                                 STATIC_HIT, SimResult, coverage_curve,
+                                 simulate, summarize)
+from repro.core.tiers import CacheConfig
+from repro.data.synth_traces import (LMARENA_LIKE, SEARCH_LIKE,
+                                     build_benchmark, tune_threshold)
+
+
+def _mk_result(served_by, correct, static_origin, **counters):
+    c = dict(judge_calls=0, judge_approved=0, promotions=0, enq_dropped=0)
+    c.update(counters)
+    return SimResult(
+        served_by=jnp.asarray(served_by, jnp.int8),
+        correct=jnp.asarray(correct, bool),
+        static_origin=jnp.asarray(static_origin, bool),
+        judge_calls=jnp.int32(c["judge_calls"]),
+        judge_approved=jnp.int32(c["judge_approved"]),
+        promotions=jnp.int32(c["promotions"]),
+        enq_dropped=jnp.int32(c["enq_dropped"]),
+    )
+
+
+def test_summarize_event_code_accounting():
+    # 8 requests: 2 static, 1 dynamic, 2 promoted, 3 misses; one wrong
+    # dynamic answer and one wrong promoted answer
+    sb = [STATIC_HIT, MISS, DYN_HIT_DYNAMIC, DYN_HIT_PROMOTED, MISS,
+          STATIC_HIT, DYN_HIT_PROMOTED, MISS]
+    correct = [True, True, False, True, True, True, False, True]
+    so = [True, False, False, True, False, True, True, False]
+    res = _mk_result(sb, correct, so, judge_calls=5, judge_approved=3,
+                     promotions=2, enq_dropped=1)
+    s = summarize(res)
+    assert s["requests"] == 8
+    assert s["static_hit_rate"] == pytest.approx(2 / 8)
+    assert s["dyn_hit_rate"] == pytest.approx(3 / 8)
+    assert s["promoted_hit_rate"] == pytest.approx(2 / 8)
+    assert s["total_hit_rate"] == pytest.approx(5 / 8)
+    assert s["static_origin_rate"] == pytest.approx(4 / 8)
+    # errors only count served-from-cache wrong answers, never misses
+    assert s["error_rate"] == pytest.approx(2 / 8)
+    assert s["judge_calls"] == 5
+    assert s["judge_approved"] == 3
+    assert s["promotions"] == 2
+    assert s["enq_dropped"] == 1
+
+
+def test_summarize_all_miss_zero_rates():
+    res = _mk_result([MISS] * 4, [True] * 4, [False] * 4)
+    s = summarize(res)
+    assert s["total_hit_rate"] == 0.0
+    assert s["error_rate"] == 0.0
+    assert s["static_origin_rate"] == 0.0
+
+
+def test_summarize_miss_never_counts_as_error():
+    # wrong "correct" flags on misses must not contribute to error_rate
+    res = _mk_result([MISS, MISS], [False, False], [False, False])
+    assert summarize(res)["error_rate"] == 0.0
+
+
+def test_coverage_curve_cumulative_fraction():
+    n = 10
+    so = [True, False, True, True, False, False, False, True, False,
+          False]
+    res = _mk_result([STATIC_HIT if x else MISS for x in so],
+                     [True] * n, so)
+    pts, cum = coverage_curve(res, n_points=n)
+    assert pts.shape == (n,) and cum.shape == (n,)
+    expect = np.cumsum(so) / (np.arange(n) + 1)
+    np.testing.assert_allclose(np.asarray(cum), expect, rtol=1e-6)
+    assert int(pts[0]) == 0 and int(pts[-1]) == n - 1
+
+
+def test_coverage_curve_endpoint_equals_static_origin_rate():
+    rng = np.random.default_rng(0)
+    so = rng.random(333) < 0.3
+    res = _mk_result([STATIC_HIT if x else MISS for x in so],
+                     [True] * 333, so)
+    _, cum = coverage_curve(res, n_points=50)
+    assert float(cum[-1]) == pytest.approx(so.mean(), rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# tune_threshold: sweep rewrite must pick the identical t*
+# ---------------------------------------------------------------------------
+
+def _sequential_tune(bench, error_budget, grid, sample, capacity):
+    """The pre-sweep reference tuner: one simulate per grid point with
+    the identical selection rule (lowest t within budget maximizing
+    total hit rate)."""
+    emb = jnp.asarray(bench.eval_emb[:sample])
+    cls = jnp.asarray(bench.eval_cls[:sample])
+    s_emb = jnp.asarray(bench.static_emb)
+    s_cls = jnp.asarray(bench.static_cls)
+    best_t, best_hit = float(grid[-1]), -1.0
+    for t in grid:
+        cfg = CacheConfig(tau_static=float(t), tau_dynamic=float(t),
+                          capacity=capacity)
+        row = summarize(simulate(s_emb, s_cls, emb, cls, cfg,
+                                 krites=False))
+        if row["error_rate"] <= error_budget \
+                and row["total_hit_rate"] > best_hit:
+            best_hit = row["total_hit_rate"]
+            best_t = float(t)
+    return best_t
+
+
+@pytest.mark.parametrize("preset", [LMARENA_LIKE, SEARCH_LIKE])
+def test_tune_threshold_deterministic_vs_sequential(preset):
+    spec = dataclasses.replace(preset, n_requests=6000,
+                               n_classes=min(preset.n_classes, 900))
+    bench = build_benchmark(spec)
+    grid = np.arange(0.80, 0.95, 0.03)
+    kw = dict(error_budget=0.02, grid=grid, sample=2500, capacity=256)
+    t_sweep = tune_threshold(bench, **kw)
+    t_seq = _sequential_tune(bench, **kw)
+    assert t_sweep == t_seq
+    assert t_sweep in [float(t) for t in grid]
+
+
+def test_tune_threshold_repeatable():
+    spec = dataclasses.replace(LMARENA_LIKE, n_requests=4000,
+                               n_classes=500)
+    bench = build_benchmark(spec)
+    grid = np.arange(0.82, 0.94, 0.04)
+    a = tune_threshold(bench, grid=grid, sample=1500, capacity=128)
+    b = tune_threshold(bench, grid=grid, sample=1500, capacity=128)
+    assert a == b

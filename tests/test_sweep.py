@@ -1,0 +1,149 @@
+"""simulate_sweep equivalence contract (DESIGN.md §10): per config,
+decision-for-decision equal to sequential `simulate` calls — even though
+the sweep runs one max-capacity tier with per-config masks and one
+shared ring — plus SweepConfig construction and summary helpers.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.simulate import (SimResult, simulate, simulate_sweep,
+                                 slice_config, summarize, summarize_sweep,
+                                 sweep_from_configs, sweep_grid)
+from repro.core.tiers import CacheConfig
+
+
+def _mk_trace(n=1500, s=64, d=24, seed=11):
+    rng = np.random.default_rng(seed)
+    s_emb = rng.standard_normal((s, d)).astype(np.float32)
+    s_emb /= np.linalg.norm(s_emb, axis=1, keepdims=True)
+    s_cls = np.arange(s, dtype=np.int32)
+    q = rng.standard_normal((n, d)).astype(np.float32)
+    mix = rng.random(n) < 0.7
+    tgt = rng.integers(0, s, n)
+    q[mix] = 0.35 * q[mix] + 0.65 * s_emb[tgt[mix]]
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    cls = np.where(mix & (rng.random(n) < 0.8), tgt,
+                   rng.integers(0, s, n)).astype(np.int32)
+    return (jnp.asarray(s_emb), jnp.asarray(s_cls), jnp.asarray(q),
+            jnp.asarray(cls))
+
+
+# heterogeneous grid: thresholds, sigma, capacity, latency, rate, policy
+SWEPT = [
+    (CacheConfig(0.92, 0.92, sigma_min=0.0, capacity=96,
+                 judge_latency=4), True),
+    (CacheConfig(0.88, 0.90, sigma_min=0.4, capacity=32,
+                 judge_latency=24, judge_rate=0.2), True),
+    (CacheConfig(0.95, 0.85, sigma_min=0.6, capacity=128,
+                 judge_latency=1), True),
+    (CacheConfig(0.92, 0.92, sigma_min=0.0, capacity=96,
+                 judge_latency=4), False),
+    (CacheConfig(0.90, 0.90, sigma_min=0.2, capacity=64,
+                 judge_latency=70), True),
+    (CacheConfig(0.92, 0.90, sigma_min=0.1, capacity=96,
+                 judge_latency=4, dedup=False), True),
+]
+
+
+@pytest.fixture(scope="module")
+def sweep_and_sequential():
+    args = _mk_trace()
+    sweep = sweep_from_configs([c for c, _ in SWEPT],
+                               [k for _, k in SWEPT])
+    res = simulate_sweep(*args, sweep)
+    seq = [simulate(*args, cfg, krites=kr) for cfg, kr in SWEPT]
+    return res, seq
+
+
+def test_sweep_equals_sequential_decision_for_decision(
+        sweep_and_sequential):
+    res, seq = sweep_and_sequential
+    for i, one in enumerate(seq):
+        got = slice_config(res, i)
+        for field in SimResult._fields:
+            a, b = np.asarray(getattr(one, field)), \
+                np.asarray(getattr(got, field))
+            assert np.array_equal(a, b), (
+                f"config {i} field {field}: sweep != sequential")
+
+
+def test_summarize_sweep_equals_per_config_summaries(
+        sweep_and_sequential):
+    res, seq = sweep_and_sequential
+    rows = summarize_sweep(res)
+    assert len(rows) == len(seq)
+    for row, one in zip(rows, seq):
+        assert row == summarize(one)
+
+
+def test_result_shapes_carry_config_axis(sweep_and_sequential):
+    res, _ = sweep_and_sequential
+    k = len(SWEPT)
+    assert res.served_by.shape[0] == k
+    assert res.correct.shape == res.served_by.shape
+    assert res.judge_calls.shape == (k,)
+
+
+def test_sweep_grid_is_row_major_cartesian():
+    base = CacheConfig(0.9, 0.9, capacity=16)
+    sweep = sweep_grid(base, krites=True, tau_static=[0.8, 0.9],
+                       tau_dynamic=[0.7, 0.75, 0.8])
+    assert sweep.n == 6
+    ts = np.asarray(sweep.tau_static)
+    td = np.asarray(sweep.tau_dynamic)
+    assert np.allclose(ts, [0.8] * 3 + [0.9] * 3)
+    assert np.allclose(td, [0.7, 0.75, 0.8] * 2)
+    # un-swept fields come from base
+    assert np.all(np.asarray(sweep.capacity) == 16)
+    assert np.all(np.asarray(sweep.krites))
+
+
+def test_mixed_dedup_sweep_applies_each_configs_flag():
+    """dedup is swept per config: a repeated grey-zone query keeps being
+    judged with dedup=False but is judged ~once with dedup=True (the
+    promoted pointer suppresses re-enqueue). Both must match their
+    sequential runs inside one mixed sweep."""
+    rng = np.random.default_rng(2)
+    d = 16
+    s_emb = rng.standard_normal((4, d)).astype(np.float32)
+    s_emb /= np.linalg.norm(s_emb, axis=1, keepdims=True)
+    s_cls = jnp.arange(4, dtype=jnp.int32)
+    para = s_emb[0] + 0.30 * s_emb[1]
+    para /= np.linalg.norm(para)
+    q = jnp.asarray(np.repeat(para[None], 200, axis=0))
+    cls = jnp.zeros((200,), jnp.int32)
+    cfgs = [CacheConfig(0.995, 0.995, judge_latency=1, dedup=True),
+            CacheConfig(0.995, 0.995, judge_latency=1, dedup=False)]
+    res = simulate_sweep(jnp.asarray(s_emb), s_cls, q, cls,
+                         sweep_from_configs(cfgs, True))
+    seq = [simulate(jnp.asarray(s_emb), s_cls, q, cls, c, krites=True)
+           for c in cfgs]
+    for i in range(2):
+        got = slice_config(res, i)
+        for field in SimResult._fields:
+            assert np.array_equal(np.asarray(getattr(seq[i], field)),
+                                  np.asarray(getattr(got, field)))
+    # and the flag actually changes behavior
+    assert int(seq[1].judge_calls) > int(seq[0].judge_calls) + 50
+
+
+def test_sweep_capacity_exceeding_tier_raises():
+    args = _mk_trace(n=100)
+    sweep = sweep_from_configs([CacheConfig(0.9, 0.9, capacity=64)], True)
+    with pytest.raises(ValueError, match="capacity"):
+        simulate_sweep(*args, sweep, max_capacity=32)
+
+
+def test_single_config_sweep_equals_simulate():
+    args = _mk_trace(n=700, seed=5)
+    cfg = CacheConfig(0.9, 0.88, sigma_min=0.3, capacity=48,
+                      judge_latency=12)
+    one = simulate(*args, cfg, krites=True)
+    via_sweep = slice_config(
+        simulate_sweep(*args, sweep_from_configs([cfg], True)), 0)
+    for field in SimResult._fields:
+        assert np.array_equal(np.asarray(getattr(one, field)),
+                              np.asarray(getattr(via_sweep, field)))
