@@ -1,0 +1,177 @@
+"""ANN static-tier benchmark: exact flat lookup vs IVF quantized scan +
+exact rerank (DESIGN.md §11), over corpus size x nprobe.
+
+Reproduces the scaling argument behind the index subsystem: the flat
+lookup's cost is linear in curated-corpus size, the IVF path's is
+~``B*(K + nprobe*cap)*d``, so past ~10^5 rows the ANN index wins while
+the exact rerank keeps served decisions agreeing with flat search.
+
+Reported per (corpus size, nprobe) operating point:
+- ``us_per_call`` and ``speedup_vs_flat`` — jitted end-to-end lookup
+  wall time (same query batch, warm compile) against the flat/simsearch
+  path;
+- ``recall_at_C`` — fraction of queries whose true (flat) top-1 row
+  survives into the candidate set;
+- ``decision_agreement`` — fraction of queries where the served
+  decision matches flat search exactly: same hit/miss verdict at the
+  cache threshold and, on hits, the same served row.
+
+    PYTHONPATH=src python -m benchmarks.ann_index [--smoke]
+
+``--smoke`` is the CI entry (scripts/ci.sh): a small-corpus build +
+scan + decision-agreement check with hard asserts.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TAU = 0.85          # cache threshold separating near-dup hits from misses
+NPROBES = (2, 4, 8, 16)
+D = 64
+B = 32              # in-flight query batch
+
+
+def _make_workload(n_rows: int, rng, n_centers: int | None = None,
+                   b: int = B, d: int = D):
+    """Clustered corpus + cache-like queries: most queries are noisy
+    near-duplicates of corpus rows (hits at TAU), the rest are fresh
+    directions (misses)."""
+    n_centers = n_centers or max(64, n_rows // 256)
+    centers = rng.normal(size=(n_centers, d)).astype(np.float32)
+    rows = centers[rng.integers(0, n_centers, n_rows)] \
+        + 0.35 * rng.normal(size=(n_rows, d)).astype(np.float32)
+    rows /= np.linalg.norm(rows, axis=1, keepdims=True)
+
+    n_dup = int(0.7 * b)
+    src = rng.choice(n_rows, n_dup, replace=False)
+    dup = rows[src] + 0.05 * rng.normal(size=(n_dup, d)).astype(np.float32)
+    fresh = rng.normal(size=(b - n_dup, d)).astype(np.float32)
+    q = np.concatenate([dup, fresh]).astype(np.float32)
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    return rows, q
+
+
+def _time(fn, reps: int = 5) -> float:
+    """Median wall seconds of ``fn()`` after a compile/warmup call."""
+    jax.block_until_ready(fn())
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _decision_agreement(v_flat, i_flat, v_ivf, i_ivf, tau=TAU) -> float:
+    hit_f, hit_i = v_flat >= tau, v_ivf >= tau
+    same = (hit_f == hit_i) & (~hit_f | (i_flat == i_ivf))
+    return float(np.mean(same))
+
+
+def _bench_one(n_rows: int, rng, nprobes=NPROBES, reps: int = 5,
+               iters: int = 6):
+    from repro.index.ivf import build_ivf
+    from repro.kernels.ivf_scan.ops import ivf_scan, ivf_search
+    from repro.kernels.simsearch.ops import cosine_topk
+
+    corpus_np, q_np = _make_workload(n_rows, rng)
+    corpus, q = jnp.asarray(corpus_np), jnp.asarray(q_np)
+
+    flat_t = _time(lambda: cosine_topk(q, corpus, k=1), reps)
+    v_f, i_f = jax.device_get(cosine_topk(q, corpus, k=1))
+    v_f, i_f = v_f[:, 0], i_f[:, 0]
+
+    t0 = time.perf_counter()
+    ivf = build_ivf(corpus_np, iters=iters, corpus_normalized=True)
+    build_s = time.perf_counter() - t0
+    K, cap, _ = ivf.codes.shape
+
+    rows = []
+    for nprobe in nprobes:
+        if nprobe > K:
+            continue
+        args = (ivf.centroids, ivf.codes, ivf.scales, ivf.row_ids)
+        ivf_t = _time(lambda: ivf_search(q, corpus, *args, k=1,
+                                         nprobe=nprobe), reps)
+        v_i, i_i = jax.device_get(
+            ivf_search(q, corpus, *args, k=1, nprobe=nprobe))
+        _, cand = jax.device_get(ivf_scan(q, *args, nprobe=nprobe))
+        got = (cand == i_f[:, None]).any(axis=1)
+        hits = v_f >= TAU     # queries the cache would actually serve
+        rows.append({
+            "name": f"ann_index/N{n_rows}_nprobe{nprobe}",
+            "us_per_call": round(1e6 * ivf_t, 1),
+            "flat_us_per_call": round(1e6 * flat_t, 1),
+            "speedup_vs_flat": round(flat_t / ivf_t, 2),
+            "recall_at_C": float(np.mean(got)),
+            "hit_recall_at_C": float(np.mean(got[hits]))
+            if hits.any() else 1.0,
+            "decision_agreement": _decision_agreement(
+                v_f, i_f, v_i[:, 0], i_i[:, 0]),
+            "K": int(K), "cap": int(cap),
+            "build_s": round(build_s, 2), "B": B, "d": D,
+        })
+    return rows
+
+
+def run(scale: str = "small"):
+    sizes = [65_536, 262_144]
+    if scale == "full":
+        sizes.append(1_048_576)
+    rng = np.random.default_rng(0)
+    rows = []
+    for n in sizes:
+        rows.extend(_bench_one(n, rng))
+    return rows
+
+
+def smoke() -> None:
+    """CI gate: build + scan + decision-agreement on a small corpus."""
+    from repro.index.ivf import build_ivf
+    from repro.kernels.ivf_scan.ops import ivf_scan, ivf_search
+    from repro.kernels.simsearch.ops import cosine_topk
+
+    rng = np.random.default_rng(0)
+    corpus_np, q_np = _make_workload(8192, rng, b=32)
+    corpus, q = jnp.asarray(corpus_np), jnp.asarray(q_np)
+    ivf = build_ivf(corpus_np, iters=4, corpus_normalized=True)
+
+    ids = np.asarray(ivf.row_ids).ravel()
+    assert sorted(ids[ids >= 0].tolist()) == list(range(8192)), \
+        "packed layout must partition the corpus"
+
+    v_f, i_f = jax.device_get(cosine_topk(q, corpus, k=1))
+    args = (ivf.centroids, ivf.codes, ivf.scales, ivf.row_ids)
+    v_i, i_i = jax.device_get(
+        ivf_search(q, corpus, *args, k=1, nprobe=32, n_candidates=64))
+    _, cand = jax.device_get(ivf_scan(q, *args, nprobe=32,
+                                      n_candidates=64))
+    got = (cand == i_f[:, 0:1]).any(axis=1)
+    hits = v_f[:, 0] >= TAU
+    hit_recall = float(np.mean(got[hits]))
+    agree = _decision_agreement(v_f[:, 0], i_f[:, 0],
+                                v_i[:, 0], i_i[:, 0])
+    assert hits.any(), "smoke workload produced no cache hits"
+    assert hit_recall >= 0.99, f"hit recall@C {hit_recall} < 0.99"
+    assert agree >= 0.99, f"decision agreement {agree} < 0.99"
+    print(f"[OK] ivf smoke: {ivf.codes.shape[0]} clusters, hit "
+          f"recall@C {hit_recall:.3f}, decision agreement {agree:.3f}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=["small", "full"], default="small")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: small-corpus build + scan + "
+                         "decision-agreement asserts")
+    a = ap.parse_args()
+    if a.smoke:
+        smoke()
+    else:
+        for r in run(scale=a.scale):
+            print(r)

@@ -4,7 +4,8 @@
 
 Registered modules (see each module's docstring for what it reproduces):
 ``table1``, ``fig2``, ``greyzone_roi``, ``latency_async``,
-``verifier_fidelity``, ``kernels``, ``serve_batched``, ``sweep``.
+``verifier_fidelity``, ``kernels``, ``serve_batched``, ``sweep``,
+``ann_index``.
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = remaining fields
 as compact JSON) and writes results/benchmarks.json.
@@ -26,7 +27,7 @@ def main() -> None:
                     help="comma-separated module names")
     args = ap.parse_args()
 
-    from benchmarks import (fig2, greyzone_roi, kernels_bench,
+    from benchmarks import (ann_index, fig2, greyzone_roi, kernels_bench,
                             latency_async, serve_batched, sweep, table1,
                             verifier_fidelity)
     modules = {
@@ -36,10 +37,16 @@ def main() -> None:
         "kernels": kernels_bench,
         "serve_batched": serve_batched,
         "sweep": sweep,
+        "ann_index": ann_index,
     }
     if args.only:
         keep = set(args.only.split(","))
         modules = {k: v for k, v in modules.items() if k in keep}
+
+    # results/ is gitignored, so it does not exist on fresh clones;
+    # create it up front (not just before the final write) so modules
+    # that emit their own artifacts can rely on it too
+    RESULTS.mkdir(parents=True, exist_ok=True)
 
     print("name,us_per_call,derived")
     all_rows = []
@@ -57,7 +64,6 @@ def main() -> None:
                   f"\"{json.dumps(derived)}\"")
         all_rows.extend(rows)
 
-    RESULTS.mkdir(exist_ok=True)
     (RESULTS / "benchmarks.json").write_text(json.dumps(all_rows, indent=1))
 
 

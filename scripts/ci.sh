@@ -24,4 +24,7 @@ python -m benchmarks.run --scale small --only serve_batched
 echo "== sweep smoke (16-config grid, one dispatch) =="
 python -m benchmarks.sweep --configs 16 --no-sequential
 
+echo "== ivf smoke (build + scan + decision-agreement) =="
+python -m benchmarks.ann_index --smoke
+
 echo "== CI OK =="

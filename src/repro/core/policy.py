@@ -7,7 +7,11 @@
 These wrap the functional JAX tiers for production serving (the trace
 simulator in core/simulate.py is the batched twin used for evaluation).
 The backend, embedder and judge are injected callables, so the same policy
-fronts an LLM engine, a GNN, or a recsys scorer (DESIGN.md §5).
+fronts an LLM engine, a GNN, or a recsys scorer (DESIGN.md §5). The
+static-tier lookup is likewise injectable: pass ``index=`` (a
+``FlatIndex`` or — for million-entry tiers — an ``IVFIndex``, DESIGN.md
+§11) and both serving entry points route their static top-1 through it;
+the default (None) stays the exact flat/simsearch path.
 
 Two serving entry points share one decision procedure:
 
@@ -41,9 +45,21 @@ import numpy as np
 
 from repro.core import tiers as T
 from repro.core.async_queue import VerifyAndPromotePool
-from repro.index.flat import l2_normalize
+from repro.index.flat import l2_normalize, masked_cosine_topk
 
 _BIG = np.int64(2**30)   # host twin of tiers.BIG (LRU key for invalid rows)
+
+
+@jax.jit
+def _masked_dyn_topk(emb, valid, q):
+    """Dynamic-tier top-1 through the public masked index path. Tier
+    rows are L2-normalized on insert, so ``corpus_normalized=True``
+    skips the per-lookup corpus renormalization (a full (C, d) pass
+    the old path paid on every call). Shared across policies: one
+    compile per (capacity, batch) shape."""
+    vals, idx = masked_cosine_topk(q, emb, valid, k=1,
+                                   corpus_normalized=True)
+    return vals[:, 0], idx[:, 0]
 
 
 @jax.jit
@@ -86,9 +102,13 @@ class BaselinePolicy:
                  static_answers, embed_fn: Callable,
                  backend_fn: Callable, d: int, *,
                  embed_batch_fn: Optional[Callable] = None,
-                 backend_batch_fn: Optional[Callable] = None):
+                 backend_batch_fn: Optional[Callable] = None,
+                 index=None):
         self.cfg = cfg
         self.static = static_tier
+        # injectable static-tier index (FlatIndex/IVFIndex, DESIGN.md
+        # §11); None = exact flat lookup over tier.emb
+        self.index = index
         self.static_answers = static_answers
         self.embed_fn = embed_fn
         self.backend_fn = backend_fn
@@ -108,7 +128,6 @@ class BaselinePolicy:
         self._valid_np = np.zeros(cfg.capacity, bool)
         self._last_used_np = np.zeros(cfg.capacity, np.int64)
         self._static_origin_np = np.zeros(cfg.capacity, bool)
-        self._dyn_lookup_batch = jax.jit(T.dynamic_lookup_batch)
         self._touch_many = jax.jit(T.touch_many)
 
     def _serve_static(self, idx: int):
@@ -130,7 +149,11 @@ class BaselinePolicy:
         t0 = time.monotonic()
         self.t += 1
         v = l2_normalize(jnp.asarray(self.embed_fn(prompt), jnp.float32))
-        s_s, h_idx = T.static_lookup(self.static, v)
+        if self.index is None:
+            s_s, h_idx = T.static_lookup(self.static, v)
+        else:
+            sv, si = self.index.topk(v[None], 1)
+            s_s, h_idx = sv[0, 0], si[0, 0]
         s_s, h_idx = float(s_s), int(h_idx)
         if s_s >= self.cfg.tau_static:
             res = ServeResult(self._serve_static(h_idx), "static", True,
@@ -139,8 +162,9 @@ class BaselinePolicy:
             return res
 
         with self.dyn_lock:
-            s_d, j = T.dynamic_lookup(self.dyn, v)
-            s_d, j = float(s_d), int(j)
+            sd, jd = _masked_dyn_topk(self.dyn.emb, self.dyn.valid,
+                                      v[None])
+            s_d, j = float(sd[0]), int(jd[0])
             if s_d >= self.cfg.tau_dynamic:
                 self.dyn = T.touch(self.dyn, j, self.t)
                 self._last_used_np[j] = self.t
@@ -236,7 +260,8 @@ class BaselinePolicy:
             V = jnp.pad(V, ((0, Bp - B), (0, 0)))
         V_np = np.asarray(V)[:B]
         s_sb, h_idxb = jax.device_get(
-            T.static_lookup_batch(self.static, V))            # fused top-1
+            T.static_lookup_batch(self.static, V,
+                                  index=self.index))          # fused top-1
         s_sb, h_idxb = s_sb[:B], h_idxb[:B]
 
         results: List[Optional[ServeResult]] = [None] * B
@@ -247,7 +272,8 @@ class BaselinePolicy:
             # tier object is immutable, so `snap` stays the batch-start
             # state while mutations accumulate on the host
             snap = self.dyn
-            s_db, j_db = jax.device_get(self._dyn_lookup_batch(snap, V))
+            s_db, j_db = jax.device_get(
+                _masked_dyn_topk(snap.emb, snap.valid, V))
             s_db, j_db = s_db[:B], j_db[:B]
 
             written: dict = {}   # slot -> backend row that wrote it last
@@ -367,6 +393,14 @@ class BaselinePolicy:
                                    _pad_to(self._last_used_np[sl], B))
         self.dyn = dyn
 
+    def describe_index(self) -> str:
+        """Telemetry string for the static-tier index in use (router
+        stats surface this — serving/router.py)."""
+        if self.index is None:
+            return f"flat-exact(S={len(self._static_ref_np)})"
+        describe = getattr(self.index, "describe", None)
+        return describe() if describe else type(self.index).__name__
+
     def stats(self) -> dict:
         n = max(len(self.events), 1)
         by = [e[0] for e in self.events]
@@ -388,10 +422,11 @@ class KritesPolicy(BaselinePolicy):
                  n_workers: int = 2,
                  judge_rate_per_s: float = float("inf"), *,
                  embed_batch_fn: Optional[Callable] = None,
-                 backend_batch_fn: Optional[Callable] = None):
+                 backend_batch_fn: Optional[Callable] = None,
+                 index=None):
         super().__init__(cfg, static_tier, static_answers, embed_fn,
                          backend_fn, d, embed_batch_fn=embed_batch_fn,
-                         backend_batch_fn=backend_batch_fn)
+                         backend_batch_fn=backend_batch_fn, index=index)
         self.pool = VerifyAndPromotePool(
             judge_fn=lambda payload: judge_fn(**payload["judge_args"]),
             promote_fn=self._promote,

@@ -76,13 +76,21 @@ def dynamic_lookup(tier: DynamicTier, q: jax.Array):
     return sims[idx], idx.astype(jnp.int32)
 
 
-def static_lookup_batch(tier: StaticTier, q: jax.Array):
+def static_lookup_batch(tier: StaticTier, q: jax.Array, index=None):
     """Batched twin of :func:`static_lookup` for the serving hot path.
 
-    q (B, d) normalized -> (best sims (B,), best idx (B,)). One fused
-    top-1 pass over the whole micro-batch via ``kernels/simsearch``
-    (Pallas kernel on TPU, jnp reference elsewhere — see DESIGN.md §7).
+    q (B, d) normalized -> (best sims (B,), best idx (B,)). With
+    ``index=None`` this is one fused exact top-1 pass over the whole
+    micro-batch via ``kernels/simsearch`` (Pallas kernel on TPU, jnp
+    reference elsewhere — see DESIGN.md §7). An injected ``index``
+    (``FlatIndex``/``IVFIndex``, DESIGN.md §11) takes over the lookup;
+    its exact rerank keeps the served (score, index) pairs equal to
+    flat search whenever recall@C holds, so threshold semantics are
+    unchanged.
     """
+    if index is not None:
+        vals, idx = index.topk(q, 1)
+        return vals[:, 0], idx[:, 0].astype(jnp.int32)
     from repro.kernels.simsearch.ops import cosine_topk
     vals, idx = cosine_topk(q, tier.emb, k=1)
     return vals[:, 0], idx[:, 0].astype(jnp.int32)

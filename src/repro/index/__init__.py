@@ -1,3 +1,7 @@
-from repro.index.flat import cosine_topk, topk_scores, l2_normalize
+from repro.index.flat import (FlatIndex, cosine_topk, l2_normalize,
+                              masked_cosine_topk, topk_scores)
+from repro.index.ivf import IVF, IVFIndex, build_ivf, train_kmeans
 
-__all__ = ["cosine_topk", "topk_scores", "l2_normalize"]
+__all__ = ["cosine_topk", "topk_scores", "l2_normalize",
+           "masked_cosine_topk", "FlatIndex",
+           "IVF", "IVFIndex", "build_ivf", "train_kmeans"]

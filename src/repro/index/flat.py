@@ -38,13 +38,46 @@ def topk_scores(queries: jax.Array, cand_vecs: jax.Array,
 
 
 def masked_cosine_topk(queries: jax.Array, corpus: jax.Array,
-                       valid: jax.Array, k: int = 1):
+                       valid: jax.Array, k: int = 1,
+                       corpus_normalized: bool = False):
     """Cosine top-k over a partially-valid corpus (the dynamic tier).
 
-    valid (N,) bool — invalid rows score -inf.
+    valid (N,) bool — invalid rows score -inf. ``corpus_normalized``
+    mirrors :func:`cosine_topk`: the dynamic tier's rows are already
+    L2-normalized on insert (`core/tiers.py`), so the serving hot path
+    passes True and skips a full-corpus renormalization per lookup.
     """
     q = l2_normalize(queries.astype(jnp.float32))
-    c = l2_normalize(corpus.astype(jnp.float32))
+    c = corpus.astype(jnp.float32)
+    if not corpus_normalized:
+        c = l2_normalize(c)
     sims = q @ c.T
     sims = jnp.where(valid[None, :], sims, -jnp.inf)
     return jax.lax.top_k(sims, k)
+
+
+class FlatIndex:
+    """Exact flat search behind the injectable index protocol
+    (``topk(queries, k)`` + ``describe()`` — see ``index/ivf.py``).
+    Wraps the fused ``kernels/simsearch`` path over a fixed corpus.
+
+    ``corpus_normalized`` only skips the one-time normalization at
+    construction; the fused path re-normalizes internally on every
+    call either way (in-kernel on TPU, in the jnp oracle elsewhere),
+    which keeps it safe for arbitrary corpora.
+    """
+
+    def __init__(self, corpus: jax.Array, corpus_normalized: bool = False,
+                 force: str | None = None):
+        c = jnp.asarray(corpus, jnp.float32)
+        self.corpus = c if corpus_normalized else l2_normalize(c)
+        self.force = force
+
+    def topk(self, queries: jax.Array, k: int = 1):
+        """queries (B, d) L2-normalized -> (scores (B, k), idx (B, k))."""
+        from repro.kernels.simsearch.ops import cosine_topk as fused
+        return fused(queries, self.corpus, k=k, force=self.force)
+
+    def describe(self) -> str:
+        n, d = self.corpus.shape
+        return f"flat(N={n}, d={d})"

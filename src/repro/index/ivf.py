@@ -1,0 +1,259 @@
+"""IVF quantized ANN index for the static tier (DESIGN.md §11).
+
+Scaling the static tier past ~100k rows makes the exact flat lookup
+(`index/flat.py`, `kernels/simsearch`) the serving bottleneck: its cost
+is linear in corpus size. This module provides the sub-linear path:
+
+- **training** — jit-compatible spherical k-means (`train_kmeans`) over
+  the L2-normalized corpus (cosine argmax assignment, renormalized
+  centroid updates, empty clusters keep their previous centroid);
+- **layout** (`build_ivf`) — a packed *cluster-major* corpus: every
+  cluster owns a fixed-capacity band of slots holding int8
+  scalar-quantized codes (symmetric per-row scale ``max|x|/127``), the
+  fp32 dequant scales, and the member rows' global ids (-1 padding);
+- **search** (`IVFIndex`) — centroid scoring -> top-``nprobe`` clusters
+  -> int8 scan of only those bands (`kernels/ivf_scan`) -> exact fp32
+  rerank of the top-``n_candidates`` against the original corpus rows.
+
+The rerank makes the served (score, index) pairs equal to flat search
+whenever the true nearest row lands in the candidate set (recall@C),
+so the paper's threshold semantics are preserved — ANN only changes
+*which rows get scored*, never the score of the served row.
+
+``IVFIndex`` (and ``FlatIndex`` in `index/flat.py`) implement the
+injectable index protocol consumed by ``core.policy`` /
+``core.tiers.static_lookup_batch``: ``topk(queries, k)`` over
+L2-normalized queries plus a ``describe()`` telemetry string.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index.flat import l2_normalize
+from repro.kernels.ivf_scan.ops import ivf_search
+
+
+class IVF(NamedTuple):
+    """Packed cluster-major IVF layout (all device arrays; a pytree)."""
+    centroids: jax.Array   # (K, d) fp32, L2-normalized
+    codes: jax.Array       # (K, cap, d) int8 scalar-quantized rows
+    scales: jax.Array      # (K, cap) fp32 per-row dequant scale
+    row_ids: jax.Array     # (K, cap) int32 global row id, -1 = padding
+    corpus: jax.Array      # (N, d) fp32 normalized — exact rerank rows
+
+
+@functools.partial(jax.jit, static_argnames=("n_clusters", "iters"))
+def train_kmeans(corpus: jax.Array, n_clusters: int, iters: int = 6,
+                 seed: int = 0) -> jax.Array:
+    """Spherical k-means centroids over an L2-normalized corpus.
+
+    Assignment is cosine argmax; updates renormalize the cluster means;
+    a cluster that goes empty keeps its previous centroid. Pure JAX
+    (init by random row choice, ``lax.scan`` over iterations), so it
+    jits and shards like any other training step.
+    """
+    n = corpus.shape[0]
+    x = corpus.astype(jnp.float32)
+    init = jax.random.choice(jax.random.PRNGKey(seed), n,
+                             (n_clusters,), replace=n < n_clusters)
+    cent = x[init]
+
+    def step(cent, _):
+        assign = jnp.argmax(x @ cent.T, axis=1)
+        sums = jax.ops.segment_sum(x, assign, num_segments=n_clusters)
+        counts = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), assign,
+                                     num_segments=n_clusters)
+        new = l2_normalize(sums / jnp.maximum(counts, 1.0)[:, None])
+        return jnp.where(counts[:, None] > 0, new, cent), None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    return cent
+
+
+def quantize_rows(rows: np.ndarray):
+    """Symmetric per-row int8 scalar quantization.
+
+    code = round(x / s), s = max|x| / 127; dequant error per component
+    is bounded by s/2 (enforced by ``tests/test_ivf_index.py``).
+    """
+    rows = np.asarray(rows, np.float32)
+    scale = np.abs(rows).max(axis=1) / 127.0
+    safe = np.where(scale > 0, scale, 1.0)
+    codes = np.clip(np.rint(rows / safe[:, None]), -127, 127)
+    return codes.astype(np.int8), scale.astype(np.float32)
+
+
+def default_n_clusters(n_rows: int) -> int:
+    """4*sqrt(N) clusters (the classic IVF operating range): with
+    capacity-bounded bands the centroid pass costs B*K*d while each
+    probe scans ~N/K rows, so more, smaller clusters cut scan volume
+    until the centroid pass catches up around K ~ sqrt(N*nprobe).
+    Capped so clusters keep >= 64 rows — fragmenting a small corpus
+    into tiny bands costs recall (spills land further from their
+    centroid) without meaningful scan savings."""
+    return max(8, min(int(round(4 * math.sqrt(n_rows))),
+                      n_rows // 64 or 1))
+
+
+def _topk_clusters_host(c: np.ndarray, cent: np.ndarray, nchoice: int,
+                        chunk: int = 65536):
+    """Per-row top-``nchoice`` cluster choices (ids + sims), descending,
+    computed in device chunks to bound the (N, K) sims buffer."""
+    ids, sims = [], []
+    for lo in range(0, c.shape[0], chunk):
+        s, i = jax.lax.top_k(
+            jnp.asarray(c[lo:lo + chunk]) @ jnp.asarray(cent).T, nchoice)
+        ids.append(np.asarray(i))
+        sims.append(np.asarray(s))
+    return np.concatenate(ids), np.concatenate(sims)
+
+
+def _greedy_round(pending, want, sims, assign, load, cap):
+    """One contended-assignment round: among ``pending`` rows, each
+    wanting cluster ``want[i]`` with similarity ``sims[i]``,
+    higher-similarity rows win the cluster's remaining slots. Mutates
+    ``assign``/``load``; returns the still-unassigned rows."""
+    K = len(load)
+    by_sim = np.argsort(-sims, kind="stable")
+    w = want[by_sim]
+    order = np.argsort(w, kind="stable")
+    w_sorted = w[order]
+    starts = np.searchsorted(w_sorted, np.arange(K))
+    rank = np.arange(len(w)) - starts[w_sorted]
+    ok = rank < (cap - load)[w_sorted]
+    rows = pending[by_sim[order[ok]]]
+    assign[rows] = w_sorted[ok]
+    load += np.bincount(w_sorted[ok], minlength=K)
+    return pending[assign[pending] < 0]
+
+
+def _balanced_assign(c: np.ndarray, cent: np.ndarray, cap: int,
+                     nchoice: int = 8) -> np.ndarray:
+    """Capacity-bounded cluster assignment: each row goes to its best
+    centroid that still has a free slot (spilling to 2nd..n-th choice),
+    higher-similarity rows winning contended slots. Bounded bands keep
+    the packed layout's padding — and hence the per-probe scan volume —
+    near ``N/K`` instead of the natural assignment's max cluster size
+    (heavily skewed corpora otherwise pad every band several-fold).
+    """
+    n = c.shape[0]
+    K = cent.shape[0]
+    assert cap * K >= n, (cap, K, n)
+    choice_ids, choice_sims = _topk_clusters_host(c, cent,
+                                                  min(K, nchoice))
+    assign = np.full(n, -1, np.int64)
+    load = np.zeros(K, np.int64)
+    pending = np.arange(n)
+    for r in range(choice_ids.shape[1]):
+        if not len(pending):
+            break
+        pending = _greedy_round(pending, choice_ids[pending, r],
+                                choice_sims[pending, r], assign, load,
+                                cap)
+    while len(pending):
+        # all listed choices full (rare): re-rank the leftovers against
+        # the clusters that still have space and repeat the contended
+        # greedy rounds — dumping them into arbitrary free bands would
+        # park rows under unrelated centroids that no probe ever visits
+        sims = np.array(jnp.asarray(c[pending]) @ jnp.asarray(cent).T)
+        sims[:, load >= cap] = -np.inf
+        want = sims.argmax(axis=1)
+        best = sims[np.arange(len(pending)), want]
+        pending = _greedy_round(pending, want, best, assign, load, cap)
+    return assign
+
+
+def build_ivf(corpus, n_clusters: int | None = None, *, iters: int = 6,
+              seed: int = 0, corpus_normalized: bool = False,
+              train_rows: int | None = 131072, cap: int | None = None,
+              cap_multiple: int = 8,
+              max_imbalance: float | None = 1.3) -> IVF:
+    """Train + pack an IVF index over ``corpus`` (N, d).
+
+    ``train_rows`` caps the k-means training set (a uniform subsample —
+    the assignment pass still covers every row). ``max_imbalance``
+    bounds the band capacity at ``ceil(N/K * max_imbalance)`` and
+    spills overflow rows to their next-best centroid with space
+    (:func:`_balanced_assign`): the probe scan reads whole padded
+    bands, so skewed natural clusters would otherwise inflate every
+    probe's volume by the skew factor. ``None`` keeps the natural
+    argmax assignment (cap = observed max cluster size). ``cap``
+    forces the capacity outright (the sharded builder uses it to keep
+    shard layouts stackable).
+    """
+    c = np.asarray(corpus, np.float32)
+    if not corpus_normalized:
+        c = np.asarray(l2_normalize(jnp.asarray(c)))
+    n, d = c.shape
+    K = n_clusters or default_n_clusters(n)
+
+    train = c
+    if train_rows is not None and n > train_rows:
+        sub = np.random.default_rng(seed).choice(n, train_rows,
+                                                 replace=False)
+        train = c[sub]
+    cent = np.asarray(train_kmeans(jnp.asarray(train), K, iters=iters,
+                                   seed=seed))
+
+    if cap is None and max_imbalance is not None:
+        want = int(math.ceil(n / K * max_imbalance))
+        cap = -(-max(1, want) // cap_multiple) * cap_multiple
+    if cap is not None:
+        if cap * K < n:
+            raise ValueError(f"cap={cap} x K={K} < corpus rows {n}")
+        assign = _balanced_assign(c, cent, cap)
+    else:
+        assign = np.asarray(_assign(jnp.asarray(c), jnp.asarray(cent)))
+        need = max(1, int(np.bincount(assign, minlength=K).max()))
+        cap = -(-need // cap_multiple) * cap_multiple
+
+    # cluster-major packing: stable sort by cluster, slot = rank within
+    order = np.argsort(assign, kind="stable")
+    sorted_assign = assign[order]
+    starts = np.searchsorted(sorted_assign, np.arange(K))
+    slot = np.arange(n) - starts[sorted_assign]
+
+    all_codes, all_scales = quantize_rows(c)
+    codes = np.zeros((K, cap, d), np.int8)
+    scales = np.zeros((K, cap), np.float32)
+    row_ids = np.full((K, cap), -1, np.int32)
+    codes[sorted_assign, slot] = all_codes[order]
+    scales[sorted_assign, slot] = all_scales[order]
+    row_ids[sorted_assign, slot] = order
+
+    return IVF(jnp.asarray(cent), jnp.asarray(codes), jnp.asarray(scales),
+               jnp.asarray(row_ids), jnp.asarray(c))
+
+
+@jax.jit
+def _assign(c: jax.Array, cent: jax.Array) -> jax.Array:
+    return jnp.argmax(c @ cent.T, axis=1).astype(jnp.int32)
+
+
+@dataclass(frozen=True)
+class IVFIndex:
+    """Injectable ANN index: IVF scan + exact rerank behind ``topk``."""
+    ivf: IVF
+    nprobe: int = 8
+    n_candidates: int = 32
+    force: str | None = None     # kernel dispatch override (see ops.py)
+
+    def topk(self, queries: jax.Array, k: int = 1):
+        """queries (B, d) L2-normalized -> (scores (B, k), idx (B, k))."""
+        return ivf_search(queries, self.ivf.corpus, self.ivf.centroids,
+                          self.ivf.codes, self.ivf.scales,
+                          self.ivf.row_ids, k=k, nprobe=self.nprobe,
+                          n_candidates=self.n_candidates,
+                          force=self.force)
+
+    def describe(self) -> str:
+        K, cap, d = self.ivf.codes.shape
+        return (f"ivf(N={self.ivf.corpus.shape[0]}, K={K}, cap={cap}, "
+                f"d={d}, nprobe={self.nprobe}, C={self.n_candidates})")

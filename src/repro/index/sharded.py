@@ -9,7 +9,10 @@ instead of gathering the corpus or the full score matrix.
 Implemented with ``shard_map`` + ``jax.lax`` collectives (all_gather of
 per-shard top-k). The auto-GSPMD path (see index/flat.py under jit) is the
 baseline; this manual-merge version is the optimized variant measured in
-§Perf.
+§Perf. At million-entry tier sizes the exact per-shard scan itself is
+the bottleneck; ``build_sharded_ivf``/``sharded_ivf_topk`` swap it for
+the IVF quantized scan + exact rerank (DESIGN.md §11) under the same
+tiny k-candidate merge.
 """
 from __future__ import annotations
 
@@ -132,6 +135,105 @@ def sharded_topk_local_candidates(u: jax.Array, table: jax.Array,
                    in_specs=(uspec, P(axis, None), P(axis)),
                    out_specs=(P(), P()), check_vma=False)
     return fn(u, table, cand_ids)
+
+
+def build_sharded_ivf(corpus, n_shards: int, n_clusters: int | None = None,
+                      **build_kw):
+    """Per-shard IVF over a row-partitioned corpus (DESIGN.md §11).
+
+    Shard ``s`` owns the contiguous row range ``[s*N/S, (s+1)*N/S)`` and
+    gets its own sub-index (centroids trained on its rows only, local
+    row ids). The per-shard layouts are padded to a common band
+    capacity and stacked on a leading shard axis, so the whole index
+    shards over ``P(axis, ...)`` like the corpus itself.
+    """
+    import numpy as np
+
+    from repro.index.ivf import IVF, build_ivf
+
+    corpus = np.asarray(corpus, np.float32)
+    N = corpus.shape[0]
+    assert N % n_shards == 0, (N, n_shards)
+    rows_per = N // n_shards
+    parts = [build_ivf(corpus[s * rows_per:(s + 1) * rows_per],
+                       n_clusters=n_clusters, **build_kw)
+             for s in range(n_shards)]
+    cap = max(p.codes.shape[1] for p in parts)
+
+    def pad_band(a, fill):
+        a = np.asarray(a)
+        short = cap - a.shape[1]
+        if not short:
+            return a
+        width = [(0, 0), (0, short)] + [(0, 0)] * (a.ndim - 2)
+        return np.pad(a, width, constant_values=fill)
+
+    return IVF(
+        centroids=jnp.stack([jnp.asarray(p.centroids) for p in parts]),
+        codes=jnp.asarray(np.stack([pad_band(p.codes, 0)
+                                    for p in parts])),
+        scales=jnp.asarray(np.stack([pad_band(p.scales, 0)
+                                     for p in parts])),
+        row_ids=jnp.asarray(np.stack([pad_band(p.row_ids, -1)
+                                      for p in parts])),
+        corpus=jnp.stack([jnp.asarray(p.corpus) for p in parts]))
+
+
+def sharded_ivf_topk(queries: jax.Array, sivf, mesh, k: int = 1,
+                     axis: str = "model", nprobe: int = 8,
+                     n_candidates: int = 32, force: str | None = None):
+    """ANN twin of :func:`sharded_cosine_topk`: per-shard IVF scan +
+    exact rerank over the shard's own rows, then the same tiny
+    k-candidate all-gather merge — only (k scores, k global ids) pairs
+    cross the interconnect.
+
+    queries (B, d) replicated; ``sivf`` a stacked :func:`build_sharded_ivf`
+    index whose leading axis is sharded over ``axis``.
+    Returns (scores (B, k), global row indices (B, k)).
+    """
+    from repro.kernels.ivf_scan.ops import ivf_search
+
+    rows_per = sivf.corpus.shape[1]
+
+    def local(q, cent, codes, scales, ids, corp):
+        vals, lids = ivf_search(q, corp[0], cent[0], codes[0], scales[0],
+                                ids[0], k=k, nprobe=nprobe,
+                                n_candidates=n_candidates, force=force)
+        shard_id = jax.lax.axis_index(axis)
+        gids = jnp.where(lids >= 0, lids + shard_id * rows_per, -1)
+        all_vals = jax.lax.all_gather(vals, axis, axis=1, tiled=True)
+        all_gids = jax.lax.all_gather(gids, axis, axis=1, tiled=True)
+        top_v, pos = jax.lax.top_k(all_vals, k)
+        return top_v, jnp.take_along_axis(all_gids, pos, axis=1)
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, None), P(axis, None, None),
+                  P(axis, None, None, None), P(axis, None, None),
+                  P(axis, None, None), P(axis, None, None)),
+        out_specs=(P(), P()), check_vma=False)
+    return fn(queries, sivf.centroids, sivf.codes, sivf.scales,
+              sivf.row_ids, sivf.corpus)
+
+
+def sharded_ivf_lookup(mesh, sivf, axis: str = "model", nprobe: int = 8,
+                       n_candidates: int = 32):
+    """ANN twin of :func:`sharded_static_lookup`: a jitted
+    (queries) -> (best_sim, best_idx) closure over a sharded IVF index
+    kept on device — the serving-path static lookup at million-entry
+    scale."""
+    def spec(a):
+        return jax.sharding.NamedSharding(
+            mesh, P(axis, *([None] * (a.ndim - 1))))
+
+    sivf = jax.tree.map(lambda a: jax.device_put(a, spec(a)), sivf)
+
+    @jax.jit
+    def lookup(queries):
+        v, i = sharded_ivf_topk(queries, sivf, mesh, k=1, axis=axis,
+                                nprobe=nprobe, n_candidates=n_candidates)
+        return v[:, 0], i[:, 0]
+    return lookup
 
 
 def sharded_static_lookup(mesh, static_emb: jax.Array, axis: str = "model"):

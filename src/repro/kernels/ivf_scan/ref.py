@@ -1,0 +1,67 @@
+"""Pure-jnp oracle for the fused IVF scan kernel.
+
+Scores the probed clusters' int8 codes exactly as the kernel does
+(dequantized dot against the normalized query) and selects the top-C
+candidates with the same ordering contract: descending approximate
+score, ties broken by lowest *global row id* (not position), padding
+slots (row id -1, score NEG) sinking to the tail.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# shared contract constants: ops.py masks padding with NEG and the
+# Pallas kernel flushes run_v == NEG back as id -1, so the sentinel
+# must be the single definition the whole kernel family uses
+from repro.kernels.simsearch.kernel import BIG_IDX, NEG  # noqa: F401
+
+
+def _normalize(q: jax.Array) -> jax.Array:
+    # index.flat.l2_normalize, inlined: importing repro.index here
+    # would cycle back through index/__init__ -> ivf -> this package
+    q = q.astype(jnp.float32)
+    return q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True),
+                           1e-9)
+
+
+def select_clusters(queries: jax.Array, centroids: jax.Array,
+                    nprobe: int):
+    """Centroid scoring: (B, d) x (K, d) -> top-``nprobe`` cluster ids.
+
+    Returns (centroid scores (B, nprobe), cluster ids (B, nprobe)).
+    Shared by the oracle and the kernel dispatcher so both scan the
+    same clusters.
+    """
+    q = _normalize(queries)
+    cs = q @ centroids.astype(jnp.float32).T
+    return jax.lax.top_k(cs, nprobe)
+
+
+def ivf_scan_ref(queries: jax.Array, centroids: jax.Array,
+                 codes: jax.Array, scales: jax.Array, row_ids: jax.Array,
+                 nprobe: int, n_candidates: int):
+    """Reference IVF scan.
+
+    queries (B, d); centroids (K, d) normalized; codes (K, cap, d) int8;
+    scales (K, cap) fp32; row_ids (K, cap) int32 (-1 = padding slot).
+    Returns (approx scores (B, C) fp32, candidate row ids (B, C) int32);
+    absent candidates have score NEG and id -1.
+    """
+    q = _normalize(queries)
+    _, cids = select_clusters(queries, centroids, nprobe)    # (B, P)
+
+    g_codes = codes[cids].astype(jnp.float32)                # (B,P,cap,d)
+    g_scales = scales[cids]                                  # (B, P, cap)
+    g_ids = row_ids[cids]                                    # (B, P, cap)
+    sims = jnp.einsum("bpcd,bd->bpc", g_codes, q) * g_scales
+    sims = jnp.where(g_ids < 0, NEG, sims)
+
+    B = q.shape[0]
+    flat_v = sims.reshape(B, -1)
+    flat_i = g_ids.reshape(B, -1)
+    # descending score, ties -> lowest global row id; pads (NEG) sink
+    # to the tail because no real cosine can reach NEG
+    order = jnp.lexsort((flat_i, -flat_v))[:, :n_candidates]
+    return (jnp.take_along_axis(flat_v, order, axis=1),
+            jnp.take_along_axis(flat_i, order, axis=1).astype(jnp.int32))

@@ -76,31 +76,38 @@ def run(B: int = 4096, S: int = 4_194_304, d: int = 64, k: int = 4,
 
 def run_live(n_requests: int = 800, n_clients: int = 8,
              max_batch: int = 32, max_wait_ms: float = 2.0,
-             tau: float = 0.92) -> dict:
+             tau: float = 0.92, index: str = "flat",
+             static_rows: int = 0, nprobe: int = 8) -> dict:
     """Live router-fronted serving demo: the batched serving path under
-    concurrent client load, with per-tier hit and latency telemetry."""
+    concurrent client load, with per-tier hit and latency telemetry.
+    ``index='ivf'`` swaps the static lookup for the quantized ANN index
+    (padding the tier to ``static_rows`` synthetic entries first)."""
     import threading
 
     import numpy as np
 
     from repro.core.judge import OracleJudge
     from repro.core.policy import KritesPolicy
-    from repro.core.tiers import CacheConfig, make_static_tier
+    from repro.core.tiers import CacheConfig
     from repro.embedding.embedder import Embedder
+    from repro.launch.serve import build_demo_tier
     from repro.serving.router import CacheRouter
 
     embed = Embedder(d_out=64)
     intents = [f"how do i {v} my {n}" for v in
                ("fix", "update", "reset", "clean", "sell", "charge")
                for n in ("bike", "laptop", "router", "garden", "phone")]
-    tier = make_static_tier(np.asarray(embed.batch(intents)),
-                            np.arange(len(intents)))
-    answers = [f"[curated] {p}" for p in intents]
+    tier, answers, idx_obj = build_demo_tier(
+        np.asarray(embed.batch(intents)),
+        [f"[curated] {p}" for p in intents],
+        static_rows=static_rows, index=index, nprobe=nprobe)
+
     policy = KritesPolicy(
         CacheConfig(tau, tau, sigma_min=0.3, capacity=1024), tier, answers,
         embed, backend_fn=lambda p: f"generated({p})",
         judge_fn=OracleJudge(), d=64,
-        backend_batch_fn=lambda ps: [f"generated({p})" for p in ps])
+        backend_batch_fn=lambda ps: [f"generated({p})" for p in ps],
+        index=idx_obj)
     router = CacheRouter(policy, max_batch=max_batch,
                          max_wait_ms=max_wait_ms)
 
@@ -144,10 +151,18 @@ if __name__ == "__main__":
     ap.add_argument("--requests", type=int, default=800)
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--index", choices=["flat", "ivf"], default="flat",
+                    help="static-tier lookup strategy for --live "
+                         "(DESIGN.md §11)")
+    ap.add_argument("--static-rows", type=int, default=0,
+                    help="pad the live demo's curated tier to this many "
+                         "rows before building the index")
+    ap.add_argument("--nprobe", type=int, default=8)
     a = ap.parse_args()
     if a.live:
         run_live(n_requests=a.requests, n_clients=a.clients,
-                 max_batch=a.max_batch)
+                 max_batch=a.max_batch, index=a.index,
+                 static_rows=a.static_rows, nprobe=a.nprobe)
     else:
         run(multi_pod=False)
         run(multi_pod=True)

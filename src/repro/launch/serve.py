@@ -4,10 +4,49 @@
 
 Wires the full production topology on local devices: embedder -> tiered
 cache (KritesPolicy, async judge pool) -> batching frontend -> LLM engine
-(prefill + KV decode).
+(prefill + KV decode). ``--index ivf`` (with ``--static-rows N`` to pad
+the curated tier to a realistic size) swaps the static lookup for the
+IVF quantized ANN index (DESIGN.md §11):
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 200 \
+        --index ivf --static-rows 100000
 """
 import argparse
 import time
+
+
+def build_demo_tier(emb_rows, answers, static_rows: int = 0,
+                    index: str = "flat", nprobe: int = 8):
+    """Shared demo-topology helper (also used by
+    ``launch/cache_workload.py --live``): optionally pad the curated
+    tier with synthetic entries to ``static_rows`` rows, then build the
+    requested static-index object (DESIGN.md §11).
+
+    Returns (StaticTier, answers, index object or None for exact flat).
+    """
+    import numpy as np
+
+    from repro.core.tiers import make_static_tier
+
+    emb_rows = np.asarray(emb_rows, np.float32)
+    answers = list(answers)
+    if static_rows > len(answers):
+        # synthetic curated entries: random directions far from the
+        # intent cluster, each its own answer class
+        pad = np.random.default_rng(7).normal(
+            size=(static_rows - len(answers),
+                  emb_rows.shape[1])).astype(np.float32)
+        emb_rows = np.concatenate([emb_rows, pad])
+        answers += [f"[curated] synthetic-{i}" for i in range(len(pad))]
+    tier = make_static_tier(emb_rows, np.arange(len(answers)))
+
+    idx_obj = None
+    if index == "ivf":
+        from repro.index.ivf import IVFIndex, build_ivf
+        idx_obj = IVFIndex(build_ivf(tier.emb, corpus_normalized=True),
+                           nprobe=nprobe)
+        print(f"static index: {idx_obj.describe()}")
+    return tier, answers, idx_obj
 
 
 def main() -> None:
@@ -15,13 +54,22 @@ def main() -> None:
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--tau", type=float, default=0.92)
+    ap.add_argument("--index", choices=["flat", "ivf"], default="flat",
+                    help="static-tier lookup strategy (DESIGN.md §11); "
+                         "'ivf' builds the quantized ANN index over the "
+                         "tier and injects it into the policy")
+    ap.add_argument("--static-rows", type=int, default=0,
+                    help="pad the curated tier to this many rows with "
+                         "synthetic entries (exercises the ANN path at "
+                         "realistic tier sizes)")
+    ap.add_argument("--nprobe", type=int, default=8)
     args = ap.parse_args()
 
     import numpy as np
     from repro.configs import smoke_config
     from repro.core.judge import OracleJudge
     from repro.core.policy import KritesPolicy
-    from repro.core.tiers import CacheConfig, make_static_tier
+    from repro.core.tiers import CacheConfig
     from repro.embedding.embedder import Embedder
     from repro.serving.engine import BatchingFrontend, LLMEngine
 
@@ -33,13 +81,17 @@ def main() -> None:
                ("fix", "update", "reset", "clean", "sell")
                for n in ("bike", "laptop", "router", "garden")]
     canon = intents
-    tier = make_static_tier(np.asarray(embed.batch(canon)),
-                            np.arange(len(canon)))
-    answers = [f"[curated] {p}" for p in canon]
+    tier, answers, index = build_demo_tier(
+        np.asarray(embed.batch(canon)), [f"[curated] {p}" for p in canon],
+        static_rows=args.static_rows, index=args.index,
+        nprobe=args.nprobe)
+
     cfg = CacheConfig(args.tau, args.tau, sigma_min=0.3, capacity=512)
     policy = KritesPolicy(cfg, tier, answers, embed,
                           backend_fn=frontend.submit,
-                          judge_fn=OracleJudge(), d=64)
+                          judge_fn=OracleJudge(), d=64,
+                          backend_batch_fn=frontend.submit_many,
+                          index=index)
 
     rng = np.random.default_rng(0)
     prefixes = ["", "hey ", "um, ", "please, ", "quick q: "]

@@ -117,6 +117,18 @@ class BatchingFrontend:
         p.done.wait(timeout_s)
         return p.result if p.result is not None else ""
 
+    def submit_many(self, prompts: List[str],
+                    timeout_s: float = 60.0) -> List[str]:
+        """Enqueue a pre-formed group and block until every answer is
+        in. Usable directly as a policy's ``backend_batch_fn``: the
+        group reaches the collector at once, so a cache micro-batch's
+        misses become one engine prefill instead of ``len(prompts)``
+        serialized ``submit`` calls."""
+        pending = [self._mb.submit(p) for p in prompts]
+        for p in pending:
+            p.done.wait(timeout_s)
+        return [p.result if p.result is not None else "" for p in pending]
+
     def _serve(self, batch):
         results = self.engine.generate_batch(
             [p.prompt for p in batch], self.max_new)

@@ -166,9 +166,13 @@ class CacheRouter:
         with self._lock:
             lat = np.asarray(self._latencies, np.float64)
             n = max(self._requests, 1)
+            describe = getattr(self.policy, "describe_index", None)
             out = {
                 "requests": self._requests,
                 "batches": self._batches,
+                # which static-tier index serves the lookups (flat exact
+                # vs injected ANN — DESIGN.md §11)
+                "static_index": describe() if describe else "unknown",
                 "mean_batch_size": round(
                     self._batched_requests / max(self._batches, 1), 2),
                 "static_hit_rate": self._tier_counts["static"] / n,

@@ -38,6 +38,37 @@ def test_sharded_topk_matches_oracle():
     """))
 
 
+def test_sharded_ivf_topk_matches_flat_oracle():
+    """Per-shard IVF scan + k-candidate merge: with full probing the
+    merged result must equal exact flat search over the whole corpus
+    (the sharded twin of the rerank-exactness argument, DESIGN.md §11)."""
+    print(_run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.index.sharded import (build_sharded_ivf,
+                                         sharded_ivf_topk)
+        from repro.index.flat import l2_normalize
+        from repro.kernels.simsearch.ref import simsearch_ref
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        rng = np.random.default_rng(3)
+        N, d = 4096, 32
+        centers = rng.normal(size=(64, d))
+        corpus = (centers[rng.integers(0, 64, N)]
+                  + 0.3 * rng.normal(size=(N, d))).astype(np.float32)
+        q = (corpus[rng.choice(N, 9)]
+             + 0.05 * rng.normal(size=(9, d))).astype(np.float32)
+        sivf = build_sharded_ivf(corpus, 4, n_clusters=16, iters=4)
+        with mesh:
+            v, i = jax.jit(lambda qq: sharded_ivf_topk(
+                qq, sivf, mesh, k=3, nprobe=16, n_candidates=64))(
+                    jnp.asarray(q))
+        cn = np.asarray(l2_normalize(jnp.asarray(corpus)))
+        vr, ir = simsearch_ref(q, cn, 3)
+        assert bool(jnp.all(i == ir)), (i, ir)
+        assert float(jnp.max(jnp.abs(v - vr))) < 1e-5
+        print("ok")
+    """))
+
+
 def test_local_candidate_retrieval_matches_reference():
     print(_run("""
         import jax, jax.numpy as jnp

@@ -1,0 +1,262 @@
+"""IVF ANN index subsystem (DESIGN.md §11).
+
+Four layers of coverage:
+
+1. **Kernel conformance** — the Pallas ``ivf_scan`` kernel (interpret
+   mode) against the pure-jnp oracle (`kernels/ivf_scan/ref.py`), exact
+   candidate ids (score desc / global-id-asc tie contract) across
+   shape sweeps, plus the jnp fast path's candidate-set agreement.
+2. **Rerank exactness** — full-probe ``ivf_search`` must reproduce flat
+   search bit-for-bit (same ids, same fp32 scores): with recall forced
+   to 1, ANN must be invisible.
+3. **Policy differential** — serve/serve_batch decisions with an
+   injected ``IVFIndex`` match the flat-index decisions request for
+   request on a synthetic trace (the `test_serve_batch` live-workload
+   machinery).
+4. **Build invariants** (property tests via `_hypothesis_compat`) —
+   the packed layout partitions the corpus (every row in exactly one
+   band slot) and the int8 quantization error bound holds.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.index.flat import FlatIndex, l2_normalize
+from repro.index.ivf import IVFIndex, build_ivf, quantize_rows
+from repro.kernels.ivf_scan.ops import ivf_scan, ivf_search
+from repro.kernels.ivf_scan.ref import ivf_scan_ref
+from repro.kernels.simsearch.ref import simsearch_ref
+
+
+def _clustered(rng, n, d, n_centers=24, noise=0.3):
+    centers = rng.normal(size=(n_centers, d))
+    rows = centers[rng.integers(0, n_centers, n)] \
+        + noise * rng.normal(size=(n, d))
+    return rows.astype(np.float32)
+
+
+def _queries(rng, corpus, b, noise=0.05):
+    q = corpus[rng.choice(len(corpus), b, replace=False)] \
+        + noise * rng.normal(size=(b, corpus.shape[1]))
+    return q.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# 1. kernel conformance
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,d,B,K,nprobe,C", [
+    (512, 16, 3, 8, 3, 8),
+    (2000, 32, 7, 32, 6, 24),
+    (1024, 64, 1, 16, 16, 64),     # full probe, B=1
+    (300, 8, 5, 4, 2, 4),          # tiny, C < nprobe*cap
+])
+def test_ivf_scan_kernel_matches_oracle(N, d, B, K, nprobe, C):
+    rng = np.random.default_rng(N + B)
+    corpus = _clustered(rng, N, d)
+    q = jnp.asarray(_queries(rng, corpus, B))
+    ivf = build_ivf(corpus, n_clusters=K, iters=4)
+    args = (ivf.centroids, ivf.codes, ivf.scales, ivf.row_ids)
+    v_ref, i_ref = ivf_scan_ref(q, *args, nprobe, C)
+    v_k, i_k = ivf_scan(q, *args, nprobe=nprobe, n_candidates=C,
+                        force="interpret")
+    assert bool(jnp.all(i_k == i_ref))
+    np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ivf_scan_jnp_path_matches_oracle_candidates():
+    """The CPU fast path may reorder exact approx-score ties but must
+    produce the same candidate set and scores as the oracle."""
+    rng = np.random.default_rng(5)
+    corpus = _clustered(rng, 3000, 32)
+    q = jnp.asarray(_queries(rng, corpus, 9))
+    ivf = build_ivf(corpus, n_clusters=40, iters=4)
+    args = (ivf.centroids, ivf.codes, ivf.scales, ivf.row_ids)
+    v_ref, i_ref = ivf_scan_ref(q, *args, 6, 24)
+    v_j, i_j = ivf_scan(q, *args, nprobe=6, n_candidates=24, force="jnp")
+    assert np.array_equal(np.sort(np.asarray(i_j)),
+                          np.sort(np.asarray(i_ref)))
+    np.testing.assert_allclose(np.sort(np.asarray(v_j)),
+                               np.sort(np.asarray(v_ref)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ivf_scan_pads_flush_as_absent():
+    """With more candidates requested than corpus rows, the tail must
+    come back as (NEG score, id -1) in oracle and kernel alike."""
+    rng = np.random.default_rng(11)
+    corpus = _clustered(rng, 60, 8, n_centers=4)
+    q = jnp.asarray(_queries(rng, corpus, 2))
+    ivf = build_ivf(corpus, n_clusters=4, iters=3)
+    args = (ivf.centroids, ivf.codes, ivf.scales, ivf.row_ids)
+    C = ivf.codes.shape[0] * ivf.codes.shape[1]   # every slot, pads incl.
+    v_ref, i_ref = ivf_scan_ref(q, *args, 4, C)
+    v_k, i_k = ivf_scan(q, *args, nprobe=4, n_candidates=C,
+                        force="interpret")
+    assert bool(jnp.all(i_k == i_ref))
+    assert np.asarray(i_ref).min() == -1          # pads present
+    assert bool(jnp.all((i_ref >= 0) | (v_ref == -2.0)))
+
+
+# ---------------------------------------------------------------------------
+# 2. rerank exactness vs flat search
+# ---------------------------------------------------------------------------
+
+def test_full_probe_search_equals_flat():
+    rng = np.random.default_rng(1)
+    corpus = _clustered(rng, 2048, 32)
+    q = jnp.asarray(_queries(rng, corpus, 16))
+    ivf = build_ivf(corpus, n_clusters=24, iters=4)
+    v_f, i_f = simsearch_ref(q, ivf.corpus, 3)
+    v_i, i_i = ivf_search(q, ivf.corpus, ivf.centroids, ivf.codes,
+                          ivf.scales, ivf.row_ids, k=3,
+                          nprobe=24, n_candidates=256)
+    # identical served rows; scores equal to float rounding (the rerank
+    # computes the same normalized dot, but XLA may re-block the gemm)
+    assert bool(jnp.all(i_f == i_i))
+    np.testing.assert_allclose(np.asarray(v_f), np.asarray(v_i),
+                               rtol=0, atol=1e-6)
+
+
+def test_search_agrees_with_flat_at_realistic_nprobe():
+    rng = np.random.default_rng(2)
+    corpus = _clustered(rng, 8192, 32, n_centers=64)
+    q = jnp.asarray(_queries(rng, corpus, 64))
+    ivf = build_ivf(corpus, iters=4)
+    v_f, i_f = simsearch_ref(q, ivf.corpus, 1)
+    v_i, i_i = ivf_search(q, ivf.corpus, ivf.centroids, ivf.codes,
+                          ivf.scales, ivf.row_ids, k=1,
+                          nprobe=16, n_candidates=64)
+    agree = np.mean(np.asarray(i_f[:, 0] == i_i[:, 0]))
+    assert agree >= 0.95, agree
+
+
+# ---------------------------------------------------------------------------
+# 3. policy differential: IVF index vs flat decisions
+# ---------------------------------------------------------------------------
+
+def _mk_policies(index):
+    from repro.core.policy import BaselinePolicy
+    from test_serve_batch import _trace_setup
+    s = _trace_setup()
+    pol = BaselinePolicy(
+        s["cfg"], s["tier"], s["answers"], s["embed_fn"], s["backend_fn"],
+        d=s["d"], embed_batch_fn=s["embed_batch_fn"],
+        backend_batch_fn=s["backend_batch_fn"], index=index)
+    return s, pol
+
+
+def _full_probe_index(tier):
+    """IVF over the trace's static tier with probe/candidate budgets
+    that force recall@C = 1, so decisions must match flat exactly."""
+    K = 16
+    ivf = build_ivf(tier.emb, n_clusters=K, iters=4,
+                    corpus_normalized=True)
+    return IVFIndex(ivf, nprobe=K,
+                    n_candidates=min(256, K * ivf.codes.shape[1]))
+
+
+@pytest.mark.parametrize("mode", ["scalar", "batch"])
+def test_policy_with_ivf_matches_flat_decisions(mode):
+    s, flat_pol = _mk_policies(index=None)
+    _, ivf_pol = _mk_policies(index=_full_probe_index(s["tier"]))
+    n, bs = 300, 32
+    if mode == "scalar":
+        flat = [flat_pol.serve(p, m)
+                for p, m in zip(s["prompts"][:n], s["metas"][:n])]
+        ivf = [ivf_pol.serve(p, m)
+               for p, m in zip(s["prompts"][:n], s["metas"][:n])]
+    else:
+        flat, ivf = [], []
+        for i in range(0, n, bs):
+            flat += flat_pol.serve_batch(s["prompts"][i:i + bs],
+                                         s["metas"][i:i + bs])
+            ivf += ivf_pol.serve_batch(s["prompts"][i:i + bs],
+                                       s["metas"][i:i + bs])
+    assert {r.served_by for r in flat} == {"static", "dynamic", "backend"}
+    for i, (a, b) in enumerate(zip(flat, ivf)):
+        assert a.served_by == b.served_by, i
+        assert a.answer == b.answer, i
+        assert a.static_origin == b.static_origin, i
+        assert a.similarity == b.similarity \
+            or abs(a.similarity - b.similarity) < 1e-5, i
+    assert flat_pol.events == ivf_pol.events
+    assert flat_pol.stats() == ivf_pol.stats()
+
+
+def test_flat_index_object_matches_default_lookup():
+    """FlatIndex is the trivial member of the injection protocol: same
+    decisions as the built-in exact path."""
+    s, default_pol = _mk_policies(index=None)
+    _, flat_pol = _mk_policies(
+        index=FlatIndex(s["tier"].emb, corpus_normalized=True))
+    n = 200
+    a = [default_pol.serve(p, m)
+         for p, m in zip(s["prompts"][:n], s["metas"][:n])]
+    b = [flat_pol.serve(p, m)
+         for p, m in zip(s["prompts"][:n], s["metas"][:n])]
+    assert [r.served_by for r in a] == [r.served_by for r in b]
+    assert [r.answer for r in a] == [r.answer for r in b]
+    assert flat_pol.describe_index().startswith("flat(")
+    assert default_pol.describe_index().startswith("flat-exact(")
+
+
+# ---------------------------------------------------------------------------
+# 4. build invariants (property tests)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(40, 400),
+       st.sampled_from([4, 8, 12]), st.sampled_from([3, 7, 16]))
+def test_ivf_partitions_corpus(seed, n, d, k):
+    rng = np.random.default_rng(seed)
+    corpus = _clustered(rng, n, d, n_centers=max(2, k))
+    ivf = build_ivf(corpus, n_clusters=k, iters=3, seed=seed % 997)
+    ids = np.asarray(ivf.row_ids)
+    real = ids[ids >= 0]
+    # every corpus row in exactly one band slot, no duplicates
+    assert sorted(real.tolist()) == list(range(n))
+    # padding slots carry no stale metadata
+    assert float(np.abs(np.asarray(ivf.codes)[ids < 0]).sum()) == 0.0
+    assert float(np.asarray(ivf.scales)[ids < 0].sum()) == 0.0
+    # centroids normalized
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(ivf.centroids), axis=1), 1.0,
+        atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 200),
+       st.sampled_from([4, 16, 64]))
+def test_quantize_dequantize_error_bound(seed, n, d):
+    rng = np.random.default_rng(seed)
+    rows = np.asarray(
+        l2_normalize(jnp.asarray(rng.normal(size=(n, d)).astype(
+            np.float32))))
+    codes, scales = quantize_rows(rows)
+    assert codes.dtype == np.int8
+    err = np.abs(rows - codes.astype(np.float32) * scales[:, None])
+    # symmetric scalar quantization: per-component error <= scale/2
+    # (plus float slack); scale = max|x|/127 <= 1/127 for unit rows
+    assert np.all(err <= scales[:, None] / 2 + 1e-6)
+    assert np.all(scales <= 1.0 / 127 + 1e-6)
+
+
+def test_balanced_build_respects_cap_and_recall_survives_spill():
+    """Bounded bands must never exceed cap, and near-duplicate queries
+    must still find their (possibly spilled) source row."""
+    rng = np.random.default_rng(9)
+    corpus = _clustered(rng, 4096, 16, n_centers=12)   # heavily skewed
+    ivf = build_ivf(corpus, n_clusters=64, iters=4, max_imbalance=1.3)
+    K, cap, _ = ivf.codes.shape
+    per_band = (np.asarray(ivf.row_ids) >= 0).sum(axis=1)
+    assert per_band.max() <= cap
+    assert cap <= -(-int(np.ceil(4096 / 64 * 1.3)) // 8) * 8
+    q = jnp.asarray(_queries(rng, corpus, 48, noise=0.03))
+    v_f, i_f = simsearch_ref(q, ivf.corpus, 1)
+    _, cand = ivf_scan(q, ivf.centroids, ivf.codes, ivf.scales,
+                       ivf.row_ids, nprobe=16, n_candidates=64)
+    got = (np.asarray(cand) == np.asarray(i_f)).any(axis=1)
+    assert got.mean() >= 0.95, got.mean()
