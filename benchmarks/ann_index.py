@@ -29,6 +29,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import (clustered_cache_workload,
+                               decision_agreement, timed_median)
+
 TAU = 0.85          # cache threshold separating near-dup hits from misses
 NPROBES = (2, 4, 8, 16)
 D = 64
@@ -37,39 +40,16 @@ B = 32              # in-flight query batch
 
 def _make_workload(n_rows: int, rng, n_centers: int | None = None,
                    b: int = B, d: int = D):
-    """Clustered corpus + cache-like queries: most queries are noisy
-    near-duplicates of corpus rows (hits at TAU), the rest are fresh
-    directions (misses)."""
-    n_centers = n_centers or max(64, n_rows // 256)
-    centers = rng.normal(size=(n_centers, d)).astype(np.float32)
-    rows = centers[rng.integers(0, n_centers, n_rows)] \
-        + 0.35 * rng.normal(size=(n_rows, d)).astype(np.float32)
-    rows /= np.linalg.norm(rows, axis=1, keepdims=True)
-
-    n_dup = int(0.7 * b)
-    src = rng.choice(n_rows, n_dup, replace=False)
-    dup = rows[src] + 0.05 * rng.normal(size=(n_dup, d)).astype(np.float32)
-    fresh = rng.normal(size=(b - n_dup, d)).astype(np.float32)
-    q = np.concatenate([dup, fresh]).astype(np.float32)
-    q /= np.linalg.norm(q, axis=1, keepdims=True)
-    return rows, q
+    return clustered_cache_workload(n_rows, rng, b, d,
+                                    n_centers=n_centers)
 
 
 def _time(fn, reps: int = 5) -> float:
-    """Median wall seconds of ``fn()`` after a compile/warmup call."""
-    jax.block_until_ready(fn())
-    ts = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return timed_median(fn, reps)
 
 
 def _decision_agreement(v_flat, i_flat, v_ivf, i_ivf, tau=TAU) -> float:
-    hit_f, hit_i = v_flat >= tau, v_ivf >= tau
-    same = (hit_f == hit_i) & (~hit_f | (i_flat == i_ivf))
-    return float(np.mean(same))
+    return decision_agreement(v_flat, i_flat, v_ivf, i_ivf, tau)
 
 
 def _bench_one(n_rows: int, rng, nprobes=NPROBES, reps: int = 5,

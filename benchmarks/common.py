@@ -4,7 +4,9 @@ from __future__ import annotations
 import dataclasses
 import time
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.simulate import (simulate, simulate_sweep, summarize,
                                  summarize_sweep, sweep_from_configs)
@@ -65,6 +67,49 @@ def run_policy_sweep(bench, cfgs, krites):
         r["wall_s"] = round(wall, 2)
         r["us_per_req"] = us
     return rows, wall, us
+
+
+def clustered_cache_workload(n_rows: int, rng, b: int, d: int,
+                             n_centers: int | None = None):
+    """Clustered corpus + cache-like queries, shared by the ANN index
+    benchmarks (`ann_index`, `dyn_index`): most queries are noisy
+    near-duplicates of corpus rows (hits at the cache threshold), the
+    rest fresh directions (misses). Returns (rows (n, d), q (b, d)),
+    both L2-normalized."""
+    n_centers = n_centers or max(64, n_rows // 256)
+    centers = rng.normal(size=(n_centers, d)).astype(np.float32)
+    rows = centers[rng.integers(0, n_centers, n_rows)] \
+        + 0.35 * rng.normal(size=(n_rows, d)).astype(np.float32)
+    rows /= np.linalg.norm(rows, axis=1, keepdims=True)
+
+    n_dup = int(0.7 * b)
+    src = rng.choice(n_rows, n_dup, replace=False)
+    dup = rows[src] + 0.05 * rng.normal(size=(n_dup, d)).astype(np.float32)
+    fresh = rng.normal(size=(b - n_dup, d)).astype(np.float32)
+    q = np.concatenate([dup, fresh]).astype(np.float32)
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    return rows, q
+
+
+def timed_median(fn, reps: int = 5) -> float:
+    """Median wall seconds of ``fn()`` after a compile/warmup call."""
+    jax.block_until_ready(fn())
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def decision_agreement(v_exact, i_exact, v_ann, i_ann,
+                       tau: float) -> float:
+    """Fraction of queries whose served decision matches exact search:
+    same hit/miss verdict at the cache threshold and, on hits, the
+    same served row/slot."""
+    hit_e, hit_a = v_exact >= tau, v_ann >= tau
+    same = (hit_e == hit_a) & (~hit_e | (i_exact == i_ann))
+    return float(np.mean(same))
 
 
 def default_cfg(name: str, **kw) -> CacheConfig:

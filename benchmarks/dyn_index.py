@@ -1,0 +1,203 @@
+"""Dynamic-tier lookup benchmark: flat masked scan vs the segmented
+incremental ANN index (DESIGN.md §12), over live-entry count x
+promotion rate.
+
+The dynamic tier grows online as the judge approves promotions, so its
+lookup is the one scan that cannot be pre-built offline. The flat path
+costs B*C*d per micro-batch at capacity C regardless of how the tier
+got there; the segmented index serves the same lookup from a small
+fp32 tail plus int8 cluster-major segments (the ``kernels/ivf_scan``
+band scan) with exact fp32 rerank, so steady-state cost is
+~B*(K + nprobe*cap + tail)*d and stays nearly flat in C.
+
+Per (live entries, promotion-rate) operating point:
+- ``us_per_call`` / ``speedup_vs_flat`` — jitted end-to-end lookup
+  wall time (same query batch, warm compile) against the flat masked
+  scan over the same tier;
+- ``decision_agreement`` — fraction of queries whose served decision
+  matches the flat scan exactly (same hit/miss verdict at the cache
+  threshold tau and, on hits, the same served slot);
+- ``tail_live``/``segments``/``seals``/``merges`` — index shape after
+  the promotion churn (the compaction schedule at work).
+
+State per point: the live set is bulk-loaded as one merged segment
+(the post-compaction steady state), then ``rate * live`` promotion
+writes are replayed through ``record_write`` — overwriting occupied
+slots exactly as LRU eviction + upsert do — so the measured index
+carries a real mix of tail, sealed segments, and tombstones.
+
+    PYTHONPATH=src python -m benchmarks.dyn_index [--smoke]
+
+``--smoke`` is the CI entry (scripts/ci.sh): a small live set with
+heavy churn, asserting decision agreement 1.0 vs flat and that no
+tombstoned (overwritten) slot is ever served.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (clustered_cache_workload,
+                               decision_agreement, timed_median)
+
+TAU = 0.85
+D = 64
+B = 32
+RATES = (0.02, 0.1)
+NPROBES = (8, 16, 32)
+
+
+def _make_state(n_live: int, rng, d: int = D, b: int = B):
+    """Clustered live set + cache-like queries (near-duplicate heavy):
+    the shared ANN-benchmark workload over the dynamic tier's rows."""
+    return clustered_cache_workload(n_live, rng, b, d)
+
+
+def _make_tier(rows: np.ndarray, capacity: int):
+    from repro.core.tiers import DynamicTier
+    n, d = rows.shape
+    emb = np.zeros((capacity, d), np.float32)
+    emb[:n] = rows
+    valid = np.zeros(capacity, bool)
+    valid[:n] = True
+    return DynamicTier(
+        emb=jnp.asarray(emb), cls=jnp.zeros(capacity, jnp.int32),
+        answer_ref=jnp.full(capacity, -1, jnp.int32),
+        static_origin=jnp.zeros(capacity, bool),
+        valid=jnp.asarray(valid),
+        last_used=jnp.zeros(capacity, jnp.int32),
+        written_at=jnp.zeros(capacity, jnp.int32))
+
+
+def _apply_churn(tier, index, rng, n_writes: int):
+    """Replay promotion churn: each write lands a fresh normalized key
+    in an occupied slot (upsert/LRU overwrite), through both the tier
+    and the index, exercising tombstones + seal + merge."""
+    from repro.core import tiers as T
+    capacity = tier.emb.shape[0]
+    slots = rng.integers(0, capacity, n_writes)
+    vecs = rng.normal(size=(n_writes, tier.emb.shape[1])).astype(
+        np.float32)
+    vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    # tier update as one scatter (last write per slot wins, like the
+    # batched serving path); index updates replay write-for-write
+    last = {}
+    for i, s in enumerate(slots):
+        last[int(s)] = i
+    order = np.asarray(sorted(last, key=last.get))
+    tier = tier._replace(
+        emb=tier.emb.at[order].set(vecs[[last[int(s)] for s in order]]),
+        valid=tier.valid.at[order].set(True))
+    for i, s in enumerate(slots):
+        index.record_write(int(s), vecs[i])
+    return tier
+
+
+def _time(fn, reps: int = 5) -> float:
+    return timed_median(fn, reps)
+
+
+def _agreement(v_flat, i_flat, v_seg, i_seg, tau=TAU) -> float:
+    return decision_agreement(v_flat, i_flat, v_seg, i_seg, tau)
+
+
+def _bench_one(n_live: int, rate: float, rng, reps: int = 5,
+               tail_rows: int = 4096, nprobes=NPROBES):
+    from repro.core.tiers import dynamic_lookup_batch
+    from repro.index.segmented import SegmentedIndex
+
+    rows, q_np = _make_state(n_live, rng)
+    q = jnp.asarray(q_np)
+    tier = _make_tier(rows, n_live)
+
+    t0 = time.perf_counter()
+    index = SegmentedIndex(n_live, D, tail_rows=tail_rows,
+                           n_candidates=64)
+    index.bulk_load(np.arange(n_live, dtype=np.int32), rows)
+    tier = _apply_churn(tier, index, rng, int(rate * n_live))
+    build_s = time.perf_counter() - t0
+
+    flat_t = _time(lambda: dynamic_lookup_batch(tier, q), reps)
+    v_f, i_f = jax.device_get(dynamic_lookup_batch(tier, q))
+
+    st = index.stats()
+    out = []
+    for nprobe in nprobes:
+        index.nprobe = nprobe
+        seg_t = _time(lambda: dynamic_lookup_batch(tier, q, index=index),
+                      reps)
+        v_s, i_s = jax.device_get(
+            dynamic_lookup_batch(tier, q, index=index))
+        out.append({
+            "name": f"dyn_index/L{n_live}_rate{rate}_nprobe{nprobe}",
+            "us_per_call": round(1e6 * seg_t, 1),
+            "flat_us_per_call": round(1e6 * flat_t, 1),
+            "speedup_vs_flat": round(flat_t / seg_t, 2),
+            "decision_agreement": _agreement(v_f, i_f, v_s, i_s),
+            "live": st["live"], "tail_live": st["tail_live"],
+            "segments": st["segments"], "seals": st["seals"],
+            "merges": st["merges"], "tombstones": st["tombstones"],
+            "build_s": round(build_s, 2), "B": B, "d": D,
+        })
+    return out
+
+
+def run(scale: str = "small"):
+    sizes = [65_536, 262_144]
+    if scale == "full":
+        sizes.append(524_288)
+    rng = np.random.default_rng(0)
+    return [row for n in sizes for rate in RATES
+            for row in _bench_one(n, rate, rng)]
+
+
+def smoke() -> None:
+    """CI gate: small live set, heavy churn; segmented decisions must
+    agree with the flat masked scan and never serve overwritten slots."""
+    from repro.core.tiers import dynamic_lookup_batch
+    from repro.index.segmented import SegmentedIndex
+
+    rng = np.random.default_rng(0)
+    n_live = 8192
+    rows, q_np = _make_state(n_live, rng)
+    q = jnp.asarray(q_np)
+    tier = _make_tier(rows, n_live)
+    # covering budgets (full probe, candidate budget >= any segment's
+    # live rows, tail fully scanned): recall is 1 by construction, so
+    # the agreement==1.0 gate is structural, not empirical
+    index = SegmentedIndex(n_live, D, tail_rows=512, nprobe=None,
+                           n_candidates=2 * n_live, tail_candidates=512,
+                           compact_every=3)
+    index.bulk_load(np.arange(n_live, dtype=np.int32), rows)
+    tier = _apply_churn(tier, index, rng, 2048)
+
+    v_f, i_f = jax.device_get(dynamic_lookup_batch(tier, q))
+    v_s, i_s = jax.device_get(dynamic_lookup_batch(tier, q, index=index))
+    agree = _agreement(v_f, i_f, v_s, i_s)
+    st = index.stats()
+    assert st["seals"] >= 4 and st["tombstones"] > 0, st
+    assert (v_f >= TAU).any(), "smoke workload produced no cache hits"
+    assert agree == 1.0, f"decision agreement {agree} < 1.0"
+    assert np.array_equal(i_f, i_s), "served slots diverge from flat"
+    print(f"[OK] dyn_index smoke: live={st['live']} "
+          f"segs={st['segments']} seals={st['seals']} "
+          f"merges={st['merges']} tombstones={st['tombstones']}, "
+          f"decision agreement {agree:.3f}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=["small", "full"], default="small")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: churned small index + decision-"
+                         "agreement asserts vs the flat masked scan")
+    a = ap.parse_args()
+    if a.smoke:
+        smoke()
+    else:
+        for r in run(scale=a.scale):
+            print(r)

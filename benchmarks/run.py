@@ -5,7 +5,7 @@
 Registered modules (see each module's docstring for what it reproduces):
 ``table1``, ``fig2``, ``greyzone_roi``, ``latency_async``,
 ``verifier_fidelity``, ``kernels``, ``serve_batched``, ``sweep``,
-``ann_index``.
+``ann_index``, ``dyn_index``.
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = remaining fields
 as compact JSON) and writes results/benchmarks.json.
@@ -27,9 +27,9 @@ def main() -> None:
                     help="comma-separated module names")
     args = ap.parse_args()
 
-    from benchmarks import (ann_index, fig2, greyzone_roi, kernels_bench,
-                            latency_async, serve_batched, sweep, table1,
-                            verifier_fidelity)
+    from benchmarks import (ann_index, dyn_index, fig2, greyzone_roi,
+                            kernels_bench, latency_async, serve_batched,
+                            sweep, table1, verifier_fidelity)
     modules = {
         "table1": table1, "fig2": fig2, "greyzone_roi": greyzone_roi,
         "latency_async": latency_async,
@@ -38,6 +38,7 @@ def main() -> None:
         "serve_batched": serve_batched,
         "sweep": sweep,
         "ann_index": ann_index,
+        "dyn_index": dyn_index,
     }
     if args.only:
         keep = set(args.only.split(","))

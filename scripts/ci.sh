@@ -27,4 +27,7 @@ python -m benchmarks.sweep --configs 16 --no-sequential
 echo "== ivf smoke (build + scan + decision-agreement) =="
 python -m benchmarks.ann_index --smoke
 
+echo "== segmented dynamic-index smoke (churn + agreement-1.0 gate) =="
+python -m benchmarks.dyn_index --smoke
+
 echo "== CI OK =="

@@ -36,6 +36,7 @@ class PoolStats:
     approved: int = 0
     retried: int = 0
     redispatched: int = 0
+    duplicate_completions: int = 0
     failed: int = 0
 
 
@@ -76,6 +77,7 @@ class VerifyAndPromotePool:
 
     # -- producer side (called from the serving path; never blocks) -------
     def submit(self, key: tuple, payload: dict) -> bool:
+        task = VerifyTask(key, payload)
         with self._lock:
             self.stats.submitted += 1
             if key in self._inflight:
@@ -84,9 +86,13 @@ class VerifyAndPromotePool:
             if not self._take_token():
                 self.stats.rate_limited += 1
                 return False
-            self._inflight[key] = time.monotonic()
+            # [dispatch time, task, outstanding copies]: the reaper
+            # re-dispatches a stuck task to another worker and bumps
+            # the copy count; the key leaves the set when a copy wins
+            # or every copy has terminally failed
+            self._inflight[key] = [time.monotonic(), task, 1]
         try:
-            self.q.put_nowait(VerifyTask(key, payload))
+            self.q.put_nowait(task)
             return True
         except queue.Full:
             with self._lock:
@@ -110,8 +116,9 @@ class VerifyAndPromotePool:
                 if not self._take_token():
                     self.stats.rate_limited += 1
                     continue
-                self._inflight[key] = time.monotonic()
-                accepted.append(VerifyTask(key, payload))
+                task = VerifyTask(key, payload)
+                self._inflight[key] = [time.monotonic(), task, 1]
+                accepted.append(task)
         n = 0
         for task in accepted:
             try:
@@ -144,13 +151,24 @@ class VerifyAndPromotePool:
                 approved = self.judge_fn(task.payload)
                 with self._lock:
                     self.stats.judged += 1
-                    if approved:
-                        self.stats.approved += 1
-                if approved:
-                    # idempotent upsert — safe under duplicate dispatch
+                    # first completion wins: a re-dispatched duplicate
+                    # arriving after the winner popped the key skips
+                    # the promote (which is idempotent anyway)
+                    live = task.key in self._inflight
+                if live and approved:
+                    # idempotent upsert — safe under duplicate dispatch.
+                    # The key stays inflight until the promote lands,
+                    # so a transient promote failure hits the retry
+                    # path below instead of being dropped, and drain()
+                    # keeps waiting through the backoff.
                     self.promote_fn(task.payload)
                 with self._lock:
-                    self._inflight.pop(task.key, None)
+                    won = live and self._inflight.pop(task.key,
+                                                      None) is not None
+                    if won and approved:
+                        self.stats.approved += 1
+                    elif not won:  # another copy won first
+                        self.stats.duplicate_completions += 1
             except Exception:  # noqa: BLE001 — transient failure: retry
                 task.attempts += 1
                 if task.attempts < self._max_attempts:
@@ -160,26 +178,48 @@ class VerifyAndPromotePool:
                     try:
                         self.q.put_nowait(task)
                     except queue.Full:
-                        with self._lock:
-                            self.stats.failed += 1
-                            self._inflight.pop(task.key, None)
+                        self._abandon_copy(task.key)
                 else:
-                    with self._lock:
-                        self.stats.failed += 1
-                        self._inflight.pop(task.key, None)
+                    self._abandon_copy(task.key)
+
+    def _abandon_copy(self, key: tuple) -> None:
+        """One copy of an inflight task failed terminally. The key only
+        leaves the set when no copy remains, so a failed re-dispatched
+        duplicate cannot orphan a straggler that later completes."""
+        with self._lock:
+            entry = self._inflight.get(key)
+            if entry is None:
+                return            # another copy already completed it
+            self.stats.failed += 1
+            entry[2] -= 1
+            if entry[2] <= 0:
+                self._inflight.pop(key, None)
 
     def _reap_stragglers(self):
-        """Re-dispatch tasks stuck past the deadline (straggler
-        mitigation; completion is idempotent so duplicates are safe)."""
+        """Re-dispatch tasks stuck past the deadline to another worker
+        (straggler mitigation, §3.1): a duplicate of the stuck task is
+        re-enqueued; whichever copy completes first pops the inflight
+        key and wins, the loser sees the key gone and skips the
+        (idempotent) promote."""
         while not self._stop.is_set():
-            time.sleep(self._deadline / 2)
+            self._stop.wait(self._deadline / 2)
             now = time.monotonic()
             with self._lock:
-                stuck = [k for k, t0 in self._inflight.items()
-                         if now - t0 > self._deadline]
-                for k in stuck:
-                    self._inflight[k] = now
-                    self.stats.redispatched += 1
+                stuck = [(k, e) for k, e in self._inflight.items()
+                         if now - e[0] > self._deadline]
+                for _, e in stuck:
+                    e[0] = now
+            for k, e in stuck:
+                dup = VerifyTask(k, e[1].payload, attempts=e[1].attempts)
+                try:
+                    self.q.put_nowait(dup)
+                    with self._lock:
+                        self.stats.redispatched += 1
+                        entry = self._inflight.get(k)
+                        if entry is not None:
+                            entry[2] += 1
+                except queue.Full:
+                    pass   # still tracked; next sweep retries
 
     def drain(self, timeout_s: float = 30.0):
         """Block until the queue is empty (tests / shutdown only)."""

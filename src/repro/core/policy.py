@@ -103,12 +103,18 @@ class BaselinePolicy:
                  backend_fn: Callable, d: int, *,
                  embed_batch_fn: Optional[Callable] = None,
                  backend_batch_fn: Optional[Callable] = None,
-                 index=None):
+                 index=None, dyn_index=None):
         self.cfg = cfg
         self.static = static_tier
         # injectable static-tier index (FlatIndex/IVFIndex, DESIGN.md
         # §11); None = exact flat lookup over tier.emb
         self.index = index
+        # injectable dynamic-tier index (SegmentedIndex, DESIGN.md §12);
+        # None = exact flat masked scan. "segmented" builds the default.
+        if dyn_index == "segmented":
+            from repro.index.segmented import SegmentedIndex
+            dyn_index = SegmentedIndex(cfg.capacity, d)
+        self.dyn_index = dyn_index
         self.static_answers = static_answers
         self.embed_fn = embed_fn
         self.backend_fn = backend_fn
@@ -132,6 +138,14 @@ class BaselinePolicy:
 
     def _serve_static(self, idx: int):
         return self.static_answers[int(self._static_ref_np[idx])]
+
+    def _dyn_topk(self, dyn: T.DynamicTier, q: jax.Array):
+        """Dynamic-tier top-1 for a (B, d) query block: exact masked
+        matmul, or the injected segmented index (DESIGN.md §12)."""
+        if self.dyn_index is None:
+            return _masked_dyn_topk(dyn.emb, dyn.valid, q)
+        vals, idx = self.dyn_index.topk(q, dyn.emb, k=1)
+        return vals[:, 0], idx[:, 0]
 
     def _host_lru_slot(self) -> int:
         """Host twin of tiers._lru_slot over the mirrored metadata."""
@@ -162,8 +176,7 @@ class BaselinePolicy:
             return res
 
         with self.dyn_lock:
-            sd, jd = _masked_dyn_topk(self.dyn.emb, self.dyn.valid,
-                                      v[None])
+            sd, jd = self._dyn_topk(self.dyn, v[None])
             s_d, j = float(sd[0]), int(jd[0])
             if s_d >= self.cfg.tau_dynamic:
                 self.dyn = T.touch(self.dyn, j, self.t)
@@ -183,6 +196,8 @@ class BaselinePolicy:
                     jnp.int32((meta or {}).get("cls", -1)),
                     jnp.int32(-1), jnp.asarray(False), self.t)
                 self._mirror_write(slot, self.t, static_origin=False)
+                if self.dyn_index is not None:
+                    self.dyn_index.record_write(slot, np.asarray(v))
                 self.dyn_answers[slot] = answer
             res = ServeResult(answer, "backend", False, s_d,
                               time.monotonic() - t0)
@@ -272,8 +287,7 @@ class BaselinePolicy:
             # tier object is immutable, so `snap` stays the batch-start
             # state while mutations accumulate on the host
             snap = self.dyn
-            s_db, j_db = jax.device_get(
-                _masked_dyn_topk(snap.emb, snap.valid, V))
+            s_db, j_db = jax.device_get(self._dyn_topk(snap, V))
             s_db, j_db = s_db[:B], j_db[:B]
 
             written: dict = {}   # slot -> backend row that wrote it last
@@ -386,6 +400,10 @@ class BaselinePolicy:
             cls = np.asarray([w_meta[s][2] for s in slots], np.int32)
             dyn = _bulk_insert(dyn, V, _pad_to(slots, B), _pad_to(rows, B),
                                _pad_to(ts, B), _pad_to(cls, B))
+            if self.dyn_index is not None:
+                V_np = np.asarray(V)
+                for s, r in zip(slots, rows):
+                    self.dyn_index.record_write(int(s), V_np[r])
         upd = set(w_meta) | touched
         if upd:
             sl = np.fromiter(upd, np.int64, len(upd))
@@ -400,6 +418,21 @@ class BaselinePolicy:
             return f"flat-exact(S={len(self._static_ref_np)})"
         describe = getattr(self.index, "describe", None)
         return describe() if describe else type(self.index).__name__
+
+    def describe_dyn_index(self) -> str:
+        """Telemetry string for the dynamic-tier lookup path."""
+        if self.dyn_index is None:
+            return f"flat-masked(C={self.cfg.capacity})"
+        describe = getattr(self.dyn_index, "describe", None)
+        return describe() if describe else type(self.dyn_index).__name__
+
+    def dyn_index_stats(self) -> Optional[dict]:
+        """Segment/tail occupancy + compaction counters of the injected
+        dynamic index (None on the flat path) — surfaced by the router."""
+        if self.dyn_index is None:
+            return None
+        stats = getattr(self.dyn_index, "stats", None)
+        return stats() if stats else None
 
     def stats(self) -> dict:
         n = max(len(self.events), 1)
@@ -423,10 +456,11 @@ class KritesPolicy(BaselinePolicy):
                  judge_rate_per_s: float = float("inf"), *,
                  embed_batch_fn: Optional[Callable] = None,
                  backend_batch_fn: Optional[Callable] = None,
-                 index=None):
+                 index=None, dyn_index=None):
         super().__init__(cfg, static_tier, static_answers, embed_fn,
                          backend_fn, d, embed_batch_fn=embed_batch_fn,
-                         backend_batch_fn=backend_batch_fn, index=index)
+                         backend_batch_fn=backend_batch_fn, index=index,
+                         dyn_index=dyn_index)
         self.pool = VerifyAndPromotePool(
             judge_fn=lambda payload: judge_fn(**payload["judge_args"]),
             promote_fn=self._promote,
@@ -478,7 +512,10 @@ class KritesPolicy(BaselinePolicy):
         v = jnp.asarray(payload["v"])
         answer = self._serve_static(h_idx)
         with self.dyn_lock:
-            s_d, j = T.dynamic_lookup(self.dyn, v)
+            # the async promotion path rides the same index: dedup
+            # lookup through the segmented tail/segments, fresh write
+            # into the tail (DESIGN.md §12)
+            s_d, j = T.dynamic_lookup(self.dyn, v, index=self.dyn_index)
             dup = float(s_d) >= 0.9999
             slot = int(j) if dup else self._host_lru_slot()
             self.dyn = T._write(
@@ -487,6 +524,8 @@ class KritesPolicy(BaselinePolicy):
                 jnp.int32(int(self._static_ref_np[h_idx])),
                 jnp.asarray(True), payload["enq_t"])
             self._mirror_write(slot, payload["enq_t"], static_origin=True)
+            if self.dyn_index is not None:
+                self.dyn_index.record_write(slot, payload["v"])
             self.dyn_answers[slot] = answer
 
     def stats(self) -> dict:

@@ -68,8 +68,18 @@ def static_lookup(tier: StaticTier, q: jax.Array):
     return sims[idx], idx.astype(jnp.int32)
 
 
-def dynamic_lookup(tier: DynamicTier, q: jax.Array):
-    """q (d,) normalized -> (best similarity, best index) over valid rows."""
+def dynamic_lookup(tier: DynamicTier, q: jax.Array, index=None):
+    """q (d,) normalized -> (best similarity, best index) over valid rows.
+
+    An injected ``index`` (``SegmentedIndex``, DESIGN.md §12) takes over
+    the scan: candidates from its tail/segments are exact-reranked
+    against ``tier.emb``, so the served (score, slot) pair equals this
+    flat masked scan whenever the true best live slot survives into the
+    candidate set.
+    """
+    if index is not None:
+        vals, idx = index.topk(q[None], tier.emb, k=1)
+        return vals[0, 0], idx[0, 0].astype(jnp.int32)
     sims = tier.emb @ q
     sims = jnp.where(tier.valid, sims, -jnp.inf)
     idx = jnp.argmax(sims)
@@ -96,9 +106,14 @@ def static_lookup_batch(tier: StaticTier, q: jax.Array, index=None):
     return vals[:, 0], idx[:, 0].astype(jnp.int32)
 
 
-def dynamic_lookup_batch(tier: DynamicTier, q: jax.Array):
+def dynamic_lookup_batch(tier: DynamicTier, q: jax.Array, index=None):
     """Batched twin of :func:`dynamic_lookup`: one masked matmul for the
-    whole micro-batch. q (B, d) -> (best sims (B,), best idx (B,))."""
+    whole micro-batch. q (B, d) -> (best sims (B,), best idx (B,)).
+    ``index`` mirrors :func:`dynamic_lookup` (sub-linear segmented scan
+    + exact rerank instead of the full masked matmul)."""
+    if index is not None:
+        vals, idx = index.topk(q, tier.emb, k=1)
+        return vals[:, 0], idx[:, 0].astype(jnp.int32)
     sims = q @ tier.emb.T
     sims = jnp.where(tier.valid[None, :], sims, -jnp.inf)
     idx = jnp.argmax(sims, axis=1)
@@ -182,9 +197,23 @@ def touch_many(tier: DynamicTier, slots, nows) -> DynamicTier:
             jnp.asarray(nows, jnp.int32)))
 
 
-def evict_expired(tier: DynamicTier, now, ttl: int) -> DynamicTier:
-    """TTL sweep: invalidate entries older than ttl."""
+def evict_expired(tier: DynamicTier, now, ttl: int,
+                  index=None) -> DynamicTier:
+    """TTL sweep: invalidate entries older than ttl.
+
+    Callers serving through an injected dynamic index (DESIGN.md §12)
+    must pass it here: eviction without a rewrite is the one mutation
+    the index cannot observe through ``record_write``, and a stale
+    live entry would let an indexed lookup serve an expired slot the
+    flat masked scan rejects.
+    """
     alive = now - tier.written_at <= ttl
+    if index is not None:
+        import numpy as np
+        expired = np.nonzero(
+            np.asarray(jnp.logical_and(tier.valid, ~alive)))[0]
+        for slot in expired:
+            index.invalidate(int(slot))
     return tier._replace(valid=jnp.logical_and(tier.valid, alive))
 
 

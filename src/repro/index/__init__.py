@@ -1,7 +1,9 @@
 from repro.index.flat import (FlatIndex, cosine_topk, l2_normalize,
                               masked_cosine_topk, topk_scores)
 from repro.index.ivf import IVF, IVFIndex, build_ivf, train_kmeans
+from repro.index.segmented import SegmentedIndex
 
 __all__ = ["cosine_topk", "topk_scores", "l2_normalize",
            "masked_cosine_topk", "FlatIndex",
-           "IVF", "IVFIndex", "build_ivf", "train_kmeans"]
+           "IVF", "IVFIndex", "build_ivf", "train_kmeans",
+           "SegmentedIndex"]

@@ -41,8 +41,9 @@ def _scan_jnp(queries, centroids, codes, scales, row_ids, nprobe,
     sims = jnp.einsum("bpcd,bd->bpc", g, qn) * scales[cids]
     ids = row_ids[cids]
     B = queries.shape[0]
-    fv = jnp.where(ids < 0, NEG, sims).reshape(B, -1)
-    fi = ids.reshape(B, -1)
+    flat = ids.shape[1] * ids.shape[2]   # explicit: B may be 0, which
+    fv = jnp.where(ids < 0, NEG, sims).reshape(B, flat)  # breaks -1
+    fi = ids.reshape(B, flat)
     vals, pos = jax.lax.top_k(fv, n_candidates)
     cand = jnp.take_along_axis(fi, pos, axis=1)
     order = jnp.lexsort((cand, -vals))

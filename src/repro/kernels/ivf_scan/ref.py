@@ -58,8 +58,9 @@ def ivf_scan_ref(queries: jax.Array, centroids: jax.Array,
     sims = jnp.where(g_ids < 0, NEG, sims)
 
     B = q.shape[0]
-    flat_v = sims.reshape(B, -1)
-    flat_i = g_ids.reshape(B, -1)
+    flat = g_ids.shape[1] * g_ids.shape[2]  # explicit: B may be 0,
+    flat_v = sims.reshape(B, flat)          # which breaks -1 inference
+    flat_i = g_ids.reshape(B, flat)
     # descending score, ties -> lowest global row id; pads (NEG) sink
     # to the tail because no real cosine can reach NEG
     order = jnp.lexsort((flat_i, -flat_v))[:, :n_candidates]

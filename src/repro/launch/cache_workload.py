@@ -77,11 +77,15 @@ def run(B: int = 4096, S: int = 4_194_304, d: int = 64, k: int = 4,
 def run_live(n_requests: int = 800, n_clients: int = 8,
              max_batch: int = 32, max_wait_ms: float = 2.0,
              tau: float = 0.92, index: str = "flat",
-             static_rows: int = 0, nprobe: int = 8) -> dict:
+             static_rows: int = 0, nprobe: int = 8,
+             dyn_index: str = "flat", seg_rows: int = 4096,
+             compact_every: int = 4) -> dict:
     """Live router-fronted serving demo: the batched serving path under
     concurrent client load, with per-tier hit and latency telemetry.
     ``index='ivf'`` swaps the static lookup for the quantized ANN index
-    (padding the tier to ``static_rows`` synthetic entries first)."""
+    (padding the tier to ``static_rows`` synthetic entries first);
+    ``dyn_index='segmented'`` serves dynamic-tier lookups through the
+    incremental tail+segments index (DESIGN.md §12)."""
     import threading
 
     import numpy as np
@@ -90,7 +94,7 @@ def run_live(n_requests: int = 800, n_clients: int = 8,
     from repro.core.policy import KritesPolicy
     from repro.core.tiers import CacheConfig
     from repro.embedding.embedder import Embedder
-    from repro.launch.serve import build_demo_tier
+    from repro.launch.serve import build_demo_tier, build_dyn_index
     from repro.serving.router import CacheRouter
 
     embed = Embedder(d_out=64)
@@ -102,12 +106,16 @@ def run_live(n_requests: int = 800, n_clients: int = 8,
         [f"[curated] {p}" for p in intents],
         static_rows=static_rows, index=index, nprobe=nprobe)
 
+    cfg = CacheConfig(tau, tau, sigma_min=0.3, capacity=1024)
     policy = KritesPolicy(
-        CacheConfig(tau, tau, sigma_min=0.3, capacity=1024), tier, answers,
+        cfg, tier, answers,
         embed, backend_fn=lambda p: f"generated({p})",
         judge_fn=OracleJudge(), d=64,
         backend_batch_fn=lambda ps: [f"generated({p})" for p in ps],
-        index=idx_obj)
+        index=idx_obj,
+        dyn_index=build_dyn_index(dyn_index, cfg.capacity, 64,
+                                  seg_rows=seg_rows,
+                                  compact_every=compact_every))
     router = CacheRouter(policy, max_batch=max_batch,
                          max_wait_ms=max_wait_ms)
 
@@ -158,11 +166,22 @@ if __name__ == "__main__":
                     help="pad the live demo's curated tier to this many "
                          "rows before building the index")
     ap.add_argument("--nprobe", type=int, default=8)
+    ap.add_argument("--dyn-index", choices=["flat", "segmented"],
+                    default="flat",
+                    help="dynamic-tier lookup strategy for --live "
+                         "(DESIGN.md §12)")
+    ap.add_argument("--seg-rows", type=int, default=4096,
+                    help="segmented dynamic index tail capacity")
+    ap.add_argument("--compact-every", type=int, default=4,
+                    help="merge sealed segments whenever this many "
+                         "have accumulated")
     a = ap.parse_args()
     if a.live:
         run_live(n_requests=a.requests, n_clients=a.clients,
                  max_batch=a.max_batch, index=a.index,
-                 static_rows=a.static_rows, nprobe=a.nprobe)
+                 static_rows=a.static_rows, nprobe=a.nprobe,
+                 dyn_index=a.dyn_index, seg_rows=a.seg_rows,
+                 compact_every=a.compact_every)
     else:
         run(multi_pod=False)
         run(multi_pod=True)

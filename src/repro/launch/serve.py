@@ -49,6 +49,21 @@ def build_demo_tier(emb_rows, answers, static_rows: int = 0,
     return tier, answers, idx_obj
 
 
+def build_dyn_index(dyn_index: str, capacity: int, d: int,
+                    seg_rows: int = 4096, compact_every: int = 4):
+    """Dynamic-tier lookup strategy for the launchers (DESIGN.md §12):
+    'flat' -> None (exact masked scan), 'segmented' -> a SegmentedIndex
+    with a ``seg_rows`` tail sealing into int8 segments and a compactor
+    merging every ``compact_every`` of them."""
+    if dyn_index != "segmented":
+        return None
+    from repro.index.segmented import SegmentedIndex
+    idx = SegmentedIndex(capacity, d, tail_rows=seg_rows,
+                         compact_every=compact_every)
+    print(f"dynamic index: {idx.describe()}")
+    return idx
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -63,6 +78,17 @@ def main() -> None:
                          "synthetic entries (exercises the ANN path at "
                          "realistic tier sizes)")
     ap.add_argument("--nprobe", type=int, default=8)
+    ap.add_argument("--dyn-index", choices=["flat", "segmented"],
+                    default="flat",
+                    help="dynamic-tier lookup strategy (DESIGN.md §12); "
+                         "'segmented' serves dynamic lookups through the "
+                         "incremental tail+segments index")
+    ap.add_argument("--seg-rows", type=int, default=4096,
+                    help="segmented dynamic index: tail capacity, i.e. "
+                         "rows absorbed before sealing an int8 segment")
+    ap.add_argument("--compact-every", type=int, default=4,
+                    help="segmented dynamic index: merge sealed "
+                         "segments whenever this many have accumulated")
     args = ap.parse_args()
 
     import numpy as np
@@ -91,7 +117,11 @@ def main() -> None:
                           backend_fn=frontend.submit,
                           judge_fn=OracleJudge(), d=64,
                           backend_batch_fn=frontend.submit_many,
-                          index=index)
+                          index=index,
+                          dyn_index=build_dyn_index(
+                              args.dyn_index, cfg.capacity, 64,
+                              seg_rows=args.seg_rows,
+                              compact_every=args.compact_every))
 
     rng = np.random.default_rng(0)
     prefixes = ["", "hey ", "um, ", "please, ", "quick q: "]
@@ -110,6 +140,8 @@ def main() -> None:
     print(f"\nfinal ({time.time()-t0:.1f}s):")
     for k, v in s.items():
         print(f"  {k:22s} {v}")
+    if policy.dyn_index is not None:
+        print(f"  {'dyn_index':22s} {policy.describe_dyn_index()}")
     policy.pool.stop()
     frontend.stop()
 

@@ -167,12 +167,18 @@ class CacheRouter:
             lat = np.asarray(self._latencies, np.float64)
             n = max(self._requests, 1)
             describe = getattr(self.policy, "describe_index", None)
+            dyn_describe = getattr(self.policy, "describe_dyn_index",
+                                   None)
             out = {
                 "requests": self._requests,
                 "batches": self._batches,
                 # which static-tier index serves the lookups (flat exact
                 # vs injected ANN — DESIGN.md §11)
                 "static_index": describe() if describe else "unknown",
+                # dynamic-tier lookup path (flat masked scan vs the
+                # segmented incremental index — DESIGN.md §12)
+                "dynamic_index": dyn_describe() if dyn_describe
+                else "unknown",
                 "mean_batch_size": round(
                     self._batched_requests / max(self._batches, 1), 2),
                 "static_hit_rate": self._tier_counts["static"] / n,
@@ -181,6 +187,17 @@ class CacheRouter:
                 "static_origin_rate": self._static_origin / n,
                 "errors": self._errors,
             }
+            dyn_stats = getattr(self.policy, "dyn_index_stats", None)
+            dyn_stats = dyn_stats() if dyn_stats else None
+            if dyn_stats is not None:
+                # segment/tail occupancy + compaction counters
+                # (SegmentedIndex.stats, DESIGN.md §12)
+                out["dyn_tail_live"] = dyn_stats["tail_live"]
+                out["dyn_segments"] = dyn_stats["segments"]
+                out["dyn_segment_live"] = dyn_stats["segment_live"]
+                out["dyn_seals"] = dyn_stats["seals"]
+                out["dyn_merges"] = dyn_stats["merges"]
+                out["dyn_tombstones"] = dyn_stats["tombstones"]
             if self._last_error:
                 out["last_error"] = self._last_error
             if lat.size:

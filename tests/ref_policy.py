@@ -29,6 +29,58 @@ MISS, STATIC_HIT, DYN_HIT_DYNAMIC, DYN_HIT_PROMOTED = 0, 1, 2, 3
 DEDUP_SIM = 0.9999
 
 
+class _RefSegIndex:
+    """Pure-numpy twin of ``index/segmented.SegmentedIndex`` for the
+    reference loop: a slot-id tail that seals into frozen segments, a
+    compactor merging every ``compact_every`` of them, and tombstoning
+    on overwrite/evict. Scores come from the *tier's* embedding matrix
+    (the exact-rerank contract), so with the index's live set equal to
+    the tier's valid set — the invariant this structure maintains —
+    lookups are bit-identical to the flat masked scan. The reference
+    simulator therefore stays a decision-for-decision oracle for both
+    the flat and the segmented dynamic-lookup configs."""
+
+    def __init__(self, tail_rows: int = 16, compact_every: int = 3):
+        self.tail: dict = {}          # slot -> None (insertion order)
+        self.segments: list = []      # frozen slot-id sets
+        self.tail_rows = tail_rows
+        self.compact_every = compact_every
+        self.seals = self.merges = self.tombstones = 0
+
+    def record_write(self, slot: int) -> None:
+        self.invalidate(slot)
+        if len(self.tail) == self.tail_rows:
+            self.segments.append(set(self.tail))
+            self.tail = {}
+            self.seals += 1
+            if len(self.segments) >= self.compact_every:
+                merged = set().union(*self.segments)
+                self.segments = [merged] if merged else []
+                self.merges += 1
+        self.tail[slot] = None
+
+    def invalidate(self, slot: int) -> None:
+        if self.tail.pop(slot, 0) is None:
+            self.tombstones += 1
+        for seg in self.segments:
+            if slot in seg:
+                seg.discard(slot)
+                self.tombstones += 1
+
+    def lookup(self, dyn: "_Dyn", q: np.ndarray):
+        """Exact rerank of the live set against the tier matrix: the
+        same sims vector the flat scan computes, masked to the index's
+        live slots (tail + segments, tombstones excluded)."""
+        sims = (dyn.emb @ q).astype(np.float32)
+        live = np.zeros(len(sims), bool)
+        for store in [self.tail, *self.segments]:
+            for slot in store:
+                live[slot] = True
+        sims[~live] = -np.inf
+        j = int(np.argmax(sims))
+        return float(sims[j]), j
+
+
 @dataclass
 class _Dyn:
     """Mutable dynamic tier (struct-of-arrays, numpy)."""
@@ -39,9 +91,10 @@ class _Dyn:
     valid: np.ndarray
     last_used: np.ndarray
     written_at: np.ndarray
+    index: object = None          # optional _RefSegIndex twin
 
     @classmethod
-    def make(cls_, capacity: int, d: int) -> "_Dyn":
+    def make(cls_, capacity: int, d: int, index=None) -> "_Dyn":
         return cls_(
             emb=np.zeros((capacity, d), np.float32),
             cls=np.zeros(capacity, np.int32),
@@ -50,10 +103,13 @@ class _Dyn:
             valid=np.zeros(capacity, bool),
             last_used=np.zeros(capacity, np.int32),
             written_at=np.zeros(capacity, np.int32),
+            index=index,
         )
 
     def lookup(self, q: np.ndarray):
         """Best (similarity, index) over valid rows; (-inf, 0) if none."""
+        if self.index is not None:
+            return self.index.lookup(self, q)
         sims = (self.emb @ q).astype(np.float32)
         sims[~self.valid] = -np.inf
         j = int(np.argmax(sims))
@@ -73,6 +129,8 @@ class _Dyn:
         self.valid[slot] = True
         self.last_used[slot] = now
         self.written_at[slot] = now
+        if self.index is not None:
+            self.index.record_write(slot)
 
     def upsert(self, q, cls, ref, now, so=True):
         """Idempotent, LWW-guarded promotion write (Alg. 2 line 21)."""
@@ -94,12 +152,16 @@ class _Task:
 
 
 def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
-                 capacity=None, judge_flip=None) -> dict:
+                 capacity=None, judge_flip=None,
+                 dyn_index=None) -> dict:
     """Reference run; returns plain-numpy analogues of ``SimResult``.
 
     ``cfg`` is any object with the :class:`repro.core.tiers.CacheConfig`
     fields (tau_static, tau_dynamic, sigma_min, capacity, judge_latency,
-    dedup, judge_rate).
+    dedup, judge_rate). ``dyn_index='segmented'`` routes dynamic
+    lookups through the :class:`_RefSegIndex` twin (tail + sealed
+    segments + tombstones, exact rerank) — decisions must be identical
+    to the flat config, keeping this loop the oracle for both.
     """
     static_emb = np.asarray(static_emb, np.float32)
     static_cls = np.asarray(static_cls, np.int32)
@@ -111,7 +173,8 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
 
     C = capacity or cfg.capacity
     lat = max(1, cfg.judge_latency)
-    dyn = _Dyn.make(C, d)
+    dyn = _Dyn.make(C, d, index=_RefSegIndex()
+                    if dyn_index == "segmented" else None)
     pending: list[_Task] = []
     budget = np.float32(1.0)
 

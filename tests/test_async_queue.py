@@ -61,6 +61,121 @@ def test_retry_then_success():
     assert pool.stats.retried == 2
 
 
+def test_promote_failure_retries_until_it_lands():
+    """A transient promote_fn failure must hit the retry path, not be
+    dropped: the inflight key stays live until the promote lands, so
+    first-completion-wins bookkeeping can't eat the retry, approved
+    counts only landed promotions, and drain() waits through the
+    backoff."""
+    attempts = {"n": 0}
+    done = []
+
+    def promote(p):
+        attempts["n"] += 1
+        if attempts["n"] < 3:
+            raise RuntimeError("transient promote failure")
+        done.append(p["id"])
+
+    pool = VerifyAndPromotePool(judge_fn=lambda p: True,
+                                promote_fn=promote, n_workers=1,
+                                backoff_s=0.01)
+    pool.submit(("k", 0), {"id": 0})
+    pool.drain(5)
+    pool.stop()
+    assert done == [0]
+    assert pool.stats.retried == 2
+    assert pool.stats.approved == 1
+    assert pool.stats.duplicate_completions == 0
+
+
+def test_straggler_redispatch_first_completion_wins():
+    """A task wedged past the deadline is re-dispatched to another
+    worker; the re-dispatched copy completes and promotes, and when the
+    wedged original finally finishes it finds the key already completed
+    and must NOT promote again (first completion wins; the upsert is
+    idempotent anyway, but the duplicate is detected and counted)."""
+    gate = threading.Event()
+    stuck_started = threading.Event()
+    promoted = []
+    calls = {"n": 0}
+    lock = threading.Lock()
+
+    def judge(p):
+        with lock:
+            calls["n"] += 1
+            wedged = calls["n"] == 1
+        if wedged:
+            stuck_started.set()
+            gate.wait(10)                 # first dispatch straggles
+        return True
+
+    pool = VerifyAndPromotePool(
+        judge_fn=judge, promote_fn=lambda p: promoted.append(p["id"]),
+        n_workers=2, straggler_deadline_s=0.15)
+    assert pool.submit(("k", 0), {"id": 0})
+    assert stuck_started.wait(2)
+
+    # the reaper re-enqueues; the free worker completes the duplicate
+    t0 = time.monotonic()
+    while not promoted and time.monotonic() - t0 < 5:
+        time.sleep(0.01)
+    assert promoted == [0], "re-dispatched copy should have completed"
+    assert pool.stats.redispatched >= 1
+
+    gate.set()                            # release the wedged original
+    t0 = time.monotonic()
+    while pool.stats.duplicate_completions < 1 \
+            and time.monotonic() - t0 < 5:
+        time.sleep(0.01)
+    pool.drain(5)
+    pool.stop()
+    assert promoted == [0], "late duplicate must not promote again"
+    assert pool.stats.duplicate_completions >= 1
+    assert pool.stats.approved == 1       # one winning completion
+    assert pool.stats.judged >= 2         # both copies ran the judge
+
+
+def test_straggler_key_free_for_resubmission_after_completion():
+    """Once the winner completes, the key leaves the inflight set: a
+    fresh submit of the same key must be accepted, not deduped."""
+    pool = VerifyAndPromotePool(
+        judge_fn=lambda p: True, promote_fn=lambda p: None, n_workers=1)
+    assert pool.submit(("k", 1), {})
+    pool.drain(5)
+    assert pool.submit(("k", 1), {})      # same key, new task
+    pool.drain(5)
+    pool.stop()
+    assert pool.stats.deduped == 0
+    assert pool.stats.judged == 2
+
+
+def test_concurrent_submit_dedup_and_counters_consistent():
+    """Hammer submit() from many threads with overlapping keys: every
+    submission is accounted exactly once (accepted, deduped, or
+    rate-limited) and every accepted task completes."""
+    pool = VerifyAndPromotePool(
+        judge_fn=lambda p: True, promote_fn=lambda p: None, n_workers=2)
+    n_threads, per = 8, 50
+
+    def client(k):
+        for i in range(per):
+            pool.submit(("key", i % 17), {"id": i})
+
+    threads = [threading.Thread(target=client, args=(k,))
+               for k in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    pool.drain(10)
+    pool.stop()
+    s = pool.stats
+    assert s.submitted == n_threads * per
+    accepted = s.submitted - s.deduped - s.rate_limited - s.dropped_full
+    assert s.judged == accepted
+    assert s.approved == accepted
+
+
 def test_never_blocks_serving_path():
     """submit() must return fast even with a slow judge."""
     pool = VerifyAndPromotePool(

@@ -1,0 +1,275 @@
+"""Segmented dynamic-tier index (DESIGN.md §12).
+
+Coverage layers, mirroring `test_ivf_index.py` for the static tier:
+
+1. **Lookup equivalence** — `dynamic_lookup{,_batch}` with an injected
+   full-recall ``SegmentedIndex`` must equal the flat masked scan
+   (same slot, same score) through interleaved writes, seals, merges
+   and tombstones.
+2. **Policy differential** — serve/serve_batch decisions with
+   ``dyn_index=`` match the flat decisions request for request,
+   including Krites promotions feeding the tail through the async
+   VerifyAndPromote path (the acceptance-criterion bit-identical
+   guarantee, scalar and batched).
+3. **Telemetry** — router stats surface segment/tail occupancy and
+   compaction counts; describe strings name the path in use.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import tiers as T
+from repro.core.policy import BaselinePolicy, KritesPolicy
+from repro.index.segmented import SegmentedIndex
+from repro.serving.router import CacheRouter
+
+from test_serve_batch import _assert_rows_equal, _trace_setup
+
+
+def _full_recall_index(capacity, d, tail_rows=32, compact_every=3,
+                       background=False):
+    """Budgets that force recall 1: full probe, candidate budgets
+    covering every live row — the exact-equivalence contract config."""
+    return SegmentedIndex(capacity, d, tail_rows=tail_rows,
+                          nprobe=None, n_candidates=4 * capacity,
+                          tail_candidates=tail_rows,
+                          compact_every=compact_every,
+                          background=background)
+
+
+# ---------------------------------------------------------------------------
+# 1. lookup equivalence vs the flat masked scan
+# ---------------------------------------------------------------------------
+
+def test_lookup_matches_flat_through_churn():
+    rng = np.random.default_rng(0)
+    cap, d = 128, 16
+    tier = T.make_dynamic_tier(cap, d)
+    idx = _full_recall_index(cap, d, tail_rows=16)
+    for t in range(1, 260):
+        v = rng.standard_normal(d).astype(np.float32)
+        v /= np.linalg.norm(v)
+        slot = int(rng.integers(0, cap))
+        tier = T._write(tier, slot, jnp.asarray(v), jnp.int32(t % 5),
+                        jnp.int32(-1), jnp.asarray(False), t)
+        idx.record_write(slot, v)
+        if t % 25 == 0:
+            q = rng.standard_normal((8, d)).astype(np.float32)
+            q /= np.linalg.norm(q, axis=1, keepdims=True)
+            q = jnp.asarray(q)
+            sf, jf = T.dynamic_lookup_batch(tier, q)
+            ss, js = T.dynamic_lookup_batch(tier, q, index=idx)
+            assert np.array_equal(np.asarray(jf), np.asarray(js))
+            np.testing.assert_allclose(np.asarray(sf), np.asarray(ss),
+                                       rtol=0, atol=2e-6)
+    st = idx.stats()
+    assert st["seals"] > 5 and st["merges"] > 0 and st["tombstones"] > 0
+
+
+def test_scalar_lookup_and_empty_index_contract():
+    cap, d = 16, 8
+    tier = T.make_dynamic_tier(cap, d)
+    idx = _full_recall_index(cap, d, tail_rows=4)
+    q = jnp.asarray(np.eye(d, dtype=np.float32)[0])
+    # empty: (-inf, 0), exactly like the flat masked scan
+    sf, jf = T.dynamic_lookup(tier, q)
+    ss, js = T.dynamic_lookup(tier, q, index=idx)
+    assert float(sf) == float(ss) == -np.inf
+    assert int(jf) == int(js) == 0
+    v = np.eye(d, dtype=np.float32)[0]
+    tier = T._write(tier, 3, jnp.asarray(v), jnp.int32(1), jnp.int32(-1),
+                    jnp.asarray(False), 1)
+    idx.record_write(3, v)
+    ss, js = T.dynamic_lookup(tier, q, index=idx)
+    assert int(js) == 3 and float(ss) == pytest.approx(1.0)
+
+
+def test_tombstone_never_resurrects_across_seal_and_compact():
+    """An overwritten slot's old key must be unfindable even after the
+    stale copy was sealed into a segment and survived a merge."""
+    rng = np.random.default_rng(1)
+    cap, d = 64, 8
+    tier = T.make_dynamic_tier(cap, d)
+    idx = _full_recall_index(cap, d, tail_rows=8, compact_every=2)
+    old = rng.standard_normal(d).astype(np.float32)
+    old /= np.linalg.norm(old)
+    tier = T._write(tier, 7, jnp.asarray(old), jnp.int32(0),
+                    jnp.int32(-1), jnp.asarray(False), 1)
+    idx.record_write(7, old)
+    # bury slot 7's entry in a sealed segment, then overwrite slot 7
+    for t in range(2, 40):
+        v = rng.standard_normal(d).astype(np.float32)
+        v /= np.linalg.norm(v)
+        slot = int(rng.integers(8, cap))
+        tier = T._write(tier, slot, jnp.asarray(v), jnp.int32(0),
+                        jnp.int32(-1), jnp.asarray(False), t)
+        idx.record_write(slot, v)
+    new = rng.standard_normal(d).astype(np.float32)
+    new /= np.linalg.norm(new)
+    tier = T._write(tier, 7, jnp.asarray(new), jnp.int32(0),
+                    jnp.int32(-1), jnp.asarray(False), 99)
+    idx.record_write(7, new)
+    s, j = T.dynamic_lookup(tier, jnp.asarray(old), index=idx)
+    s_f, j_f = T.dynamic_lookup(tier, jnp.asarray(old))
+    assert int(j) == int(j_f)
+    assert float(s) == pytest.approx(float(s_f), abs=2e-6)
+    assert float(s) < 0.999     # the old key is gone, not resurrected
+    idx.compact()
+    s2, j2 = T.dynamic_lookup(tier, jnp.asarray(old), index=idx)
+    assert int(j2) == int(j) and float(s2) == pytest.approx(float(s),
+                                                            abs=2e-6)
+
+
+def test_ttl_eviction_propagates_to_index():
+    """evict_expired(index=) must tombstone expired slots in the
+    segmented index — otherwise an indexed lookup would serve an
+    expired entry the flat masked scan rejects."""
+    rng = np.random.default_rng(3)
+    cap, d = 32, 8
+    tier = T.make_dynamic_tier(cap, d)
+    idx = _full_recall_index(cap, d, tail_rows=8)
+    vecs = {}
+    for t in range(1, 21):
+        v = rng.standard_normal(d).astype(np.float32)
+        v /= np.linalg.norm(v)
+        vecs[t] = v
+        tier = T._write(tier, t % cap, jnp.asarray(v), jnp.int32(0),
+                        jnp.int32(-1), jnp.asarray(False), t)
+        idx.record_write(t % cap, v)
+    tier = T.evict_expired(tier, now=30, ttl=15, index=idx)
+    assert idx.stats()["live"] == int(tier.valid.sum())
+    for t, v in vecs.items():
+        q = jnp.asarray(v[None])
+        sf, jf = T.dynamic_lookup_batch(tier, q)
+        ss, js = T.dynamic_lookup_batch(tier, q, index=idx)
+        assert np.array_equal(np.asarray(jf), np.asarray(js))
+        both_inf = np.isneginf(np.asarray(sf)) \
+            & np.isneginf(np.asarray(ss))
+        if not both_inf.all():
+            np.testing.assert_allclose(np.asarray(sf), np.asarray(ss),
+                                       rtol=0, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# 2. policy differential: segmented vs flat decisions
+# ---------------------------------------------------------------------------
+
+def _mk_policy(s, dyn_index=None):
+    return BaselinePolicy(
+        s["cfg"], s["tier"], s["answers"], s["embed_fn"], s["backend_fn"],
+        d=s["d"], embed_batch_fn=s["embed_batch_fn"],
+        backend_batch_fn=s["backend_batch_fn"], dyn_index=dyn_index)
+
+
+@pytest.mark.parametrize("mode", ["scalar", "batch"])
+def test_policy_with_segmented_matches_flat_decisions(mode):
+    s = _trace_setup()
+    flat_pol = _mk_policy(s)
+    seg_pol = _mk_policy(s, _full_recall_index(s["cfg"].capacity, s["d"]))
+    n, bs = 320, 32
+    if mode == "scalar":
+        flat = [flat_pol.serve(p, m)
+                for p, m in zip(s["prompts"][:n], s["metas"][:n])]
+        seg = [seg_pol.serve(p, m)
+               for p, m in zip(s["prompts"][:n], s["metas"][:n])]
+    else:
+        flat, seg = [], []
+        for i in range(0, n, bs):
+            flat += flat_pol.serve_batch(s["prompts"][i:i + bs],
+                                         s["metas"][i:i + bs])
+            seg += seg_pol.serve_batch(s["prompts"][i:i + bs],
+                                       s["metas"][i:i + bs])
+    assert {r.served_by for r in flat} == {"static", "dynamic", "backend"}
+    _assert_rows_equal(flat, seg)
+    assert flat_pol.events == seg_pol.events
+    assert flat_pol.stats() == seg_pol.stats()
+    st = seg_pol.dyn_index_stats()
+    assert st["seals"] > 0 and st["live"] > 0
+
+
+def _run_krites(s, dyn_index, judge):
+    pol = KritesPolicy(s["cfg"], s["tier"], s["answers"], s["embed_fn"],
+                       s["backend_fn"], judge, d=s["d"], n_workers=1,
+                       embed_batch_fn=s["embed_batch_fn"],
+                       backend_batch_fn=s["backend_batch_fn"],
+                       dyn_index=dyn_index)
+    out = []
+    for i in range(0, 320, 32):
+        out += pol.serve_batch(s["prompts"][i:i + 32],
+                               s["metas"][i:i + 32])
+        judge.gate.set()
+        pol.pool.drain()
+        judge.gate.clear()
+    judge.gate.set()
+    pol.pool.drain()
+    pol.pool.stop()
+    return pol, out
+
+
+def test_krites_promotions_feed_tail_and_match_flat():
+    """Full Alg. 2 differential: async promotions land in the segmented
+    tail and every decision — including dynamic hits on promoted
+    entries — matches the flat path request for request."""
+    from test_serve_batch import _GatedOracle
+    s = _trace_setup()
+    pol_f, flat = _run_krites(s, None, _GatedOracle())
+    pol_s, seg = _run_krites(
+        s, _full_recall_index(s["cfg"].capacity, s["d"]), _GatedOracle())
+    _assert_rows_equal(flat, seg)
+    assert pol_f.events == pol_s.events
+    sf, ss = pol_f.stats(), pol_s.stats()
+    for k in ("judge_submitted", "judged", "approved", "static_hit_rate",
+              "dynamic_hit_rate", "backend_rate", "static_origin_rate"):
+        assert sf[k] == ss[k], k
+    assert ss["approved"] > 0
+    assert any(r.served_by == "dynamic" and r.static_origin for r in seg)
+    assert pol_s.dyn_index_stats()["writes"] > 0
+
+
+def test_background_compactor_preserves_full_recall_decisions():
+    """With background compaction the merge races serving; under the
+    full-recall config decisions must still equal flat exactly."""
+    s = _trace_setup()
+    idx = _full_recall_index(s["cfg"].capacity, s["d"], tail_rows=16,
+                             compact_every=2, background=True)
+    flat_pol, seg_pol = _mk_policy(s), _mk_policy(s, idx)
+    flat, seg = [], []
+    for i in range(0, 256, 32):
+        flat += flat_pol.serve_batch(s["prompts"][i:i + 32],
+                                     s["metas"][i:i + 32])
+        seg += seg_pol.serve_batch(s["prompts"][i:i + 32],
+                                   s["metas"][i:i + 32])
+    idx.wait_compaction()
+    _assert_rows_equal(flat, seg)
+    assert flat_pol.events == seg_pol.events
+    assert idx.stats()["merges"] > 0
+
+
+# ---------------------------------------------------------------------------
+# 3. telemetry
+# ---------------------------------------------------------------------------
+
+def test_router_surfaces_segment_occupancy_and_compactions():
+    s = _trace_setup(n=160)
+    pol = _mk_policy(s, _full_recall_index(s["cfg"].capacity, s["d"]))
+    router = CacheRouter(pol, max_batch=16, max_wait_ms=5.0)
+    results = router.submit_many(s["prompts"][:160], s["metas"][:160])
+    assert all(r is not None for r in results)
+    st = router.stats()
+    assert st["dynamic_index"].startswith("segmented(")
+    assert st["dyn_tail_live"] + st["dyn_segment_live"] > 0
+    assert st["dyn_seals"] >= 1
+    for k in ("dyn_segments", "dyn_merges", "dyn_tombstones"):
+        assert k in st
+    router.stop()
+
+
+def test_describe_strings_name_the_lookup_path():
+    s = _trace_setup(n=10)
+    flat_pol = _mk_policy(s)
+    seg_pol = _mk_policy(s, _full_recall_index(s["cfg"].capacity,
+                                               s["d"]))
+    assert flat_pol.describe_dyn_index().startswith("flat-masked(")
+    assert seg_pol.describe_dyn_index().startswith("segmented(")
+    assert flat_pol.dyn_index_stats() is None

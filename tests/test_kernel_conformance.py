@@ -1,0 +1,377 @@
+"""Unified ops-vs-ref conformance suite for every ``kernels/*`` family.
+
+One harness instead of per-family ad-hoc checks: each family registers a
+:class:`Family` spec — input generator, ops entry (the public dispatch
+wrapper with its ``force`` backend override), reference oracle, and
+comparison contract (score tolerance per dtype, exact index/ordering
+rules). The suite then drives every family through the same three
+grids:
+
+- **shape sweep** (interpret-mode Pallas vs oracle) — including single
+  rows, single blocks, and non-multiple-of-block sizes where the family
+  supports them (simsearch pads internally; attention block sizes clamp
+  to the sequence);
+- **dtype sweep** — fp32 exact-contract + bf16 tolerance where the
+  family accepts low precision;
+- **edge grid** through the public dispatch (auto backend) — empty
+  query batches, single-element inputs, k == N — asserting the
+  shape/dtype output contract and agreement with the oracle.
+
+Contract details each family must hold (and the old per-family tests
+checked inconsistently): simsearch ties break by lowest corpus index,
+ivf_scan candidates order by (score desc, global id asc) with padding
+flushed to (NEG, -1), attention outputs are finite and fp32-close to
+the blockwise oracle, embedding_bag reduces in fp32.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.index.ivf import build_ivf
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.ivf_scan.ops import ivf_scan
+from repro.kernels.ivf_scan.ref import NEG, ivf_scan_ref
+from repro.kernels.simsearch.ops import cosine_topk
+from repro.kernels.simsearch.ref import simsearch_ref
+
+
+@dataclass(frozen=True)
+class Family:
+    """One kernel family's conformance spec."""
+    name: str
+    make: Callable            # (case, dtype, rng) -> inputs dict
+    ops: Callable             # (inputs, force) -> outputs
+    ref: Callable             # (inputs,) -> outputs
+    check: Callable           # (got, want, dtype) -> None (asserts)
+    cases: tuple              # interpret-mode shape sweep
+    edge_cases: tuple = ()    # public-dispatch edge grid (auto backend)
+    dtypes: tuple = ("float32",)
+
+
+# --------------------------------------------------------------------------
+# simsearch — fused cosine top-k
+# --------------------------------------------------------------------------
+
+def _arr(x, dtype="float32"):
+    """numpy -> device array in ``dtype`` (numpy has no bfloat16)."""
+    return jnp.asarray(np.asarray(x, np.float32)).astype(dtype)
+
+
+def _simsearch_make(case, dtype, rng):
+    B, N, d, k, tile = case
+    return {"q": _arr(rng.standard_normal((B, d)), dtype),
+            "c": _arr(rng.standard_normal((N, d)), dtype),
+            "k": k, "tile": tile}
+
+
+def _simsearch_check(got, want, dtype):
+    v, i = got
+    v_r, i_r = want
+    assert v.shape == v_r.shape and i.shape == i_r.shape
+    assert v.dtype == jnp.float32 and i.dtype == jnp.int32
+    np.testing.assert_allclose(
+        np.asarray(v), np.asarray(v_r),
+        rtol=2e-2 if dtype == "bfloat16" else 1e-5, atol=1e-5)
+    if dtype == "float32":
+        # exact top-k ids, lowest-index tie contract
+        assert np.array_equal(np.asarray(i), np.asarray(i_r))
+
+
+SIMSEARCH = Family(
+    name="simsearch",
+    make=_simsearch_make,
+    ops=lambda x, force: cosine_topk(x["q"], x["c"], k=x["k"],
+                                     tile_n=x["tile"], force=force),
+    ref=lambda x: simsearch_ref(x["q"], x["c"], x["k"]),
+    check=_simsearch_check,
+    cases=(
+        (4, 256, 32, 1, 128),
+        (8, 1000, 64, 4, 256),      # N not a multiple of tile (pad path)
+        (16, 512, 128, 8, 64),
+        (1, 64, 16, 2, 64),         # single query row
+        (3, 130, 8, 3, 128),        # 2-row pad remainder
+    ),
+    edge_cases=(
+        (0, 64, 16, 1, 64),         # empty query batch
+        (2, 1, 8, 1, 64),           # single-row corpus
+        (2, 5, 8, 5, 64),           # k == N
+    ),
+    dtypes=("float32", "bfloat16"),
+)
+
+
+# --------------------------------------------------------------------------
+# ivf_scan — int8 cluster-band candidate scan
+# --------------------------------------------------------------------------
+
+def _ivf_make(case, dtype, rng):
+    N, d, B, K, nprobe, C = case
+    centers = rng.standard_normal((max(2, K), d))
+    rows = (centers[rng.integers(0, max(2, K), N)]
+            + 0.3 * rng.standard_normal((N, d))).astype(np.float32)
+    q = (rows[rng.integers(0, N, B)]
+         + 0.05 * rng.standard_normal((B, d))).astype(np.float32) \
+        if B else np.zeros((0, d), np.float32)
+    ivf = build_ivf(rows, n_clusters=K, iters=3)
+    return {"q": jnp.asarray(q), "ivf": ivf, "nprobe": nprobe, "C": C}
+
+
+def _ivf_check(got, want, dtype):
+    v, i = got
+    v_r, i_r = want
+    assert v.shape == v_r.shape and i.shape == i_r.shape
+    assert i.dtype == jnp.int32
+    # exact candidate ids in the (score desc, global id asc) order,
+    # padding flushed as (NEG, -1)
+    assert np.array_equal(np.asarray(i), np.asarray(i_r))
+    np.testing.assert_allclose(np.asarray(v), np.asarray(v_r),
+                               rtol=1e-5, atol=1e-5)
+    assert bool(jnp.all((i >= 0) | (v == NEG)))
+
+
+IVF_SCAN = Family(
+    name="ivf_scan",
+    make=_ivf_make,
+    ops=lambda x, force: ivf_scan(
+        x["q"], x["ivf"].centroids, x["ivf"].codes, x["ivf"].scales,
+        x["ivf"].row_ids, nprobe=x["nprobe"], n_candidates=x["C"],
+        force=force),
+    ref=lambda x: ivf_scan_ref(
+        x["q"], x["ivf"].centroids, x["ivf"].codes, x["ivf"].scales,
+        x["ivf"].row_ids, min(x["nprobe"], x["ivf"].codes.shape[0]),
+        min(x["C"], min(x["nprobe"], x["ivf"].codes.shape[0])
+            * x["ivf"].codes.shape[1])),
+    check=_ivf_check,
+    cases=(
+        (512, 16, 3, 8, 3, 8),
+        (2000, 32, 7, 32, 6, 24),
+        (640, 48, 1, 12, 12, 48),    # full probe, single query
+        (300, 8, 5, 4, 2, 4),        # tiny, C < nprobe*cap
+    ),
+    # an empty *corpus* cannot be packed; the edge grid covers an empty
+    # query batch and a single-row corpus instead
+    edge_cases=(
+        (64, 8, 0, 4, 2, 4),         # empty query batch
+        (1, 8, 2, 1, 1, 1),          # single-row corpus, one cluster
+    ),
+)
+
+
+# --------------------------------------------------------------------------
+# flash_attention — causal GQA prefill
+# --------------------------------------------------------------------------
+
+def _flash_make(case, dtype, rng):
+    B, S, H, K, Dh, bq, bk = case
+    mk = lambda h: _arr(rng.standard_normal((B, S, h, Dh)), dtype)  # noqa: E731
+    return {"q": mk(H), "k": mk(K), "v": mk(K), "bq": bq, "bk": bk}
+
+
+def _attn_check(got, want, dtype):
+    tol = 3e-2 if dtype == "bfloat16" else 2e-5
+    g = np.asarray(got, np.float32)
+    w = np.asarray(want, np.float32)
+    assert g.shape == w.shape
+    assert np.isfinite(g).all()
+    np.testing.assert_allclose(g, w, rtol=tol, atol=tol)
+
+
+FLASH = Family(
+    name="flash_attention",
+    make=_flash_make,
+    ops=lambda x, force: attention(x["q"], x["k"], x["v"], bq=x["bq"],
+                                   bk=x["bk"], force=force),
+    ref=lambda x: flash_attention_ref(x["q"], x["k"], x["v"]),
+    check=_attn_check,
+    cases=(
+        (1, 128, 2, 2, 32, 32, 32),
+        (2, 256, 4, 2, 64, 64, 128),
+        (1, 128, 8, 1, 16, 128, 32),    # MQA, single q block
+        (1, 96, 2, 2, 32, 32, 96),      # S not a power of two
+    ),
+    edge_cases=(
+        (1, 1, 2, 2, 16, 512, 512),     # single token (blocks clamp)
+        (2, 8, 2, 1, 8, 8, 8),          # tiny everything
+    ),
+    dtypes=("float32", "bfloat16"),
+)
+
+
+# --------------------------------------------------------------------------
+# decode_attention — flash-decoding over KV caches
+# --------------------------------------------------------------------------
+
+def _decode_make(case, dtype, rng):
+    B, S, H, K, Dh, bs = case
+    lens = rng.integers(1, S + 1, B).astype(np.int32)
+    return {"q": _arr(rng.standard_normal((B, H, Dh)), dtype),
+            "k": _arr(rng.standard_normal((B, S, K, Dh)), dtype),
+            "v": _arr(rng.standard_normal((B, S, K, Dh)), dtype),
+            "lens": jnp.asarray(lens), "bs": bs}
+
+
+DECODE = Family(
+    name="decode_attention",
+    make=_decode_make,
+    ops=lambda x, force: decode_attention(x["q"], x["k"], x["v"],
+                                          x["lens"], bs=x["bs"],
+                                          force=force),
+    ref=lambda x: decode_attention_ref(x["q"], x["k"], x["v"],
+                                       x["lens"]),
+    check=_attn_check,
+    cases=(
+        (2, 128, 4, 2, 32, 32),
+        (3, 256, 8, 2, 32, 64),
+        (1, 64, 2, 1, 64, 64),        # MQA, single block
+        (2, 96, 4, 4, 16, 32),        # S not a power of two
+    ),
+    edge_cases=(
+        (1, 1, 2, 2, 16, 512),        # cache of one token
+        (2, 8, 2, 1, 8, 8),
+    ),
+)
+
+
+# --------------------------------------------------------------------------
+# embedding_bag — scalar-prefetch gather + weighted reduce
+# --------------------------------------------------------------------------
+
+def _bag_make(case, dtype, rng):
+    V, d, B, m = case
+    ids = rng.integers(0, V, (B, m)).astype(np.int32) if B * m else \
+        np.zeros((B, m), np.int32)
+    return {"table": _arr(rng.standard_normal((V, d)), dtype),
+            "ids": jnp.asarray(ids),
+            "w": jnp.asarray(rng.uniform(size=(B, m)).astype(np.float32))}
+
+
+def _bag_check(got, want, dtype):
+    assert got.shape == want.shape
+    assert got.dtype == jnp.float32
+    tol = 2e-2 if dtype == "bfloat16" else 1e-6
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+BAG = Family(
+    name="embedding_bag",
+    make=_bag_make,
+    ops=lambda x, force: embedding_bag(x["table"], x["ids"], x["w"],
+                                       force=force),
+    ref=lambda x: embedding_bag_ref(x["table"], x["ids"], x["w"]),
+    check=_bag_check,
+    cases=(
+        (64, 32, 4, 3),
+        (512, 128, 16, 8),
+        (100, 16, 1, 1),              # single bag, single id
+        (37, 24, 5, 7),               # nothing a multiple of anything
+    ),
+    edge_cases=(
+        (16, 8, 0, 3),                # empty batch
+        (1, 8, 2, 2),                 # single-row table
+    ),
+)
+
+
+FAMILIES = (SIMSEARCH, IVF_SCAN, FLASH, DECODE, BAG)
+_BY_NAME = {f.name: f for f in FAMILIES}
+
+
+def _family_cases(edge=False):
+    return [(f.name, c, dt)
+            for f in FAMILIES
+            for c in (f.edge_cases if edge else f.cases)
+            for dt in (("float32",) if edge else f.dtypes)]
+
+
+def _ids(params):
+    return [f"{n}-{'x'.join(map(str, c))}-{dt}" for n, c, dt in params]
+
+
+_SWEEP = _family_cases(edge=False)
+_EDGE = _family_cases(edge=True)
+
+
+def _rng(name, case, dtype):
+    """Deterministic per-case seed (hash() is salted per process)."""
+    return np.random.default_rng(
+        zlib.crc32(f"{name}|{case}|{dtype}".encode()))
+
+
+@pytest.mark.parametrize("name,case,dtype", _SWEEP, ids=_ids(_SWEEP))
+def test_interpret_kernel_matches_ref(name, case, dtype):
+    """Interpret-mode Pallas kernel vs the pure-jnp oracle, per family,
+    across the shape/dtype grid."""
+    fam = _BY_NAME[name]
+    x = fam.make(case, dtype, _rng(name, case, dtype))
+    fam.check(fam.ops(x, "interpret"), fam.ref(x), dtype)
+
+
+@pytest.mark.parametrize("name,case,dtype", _EDGE, ids=_ids(_EDGE))
+def test_dispatch_edge_grid_matches_ref(name, case, dtype):
+    """Edge shapes (empty batches, single rows, degenerate sizes)
+    through the public auto-dispatch entry: must agree with the oracle
+    and honor the output shape/dtype contract."""
+    fam = _BY_NAME[name]
+    x = fam.make(case, dtype, _rng(name, case, dtype))
+    fam.check(fam.ops(x, None), fam.ref(x), dtype)
+
+
+# --------------------------------------------------------------------------
+# cross-family ordering contracts (shared tie/padding semantics)
+# --------------------------------------------------------------------------
+
+def test_simsearch_tie_breaking_lowest_index():
+    """Duplicate corpus rows: the kernel must return the lowest index
+    first — the contract the serving path's argmax twin relies on."""
+    q = jnp.zeros((1, 8)).at[0, 0].set(1.0)
+    near = jnp.zeros((8,)).at[0].set(1.0).at[1].set(0.3)
+    exact = jnp.zeros((8,)).at[0].set(1.0)
+    orth = jnp.zeros((8,)).at[1].set(1.0)
+    c = jnp.stack([near, exact, exact, orth])
+    v, i = cosine_topk(q, c, k=3, tile_n=2, force="interpret")
+    assert [int(x) for x in i[0]] == [1, 2, 0]
+
+
+def test_ivf_scan_tie_breaking_lowest_global_id():
+    """Duplicate rows across clusters: candidates must order by lowest
+    global row id on exact score ties (the rerank depends on it)."""
+    rng = np.random.default_rng(0)
+    rows = rng.standard_normal((64, 8)).astype(np.float32)
+    rows[17] = rows[3]              # exact duplicate, different cluster
+    ivf = build_ivf(rows, n_clusters=4, iters=3)
+    q = jnp.asarray(rows[3:4])
+    _, ids = ivf_scan(q, ivf.centroids, ivf.codes, ivf.scales,
+                      ivf.row_ids, nprobe=4, n_candidates=8,
+                      force="interpret")
+    ids = [int(x) for x in np.asarray(ids)[0]]
+    assert ids.index(3) < ids.index(17)
+
+
+def test_ivf_scan_padding_flushed_as_absent():
+    """Requesting more candidates than rows: the tail must come back as
+    (NEG, -1) in kernel and oracle alike."""
+    rng = np.random.default_rng(1)
+    rows = rng.standard_normal((30, 8)).astype(np.float32)
+    ivf = build_ivf(rows, n_clusters=3, iters=3)
+    q = jnp.asarray(rows[:2])
+    C = ivf.codes.shape[0] * ivf.codes.shape[1]
+    v_r, i_r = ivf_scan_ref(q, ivf.centroids, ivf.codes, ivf.scales,
+                            ivf.row_ids, 3, C)
+    v_k, i_k = ivf_scan(q, ivf.centroids, ivf.codes, ivf.scales,
+                        ivf.row_ids, nprobe=3, n_candidates=C,
+                        force="interpret")
+    assert np.array_equal(np.asarray(i_k), np.asarray(i_r))
+    assert np.asarray(i_r).min() == -1
+    assert bool(jnp.all((i_r >= 0) | (v_r == NEG)))

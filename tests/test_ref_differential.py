@@ -88,6 +88,37 @@ def test_uniform_latency_sweep_matches_reference(trace):
         _assert_matches(slice_config(res, i), ref, f"ublocked cfg{i}")
 
 
+@pytest.mark.parametrize("idx", range(len(CONFIGS)))
+def test_segmented_reference_is_decision_identical_to_flat(trace, idx):
+    """The oracle's own segmented dynamic-index path (tail + sealed
+    segments + tombstones, `ref_policy._RefSegIndex`) must reproduce
+    the flat reference field-for-field — so the numpy loop stays a
+    decision-for-decision oracle for both dyn-index configs, and the
+    JAX simulator keeps matching it transitively."""
+    s_emb, s_cls, q_emb, q_cls = trace
+    cfg, krites = CONFIGS[idx]
+    flat = ref_simulate(s_emb, s_cls, q_emb, q_cls, cfg, krites)
+    seg = ref_simulate(s_emb, s_cls, q_emb, q_cls, cfg, krites,
+                       dyn_index="segmented")
+    for name, want in flat.items():
+        assert np.array_equal(np.asarray(seg[name]), np.asarray(want)), \
+            f"segmented ref cfg{idx}: field {name} diverges from flat"
+
+
+def test_simulate_matches_segmented_reference(trace):
+    """Direct differential: the JAX simulator against the reference
+    running in segmented mode (the structure churns — seals, merges,
+    tombstones — while decisions must not move)."""
+    s_emb, s_cls, q_emb, q_cls = trace
+    cfg, krites = CONFIGS[0]
+    res = simulate(jnp.asarray(s_emb), jnp.asarray(s_cls),
+                   jnp.asarray(q_emb), jnp.asarray(q_cls), cfg,
+                   krites=krites)
+    ref = ref_simulate(s_emb, s_cls, q_emb, q_cls, cfg, krites,
+                       dyn_index="segmented")
+    _assert_matches(res, ref, "simulate-vs-segmented-ref")
+
+
 def test_noisy_judge_flips_match_reference(trace):
     """judge_flip (noisy-verifier false approvals) follows the same
     delayed-payload path — must match the reference end to end."""

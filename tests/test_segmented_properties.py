@@ -1,0 +1,136 @@
+"""Property-based invariants of the segmented dynamic index
+(`index/segmented.py`, DESIGN.md §12), via the `_hypothesis_compat`
+shim so they execute (deterministic examples) even without hypothesis:
+
+- **lookup equivalence** — after ANY interleaving of upsert (write),
+  evict (invalidate) and compact, a full-recall segmented lookup equals
+  the flat masked scan slot-for-slot;
+- **tombstones never resurrect** — an evicted or overwritten key stays
+  unfindable through every later seal/merge;
+- **conservation** — the index's live count always equals the model's,
+  and every live slot is found at similarity ~1 by its own key.
+"""
+import numpy as np
+
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import tiers as T
+from repro.index.segmented import SegmentedIndex
+
+CAP, D = 32, 8
+
+# an op is (kind, slot, seed): kind 0/1 = write, 2 = evict, 3 = compact
+_OPS = st.lists(st.tuples(st.integers(0, 3), st.integers(0, CAP - 1),
+                          st.integers(0, 2**31 - 1)),
+                min_size=1, max_size=45)
+
+
+def _vec(rng):
+    v = rng.standard_normal(D).astype(np.float32)
+    return v / np.linalg.norm(v)
+
+
+def _apply(ops, tail_rows=4, compact_every=3):
+    """Replay an op sequence through (tier, index, model dict)."""
+    tier = T.make_dynamic_tier(CAP, D)
+    idx = SegmentedIndex(CAP, D, tail_rows=tail_rows, nprobe=None,
+                         n_candidates=4 * CAP, tail_candidates=tail_rows,
+                         compact_every=compact_every)
+    model = {}                       # slot -> vec (the live set)
+    for t, (kind, slot, seed) in enumerate(ops, start=1):
+        if kind <= 1:
+            v = _vec(np.random.default_rng(seed))
+            tier = T._write(tier, slot, jnp.asarray(v), jnp.int32(0),
+                            jnp.int32(-1), jnp.asarray(False), t)
+            idx.record_write(slot, v)
+            model[slot] = v
+        elif kind == 2:
+            tier = tier._replace(valid=tier.valid.at[slot].set(False))
+            idx.invalidate(slot)
+            model.pop(slot, None)
+        else:
+            idx.compact()
+    return tier, idx, model
+
+
+def _assert_lookup_equal(tier, idx, q):
+    sf, jf = T.dynamic_lookup_batch(tier, q)
+    ss, js = T.dynamic_lookup_batch(tier, q, index=idx)
+    assert np.array_equal(np.asarray(jf), np.asarray(js)), (jf, js)
+    sf, ss = np.asarray(sf), np.asarray(ss)
+    both_inf = np.isneginf(sf) & np.isneginf(ss)
+    np.testing.assert_allclose(sf[~both_inf], ss[~both_inf],
+                               rtol=0, atol=2e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(_OPS, st.integers(0, 2**31 - 1))
+def test_prop_segmented_equals_flat_after_any_interleaving(ops, qseed):
+    tier, idx, model = _apply(ops)
+    rng = np.random.default_rng(qseed)
+    q = rng.standard_normal((6, D)).astype(np.float32)
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    _assert_lookup_equal(tier, idx, jnp.asarray(q))
+    assert idx.stats()["live"] == len(model) == int(tier.valid.sum())
+
+
+@settings(max_examples=10, deadline=None)
+@given(_OPS)
+def test_prop_every_live_slot_findable_every_dead_slot_gone(ops):
+    tier, idx, model = _apply(ops)
+    # live keys: their own vector must come back as (their slot, ~1.0)
+    for slot, v in model.items():
+        s, j = T.dynamic_lookup(tier, jnp.asarray(v), index=idx)
+        assert int(j) == slot
+        assert float(s) > 0.999
+    # probing with a dead key must agree with the flat masked scan
+    # (the dead copy is tombstoned, not resurrected)
+    dead = [(kind, slot, seed) for kind, slot, seed in ops if kind <= 1]
+    for kind, slot, seed in dead[:10]:
+        v = _vec(np.random.default_rng(seed))
+        _assert_lookup_equal(tier, idx, jnp.asarray(v[None]))
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 30),
+       st.integers(2, 6), st.integers(2, 4))
+def test_prop_compaction_schedule_never_changes_results(seed, n_writes,
+                                                       tail_rows,
+                                                       compact_every):
+    """The same write sequence through different tail/compaction
+    schedules must serve identical (slot, score) answers — compaction
+    timing is a performance knob, never a semantics knob."""
+    rng = np.random.default_rng(seed)
+    ops = [(0, int(rng.integers(0, CAP)), int(rng.integers(0, 2**31)))
+           for _ in range(n_writes)]
+    tier_a, idx_a, _ = _apply(ops, tail_rows=2, compact_every=2)
+    tier_b, idx_b, _ = _apply(ops, tail_rows=tail_rows,
+                              compact_every=compact_every)
+    q = rng.standard_normal((5, D)).astype(np.float32)
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    q = jnp.asarray(q)
+    sa, ja = T.dynamic_lookup_batch(tier_a, q, index=idx_a)
+    sb, jb = T.dynamic_lookup_batch(tier_b, q, index=idx_b)
+    assert np.array_equal(np.asarray(ja), np.asarray(jb))
+    np.testing.assert_allclose(np.asarray(sa), np.asarray(sb),
+                               rtol=0, atol=2e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 30))
+def test_prop_rewrite_after_evict_resurrects_only_new_value(seed, churn):
+    """evict(slot) then write(slot, new): lookups must see exactly the
+    new value — never the pre-eviction one, whatever was sealed."""
+    rng = np.random.default_rng(seed)
+    ops = [(0, 5, seed)]                                   # old value
+    ops += [(0, int(rng.integers(6, CAP)), int(rng.integers(0, 2**31)))
+            for _ in range(churn)]                         # bury it
+    ops += [(2, 5, 0), (0, 5, seed + 1)]                   # evict, new
+    tier, idx, _model = _apply(ops)
+    old, new = _vec(np.random.default_rng(seed)), \
+        _vec(np.random.default_rng(seed + 1))
+    s_new, j_new = T.dynamic_lookup(tier, jnp.asarray(new), index=idx)
+    assert int(j_new) == 5 and float(s_new) > 0.999
+    _assert_lookup_equal(tier, idx, jnp.asarray(old[None]))

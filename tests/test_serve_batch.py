@@ -264,6 +264,39 @@ def test_router_concurrent_matches_policy_decisions():
     router.stop()
 
 
+def test_router_latency_percentiles_under_concurrent_submit():
+    """Latency telemetry under concurrent clients: every request lands
+    in the (bounded) percentile window, percentiles are ordered, and
+    the window cap keeps a long-lived router from sorting its whole
+    history."""
+    s = _trace_setup(n=160)
+    pol = BaselinePolicy(s["cfg"], s["tier"], s["answers"], s["embed_fn"],
+                         s["backend_fn"], d=s["d"],
+                         embed_batch_fn=s["embed_batch_fn"],
+                         backend_batch_fn=s["backend_batch_fn"])
+    router = CacheRouter(pol, max_batch=16, max_wait_ms=2.0,
+                         latency_window=100)
+    out = {}
+
+    def client(lo, hi):
+        for i in range(lo, hi):
+            out[i] = router.submit(s["prompts"][i], s["metas"][i])
+
+    threads = [threading.Thread(target=client, args=(k * 40, k * 40 + 40))
+               for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(out) == 160 and all(v is not None for v in out.values())
+    st = router.stats()
+    assert st["requests"] == 160
+    assert 0 < st["p50_latency_ms"] <= st["p99_latency_ms"]
+    # bounded window: only the last `latency_window` samples retained
+    assert len(router._latencies) == 100
+    router.stop()
+
+
 def test_router_threaded_submit():
     s = _trace_setup(n=120)
     pol = BaselinePolicy(s["cfg"], s["tier"], s["answers"], s["embed_fn"],
