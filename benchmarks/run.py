@@ -5,7 +5,7 @@
 Registered modules (see each module's docstring for what it reproduces):
 ``table1``, ``fig2``, ``greyzone_roi``, ``latency_async``,
 ``verifier_fidelity``, ``kernels``, ``serve_batched``, ``sweep``,
-``ann_index``, ``dyn_index``.
+``ann_index``, ``dyn_index``, ``sharded_serve``.
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = remaining fields
 as compact JSON) and writes results/benchmarks.json.
@@ -29,7 +29,8 @@ def main() -> None:
 
     from benchmarks import (ann_index, dyn_index, fig2, greyzone_roi,
                             kernels_bench, latency_async, serve_batched,
-                            sweep, table1, verifier_fidelity)
+                            sharded_serve, sweep, table1,
+                            verifier_fidelity)
     modules = {
         "table1": table1, "fig2": fig2, "greyzone_roi": greyzone_roi,
         "latency_async": latency_async,
@@ -39,6 +40,7 @@ def main() -> None:
         "sweep": sweep,
         "ann_index": ann_index,
         "dyn_index": dyn_index,
+        "sharded_serve": sharded_serve,
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -10,6 +10,14 @@ Implemented as a sweep over eps using a modified class-label channel.
 Reproduces: the §5 verifier-fidelity bound (added cache error
 <= eps_fa * promoted traffic) as an eps sweep.
 
+The final row is the *live-path payload fidelity gate*: verification
+fidelity starts with the judge actually seeing the inputs it is defined
+over, so a small trace is served through the live ``KritesPolicy``
+(static texts plumbed in) with a recording ``OracleJudge(
+require_texts=True)`` — every grey-zone submission must carry the full
+non-empty ``(q_text, h_text, answer)`` triple, and the oracle decisions
+must be unchanged by the extra payload.
+
 Invocation:
 
     PYTHONPATH=src python -m benchmarks.run --only verifier_fidelity
@@ -23,6 +31,51 @@ import numpy as np
 
 from benchmarks.common import default_cfg, get_benchmark
 from repro.core.simulate import simulate, summarize
+
+
+def live_payload_fidelity(n: int = 256) -> dict:
+    """Serve a small live trace and audit every judge payload."""
+    from repro.core.judge import OracleJudge
+    from repro.core.policy import KritesPolicy
+    from repro.core.tiers import CacheConfig, make_static_tier
+    from repro.data.synth_traces import LMARENA_LIKE, build_benchmark
+
+    spec = dataclasses.replace(LMARENA_LIKE, n_requests=4000,
+                               n_classes=120)
+    bench = build_benchmark(spec)
+    emb = {f"q{i}": bench.eval_emb[i] for i in range(n)}
+    tier = make_static_tier(jnp.asarray(bench.static_emb),
+                            jnp.asarray(bench.static_cls))
+    answers = [f"curated answer {int(c)}" for c in bench.static_cls]
+    texts = [f"canonical prompt {i}" for i in range(len(answers))]
+    oracle = OracleJudge(require_texts=True)
+    seen: list = []
+
+    def judge(q_cls, h_cls, q_text="", h_text="", answer=""):
+        seen.append((q_text, h_text, answer))
+        return oracle(q_cls, h_cls, q_text, h_text, answer)
+
+    pol = KritesPolicy(
+        CacheConfig(0.92, 0.88, sigma_min=0.0, capacity=512),
+        tier, answers, lambda p: emb[p], lambda p: f"gen({p})", judge,
+        d=bench.static_emb.shape[1], n_workers=1, static_texts=texts,
+        backend_batch_fn=lambda ps: [f"gen({p})" for p in ps])
+    for i in range(0, n, 32):
+        pol.serve_batch([f"q{j}" for j in range(i, min(i + 32, n))],
+                        [{"cls": int(bench.eval_cls[j])}
+                         for j in range(i, min(i + 32, n))])
+    pol.pool.drain()
+    pol.pool.stop()
+    s = pol.stats()
+    complete = [bool(q and h and a) for q, h, a in seen]
+    return {
+        "name": "verifier/live_payload_fidelity",
+        "us_per_call": 0.0,
+        "judged": s["judged"],
+        "payload_complete_rate": float(np.mean(complete))
+        if complete else 0.0,
+        "approved": s["approved"],
+    }
 
 
 def run(scale: str = "small", wl: str = "lmarena_like"):
@@ -76,4 +129,5 @@ def run(scale: str = "small", wl: str = "lmarena_like"):
             # bound is mildly violated. Operators should budget
             # ~1.5x eps*p_prom. See EXPERIMENTS.md §Reproduction.
         })
+    rows.append(live_payload_fidelity())
     return rows

@@ -84,8 +84,10 @@ def main():
         return s
 
     base = BaselinePolicy(cfg, tier, static_answers, embed, backend, d=64)
+    # the judge pool sees the full (q_text, h_text, answer) triple:
+    # static_texts are the curated entries' canonical phrasings
     krites = KritesPolicy(cfg, tier, static_answers, embed, backend,
-                          judge, d=64)
+                          judge, d=64, static_texts=canon)
     print("\nserving 400 requests through each policy...")
     sb = run(base)
     sk = run(krites)

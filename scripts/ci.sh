@@ -30,4 +30,10 @@ python -m benchmarks.ann_index --smoke
 echo "== segmented dynamic-index smoke (churn + agreement-1.0 gate) =="
 python -m benchmarks.dyn_index --smoke
 
+echo "== sharded serving smoke (forced host-device mesh, agreement 1.0) =="
+# the multi-device subprocess differential (tests/test_sharded_serve.py)
+# runs as part of the tier-1 suite above; this smoke adds the
+# benchmark-level serving differential with its agreement-1.0 gate
+python -m benchmarks.sharded_serve --smoke
+
 echo "== CI OK =="

@@ -49,9 +49,15 @@ class VerifyAndPromotePool:
                  n_workers: int = 2,
                  max_depth: int = 1024,
                  rate_per_s: float = float("inf"),
+                 rate_per_req: float = 0.0,
                  max_attempts: int = 3,
                  backoff_s: float = 0.05,
                  straggler_deadline_s: float = 5.0):
+        """``rate_per_s`` refills the token bucket by wall-clock time;
+        ``rate_per_req`` additionally refills it per submission attempt
+        — the live analogue of the simulator's per-request
+        ``CacheConfig.judge_rate`` budget (core/simulate.py), which
+        ``KritesPolicy`` threads through here by default."""
         self.judge_fn = judge_fn
         self.promote_fn = promote_fn
         self.q: "queue.Queue[VerifyTask]" = queue.Queue(max_depth)
@@ -60,6 +66,7 @@ class VerifyAndPromotePool:
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._rate = rate_per_s
+        self._rate_req = rate_per_req
         self._tokens = float(min(rate_per_s, 1e9))
         self._last_refill = time.monotonic()
         self._max_attempts = max_attempts
@@ -132,8 +139,13 @@ class VerifyAndPromotePool:
 
     def _take_token(self) -> bool:
         now = time.monotonic()
-        self._tokens = min(self._tokens + (now - self._last_refill)
-                           * self._rate, max(self._rate, 1.0))
+        if self._rate == float("inf"):
+            self._tokens = 1e9
+        else:
+            self._tokens = min(
+                self._tokens + (now - self._last_refill) * self._rate
+                + self._rate_req,
+                max(self._rate, self._rate_req, 1.0))
         self._last_refill = now
         if self._tokens >= 1.0:
             self._tokens -= 1.0

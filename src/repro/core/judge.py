@@ -17,10 +17,26 @@ import numpy as np
 
 
 class OracleJudge:
-    """approve iff query and static neighbor share an equivalence class."""
+    """approve iff query and static neighbor share an equivalence class.
+
+    The paper's judge is defined over the ``(q_text, h_text, answer)``
+    triple — the class-id comparison is the oracle shortcut the
+    simulator uses. The live serving path now plumbs the real texts
+    into every grey-zone payload (``KritesPolicy(static_texts=)``);
+    ``require_texts=True`` makes this judge refuse payloads that lost
+    them (used by tests and the verifier-fidelity benchmark to pin the
+    contract).
+    """
+
+    def __init__(self, require_texts: bool = False):
+        self.require_texts = require_texts
 
     def __call__(self, q_cls: int, h_cls: int, q_text: str = "",
                  h_text: str = "", answer: str = "") -> bool:
+        if self.require_texts and not (q_text and h_text and answer):
+            raise ValueError(
+                f"judge payload missing verification texts: "
+                f"q_text={q_text!r} h_text={h_text!r} answer={answer!r}")
         return int(q_cls) == int(h_cls)
 
 

@@ -86,33 +86,57 @@ def dynamic_lookup(tier: DynamicTier, q: jax.Array, index=None):
     return sims[idx], idx.astype(jnp.int32)
 
 
-def static_lookup_batch(tier: StaticTier, q: jax.Array, index=None):
+def static_lookup_batch(tier: StaticTier, q: jax.Array, index=None,
+                        mesh=None, shard_axis: str = "model"):
     """Batched twin of :func:`static_lookup` for the serving hot path.
 
     q (B, d) normalized -> (best sims (B,), best idx (B,)). With
     ``index=None`` this is one fused exact top-1 pass over the whole
     micro-batch via ``kernels/simsearch`` (Pallas kernel on TPU, jnp
     reference elsewhere — see DESIGN.md §7). An injected ``index``
-    (``FlatIndex``/``IVFIndex``, DESIGN.md §11) takes over the lookup;
-    its exact rerank keeps the served (score, index) pairs equal to
-    flat search whenever recall@C holds, so threshold semantics are
-    unchanged.
+    (``FlatIndex``/``IVFIndex``, DESIGN.md §11, or ``ShardedIVFIndex``,
+    §13) takes over the lookup; its exact rerank keeps the served
+    (score, index) pairs equal to flat search whenever recall@C holds,
+    so threshold semantics are unchanged. With ``mesh`` (and no index)
+    the exact lookup runs row-sharded over ``shard_axis`` — per-shard
+    fused scan + tiny k-candidate merge (``index/sharded.py``, §13);
+    ``tier.emb`` must be a shard multiple (``pad_rows``) and decisions
+    are identical to the single-device pass.
     """
     if index is not None:
         vals, idx = index.topk(q, 1)
+        return vals[:, 0], idx[:, 0].astype(jnp.int32)
+    if mesh is not None:
+        from repro.index.sharded import sharded_cosine_topk
+        vals, idx = sharded_cosine_topk(q, tier.emb, mesh, k=1,
+                                        axis=shard_axis)
         return vals[:, 0], idx[:, 0].astype(jnp.int32)
     from repro.kernels.simsearch.ops import cosine_topk
     vals, idx = cosine_topk(q, tier.emb, k=1)
     return vals[:, 0], idx[:, 0].astype(jnp.int32)
 
 
-def dynamic_lookup_batch(tier: DynamicTier, q: jax.Array, index=None):
+def dynamic_lookup_batch(tier: DynamicTier, q: jax.Array, index=None,
+                         mesh=None, shard_axis: str = "model"):
     """Batched twin of :func:`dynamic_lookup`: one masked matmul for the
-    whole micro-batch. q (B, d) -> (best sims (B,), best idx (B,)).
-    ``index`` mirrors :func:`dynamic_lookup` (sub-linear segmented scan
-    + exact rerank instead of the full masked matmul)."""
+    whole micro-batch. q (B, d) *L2-normalized* -> (best sims (B,),
+    best idx (B,)). ``index`` mirrors :func:`dynamic_lookup`
+    (sub-linear segmented scan + exact rerank instead of the full
+    masked matmul). With ``mesh`` the masked scan runs row-sharded over
+    ``shard_axis`` with a global slot merge (``sharded_masked_topk``,
+    DESIGN.md §13), mirroring ``masked_cosine_topk(
+    corpus_normalized=True)`` — the policies' single-device hot path —
+    bit for bit, same lowest-slot tie rule. Note that path (and hence
+    the mesh branch) renormalizes q while this inline flat matmul
+    trusts the caller's normalization; with the documented normalized
+    q the difference is float-rounding-level only."""
     if index is not None:
         vals, idx = index.topk(q, tier.emb, k=1)
+        return vals[:, 0], idx[:, 0].astype(jnp.int32)
+    if mesh is not None:
+        from repro.index.sharded import sharded_masked_topk
+        vals, idx = sharded_masked_topk(q, tier.emb, tier.valid, mesh,
+                                        k=1, axis=shard_axis)
         return vals[:, 0], idx[:, 0].astype(jnp.int32)
     sims = q @ tier.emb.T
     sims = jnp.where(tier.valid[None, :], sims, -jnp.inf)
@@ -201,12 +225,18 @@ def evict_expired(tier: DynamicTier, now, ttl: int,
                   index=None) -> DynamicTier:
     """TTL sweep: invalidate entries older than ttl.
 
+    ``ttl=0`` means TTL is disabled (``CacheConfig.ttl``'s documented
+    contract) and the sweep is a no-op — NOT "everything is expired",
+    which is what the naive ``age <= 0`` test would make of it.
+
     Callers serving through an injected dynamic index (DESIGN.md §12)
     must pass it here: eviction without a rewrite is the one mutation
     the index cannot observe through ``record_write``, and a stale
     live entry would let an indexed lookup serve an expired slot the
     flat masked scan rejects.
     """
+    if ttl == 0:
+        return tier
     alive = now - tier.written_at <= ttl
     if index is not None:
         import numpy as np
@@ -227,4 +257,10 @@ class CacheConfig:
     judge_latency: int = 64     # async completion lag, in requests
     ttl: int = 0                # 0 = disabled
     dedup: bool = True          # skip judging when a promoted pointer hits
-    judge_rate: float = 1.0     # token-bucket refill per request (1 = 1/req)
+    # Token-bucket judge budget refill per request (1 = one judge call
+    # per request). One knob for both runtimes: the trace simulator
+    # (core/simulate.py, tests/ref_policy.py) refills per simulated
+    # request, and the live KritesPolicy threads it into the
+    # VerifyAndPromote pool as its per-submission refill unless an
+    # explicit wall-clock ``judge_rate_per_s`` override is given.
+    judge_rate: float = 1.0

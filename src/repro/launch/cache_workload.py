@@ -79,13 +79,16 @@ def run_live(n_requests: int = 800, n_clients: int = 8,
              tau: float = 0.92, index: str = "flat",
              static_rows: int = 0, nprobe: int = 8,
              dyn_index: str = "flat", seg_rows: int = 4096,
-             compact_every: int = 4) -> dict:
+             compact_every: int = 4, shards: int = 1) -> dict:
     """Live router-fronted serving demo: the batched serving path under
     concurrent client load, with per-tier hit and latency telemetry.
     ``index='ivf'`` swaps the static lookup for the quantized ANN index
     (padding the tier to ``static_rows`` synthetic entries first);
     ``dyn_index='segmented'`` serves dynamic-tier lookups through the
-    incremental tail+segments index (DESIGN.md §12)."""
+    incremental tail+segments index (DESIGN.md §12); ``shards > 1``
+    serves both tiers row-sharded over a 'model' mesh of that many
+    (forced host) devices with shard-routed writes (DESIGN.md §13) —
+    decisions identical to single-device."""
     import threading
 
     import numpy as np
@@ -94,17 +97,24 @@ def run_live(n_requests: int = 800, n_clients: int = 8,
     from repro.core.policy import KritesPolicy
     from repro.core.tiers import CacheConfig
     from repro.embedding.embedder import Embedder
+    from repro.launch.mesh import make_shard_mesh
     from repro.launch.serve import build_demo_tier, build_dyn_index
     from repro.serving.router import CacheRouter
 
+    mesh = make_shard_mesh(shards) if shards > 1 else None
+    if mesh is not None and dyn_index == "segmented":
+        print("note: dyn_index='segmented' is single-device only; "
+              "shards>1 uses the row-sharded masked scan (DESIGN.md §13)")
+        dyn_index = "flat"
     embed = Embedder(d_out=64)
     intents = [f"how do i {v} my {n}" for v in
                ("fix", "update", "reset", "clean", "sell", "charge")
                for n in ("bike", "laptop", "router", "garden", "phone")]
-    tier, answers, idx_obj = build_demo_tier(
+    tier, answers, texts, idx_obj = build_demo_tier(
         np.asarray(embed.batch(intents)),
         [f"[curated] {p}" for p in intents],
-        static_rows=static_rows, index=index, nprobe=nprobe)
+        static_rows=static_rows, index=index, nprobe=nprobe,
+        mesh=mesh, texts=intents)
 
     cfg = CacheConfig(tau, tau, sigma_min=0.3, capacity=1024)
     policy = KritesPolicy(
@@ -112,7 +122,7 @@ def run_live(n_requests: int = 800, n_clients: int = 8,
         embed, backend_fn=lambda p: f"generated({p})",
         judge_fn=OracleJudge(), d=64,
         backend_batch_fn=lambda ps: [f"generated({p})" for p in ps],
-        index=idx_obj,
+        index=idx_obj, static_texts=texts, mesh=mesh,
         dyn_index=build_dyn_index(dyn_index, cfg.capacity, 64,
                                   seg_rows=seg_rows,
                                   compact_every=compact_every))
@@ -175,13 +185,17 @@ if __name__ == "__main__":
     ap.add_argument("--compact-every", type=int, default=4,
                     help="merge sealed segments whenever this many "
                          "have accumulated")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="serve --live through the row-sharded mesh "
+                         "path over this many host devices "
+                         "(DESIGN.md §13); 1 = single-device")
     a = ap.parse_args()
     if a.live:
         run_live(n_requests=a.requests, n_clients=a.clients,
                  max_batch=a.max_batch, index=a.index,
                  static_rows=a.static_rows, nprobe=a.nprobe,
                  dyn_index=a.dyn_index, seg_rows=a.seg_rows,
-                 compact_every=a.compact_every)
+                 compact_every=a.compact_every, shards=a.shards)
     else:
         run(multi_pod=False)
         run(multi_pod=True)

@@ -22,6 +22,16 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_shard_mesh(n_shards: int):
+    """1-D 'model' mesh for the sharded serving path (DESIGN.md §13):
+    the tiers are row-partitioned over these devices and every policy
+    lookup/write runs shard-local with a tiny candidate merge. On CPU
+    pair with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    (set before the first jax import) — the launchers' ``--shards N``
+    flag does exactly that."""
+    return jax.make_mesh((n_shards,), ("model",))
+
+
 def make_smoke_mesh(n_devices: int | None = None):
     """Tiny mesh over whatever devices exist (tests / examples)."""
     n = n_devices or len(jax.devices())

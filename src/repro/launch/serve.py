@@ -10,19 +10,32 @@ IVF quantized ANN index (DESIGN.md §11):
 
     PYTHONPATH=src python -m repro.launch.serve --requests 200 \
         --index ivf --static-rows 100000
+
+``--shards N`` serves through the mesh-aware path (DESIGN.md §13): both
+tiers row-sharded over an N-device 'model' mesh, per-shard fused scans
+with a tiny candidate merge, writes scattered to the owning shard. On a
+CPU host it forces ``XLA_FLAGS=--xla_force_host_platform_device_count``
+so N host devices exist; decisions are identical to ``--shards 1``:
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 200 --shards 4
 """
 import argparse
+import os
 import time
 
 
 def build_demo_tier(emb_rows, answers, static_rows: int = 0,
-                    index: str = "flat", nprobe: int = 8):
+                    index: str = "flat", nprobe: int = 8, mesh=None,
+                    texts=None):
     """Shared demo-topology helper (also used by
     ``launch/cache_workload.py --live``): optionally pad the curated
     tier with synthetic entries to ``static_rows`` rows, then build the
-    requested static-index object (DESIGN.md §11).
+    requested static-index object (DESIGN.md §11) — the sharded variant
+    (§13) when a ``mesh`` is given. ``texts`` are the curated entries'
+    prompt texts (row-aligned; judge payloads carry them).
 
-    Returns (StaticTier, answers, index object or None for exact flat).
+    Returns (StaticTier, answers, texts, index object or None for
+    exact flat).
     """
     import numpy as np
 
@@ -30,6 +43,7 @@ def build_demo_tier(emb_rows, answers, static_rows: int = 0,
 
     emb_rows = np.asarray(emb_rows, np.float32)
     answers = list(answers)
+    texts = list(texts) if texts is not None else [str(a) for a in answers]
     if static_rows > len(answers):
         # synthetic curated entries: random directions far from the
         # intent cluster, each its own answer class
@@ -38,15 +52,21 @@ def build_demo_tier(emb_rows, answers, static_rows: int = 0,
                   emb_rows.shape[1])).astype(np.float32)
         emb_rows = np.concatenate([emb_rows, pad])
         answers += [f"[curated] synthetic-{i}" for i in range(len(pad))]
+        texts += [f"synthetic prompt {i}" for i in range(len(pad))]
     tier = make_static_tier(emb_rows, np.arange(len(answers)))
 
     idx_obj = None
     if index == "ivf":
-        from repro.index.ivf import IVFIndex, build_ivf
-        idx_obj = IVFIndex(build_ivf(tier.emb, corpus_normalized=True),
-                           nprobe=nprobe)
+        if mesh is not None:
+            from repro.index.sharded import ShardedIVFIndex
+            idx_obj = ShardedIVFIndex(tier.emb, mesh, nprobe=nprobe)
+        else:
+            from repro.index.ivf import IVFIndex, build_ivf
+            idx_obj = IVFIndex(build_ivf(tier.emb,
+                                         corpus_normalized=True),
+                               nprobe=nprobe)
         print(f"static index: {idx_obj.describe()}")
-    return tier, answers, idx_obj
+    return tier, answers, texts, idx_obj
 
 
 def build_dyn_index(dyn_index: str, capacity: int, d: int,
@@ -69,6 +89,11 @@ def main() -> None:
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--tau", type=float, default=0.92)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="serve both tiers row-sharded over this many "
+                         "devices (DESIGN.md §13); on CPU forces a "
+                         "host-device mesh of that size. 1 = the "
+                         "single-device path")
     ap.add_argument("--index", choices=["flat", "ivf"], default="flat",
                     help="static-tier lookup strategy (DESIGN.md §11); "
                          "'ivf' builds the quantized ANN index over the "
@@ -91,14 +116,29 @@ def main() -> None:
                          "segments whenever this many have accumulated")
     args = ap.parse_args()
 
+    # the host-device count must be forced before the first jax import
+    # (all repro imports below touch jax), so do it off the parsed flag:
+    # keep any pre-existing XLA_FLAGS but replace a conflicting
+    # device-count setting with ours — a smaller inherited count would
+    # otherwise make the mesh build fail
+    if args.shards > 1:
+        import re
+        cur = re.sub(r"--xla_force_host_platform_device_count=\S+", "",
+                     os.environ.get("XLA_FLAGS", ""))
+        os.environ["XLA_FLAGS"] = (
+            f"{cur} --xla_force_host_platform_device_count="
+            f"{args.shards}").strip()
+
     import numpy as np
     from repro.configs import smoke_config
     from repro.core.judge import OracleJudge
     from repro.core.policy import KritesPolicy
     from repro.core.tiers import CacheConfig
     from repro.embedding.embedder import Embedder
+    from repro.launch.mesh import make_shard_mesh
     from repro.serving.engine import BatchingFrontend, LLMEngine
 
+    mesh = make_shard_mesh(args.shards) if args.shards > 1 else None
     embed = Embedder(d_out=64)
     engine = LLMEngine(smoke_config(args.arch), max_len=96)
     frontend = BatchingFrontend(engine, max_batch=8, max_new_tokens=8)
@@ -107,19 +147,26 @@ def main() -> None:
                ("fix", "update", "reset", "clean", "sell")
                for n in ("bike", "laptop", "router", "garden")]
     canon = intents
-    tier, answers, index = build_demo_tier(
+    tier, answers, texts, index = build_demo_tier(
         np.asarray(embed.batch(canon)), [f"[curated] {p}" for p in canon],
         static_rows=args.static_rows, index=args.index,
-        nprobe=args.nprobe)
+        nprobe=args.nprobe, mesh=mesh, texts=canon)
 
+    dyn_index = args.dyn_index
+    if mesh is not None and dyn_index == "segmented":
+        print("note: --dyn-index segmented is single-device only; "
+              "--shards serves the dynamic tier through the "
+              "row-sharded masked scan instead (DESIGN.md §13)")
+        dyn_index = "flat"
     cfg = CacheConfig(args.tau, args.tau, sigma_min=0.3, capacity=512)
     policy = KritesPolicy(cfg, tier, answers, embed,
                           backend_fn=frontend.submit,
                           judge_fn=OracleJudge(), d=64,
                           backend_batch_fn=frontend.submit_many,
-                          index=index,
+                          index=index, static_texts=texts,
+                          mesh=mesh,
                           dyn_index=build_dyn_index(
-                              args.dyn_index, cfg.capacity, 64,
+                              dyn_index, cfg.capacity, 64,
                               seg_rows=args.seg_rows,
                               compact_every=args.compact_every))
 
@@ -142,6 +189,10 @@ def main() -> None:
         print(f"  {k:22s} {v}")
     if policy.dyn_index is not None:
         print(f"  {'dyn_index':22s} {policy.describe_dyn_index()}")
+    sh = policy.shard_stats()
+    if sh is not None:
+        print(f"  {'shards':22s} {sh['shards']}")
+        print(f"  {'shard_occupancy':22s} {sh['shard_occupancy']}")
     policy.pool.stop()
     frontend.stop()
 

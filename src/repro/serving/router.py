@@ -187,6 +187,14 @@ class CacheRouter:
                 "static_origin_rate": self._static_origin / n,
                 "errors": self._errors,
             }
+            shard_stats = getattr(self.policy, "shard_stats", None)
+            shard_stats = shard_stats() if shard_stats else None
+            if shard_stats is not None:
+                # mesh-serving layout (DESIGN.md §13): how many shards
+                # the tiers are row-partitioned over, and how the live
+                # dynamic entries spread across them
+                out["shards"] = shard_stats["shards"]
+                out["shard_occupancy"] = shard_stats["shard_occupancy"]
             dyn_stats = getattr(self.policy, "dyn_index_stats", None)
             dyn_stats = dyn_stats() if dyn_stats else None
             if dyn_stats is not None:

@@ -74,6 +74,17 @@ def test_ttl_eviction():
     assert int(tier.valid.sum()) == 1
 
 
+def test_ttl_zero_disables_eviction():
+    """CacheConfig.ttl documents 0 = disabled; the sweep must be a
+    no-op then — not "expire everything", which `age <= 0` would do."""
+    tier = T.make_dynamic_tier(4, 4)
+    v = jnp.eye(4)
+    tier = T.insert(tier, v[0], 0, 0, now=0)
+    tier = T.insert(tier, v[1], 1, 1, now=50)
+    tier = T.evict_expired(tier, now=10**9, ttl=0)
+    assert int(tier.valid.sum()) == 2
+
+
 # ---------------------------------------------------------------------------
 # simulator semantics
 # ---------------------------------------------------------------------------

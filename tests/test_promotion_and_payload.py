@@ -1,0 +1,305 @@
+"""Async-promotion staleness (LWW) + judge-payload regression tests.
+
+Pins the two Krites write-path bugs fixed in this PR:
+
+- ``KritesPolicy._promote`` used to write unconditionally, so a slow
+  judge's stale promotion clobbered a dynamic entry written *after* the
+  task was enqueued — violating the LWW contract ``tiers.upsert``
+  documents. The tests here fail on that behavior.
+- ``_grey_submission`` used to submit empty ``h_text``/``answer``, so
+  the judge verified on class ids alone; payloads must now carry the
+  full (q_text, h_text, answer) triple.
+
+Plus the batch-long-lock concurrency invariant: async ``_promote``
+racing ``serve_batch`` must keep the host mirrors field-identical to
+the JAX tier, on flat and segmented dynamic-index configs.
+"""
+import dataclasses
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tiers as T
+from repro.core.judge import OracleJudge
+from repro.core.policy import KritesPolicy
+from repro.core.tiers import CacheConfig, make_static_tier
+from repro.data.synth_traces import LMARENA_LIKE, build_benchmark
+
+D = 8
+
+
+def _static(n=4):
+    emb = np.eye(D, dtype=np.float32)[:n]
+    tier = make_static_tier(jnp.asarray(emb),
+                            jnp.arange(n, dtype=jnp.int32))
+    answers = [f"curated-{i}" for i in range(n)]
+    texts = [f"canonical prompt {i}" for i in range(n)]
+    return tier, answers, texts
+
+
+def _para(i=0, j=1, w=0.3):
+    """A paraphrase-like direction near static row ``i``."""
+    v = np.eye(D, dtype=np.float32)[i] + w * np.eye(D, dtype=np.float32)[j]
+    return (v / np.linalg.norm(v)).astype(np.float32)
+
+
+class _GatedOracle:
+    def __init__(self):
+        self.gate = threading.Event()
+
+    def __call__(self, q_cls, h_cls, **kw):
+        self.gate.wait()
+        return int(q_cls) == int(h_cls)
+
+
+# ---------------------------------------------------------------------------
+# LWW promotion staleness
+# ---------------------------------------------------------------------------
+
+def test_stale_promote_skips_newer_write_unit():
+    """Direct twin of tiers.upsert's LWW guard: once a promotion with
+    enq_t=10 owns the key, a straggler with enq_t=5 must be dropped."""
+    tier, answers, texts = _static()
+    pol = KritesPolicy(CacheConfig(0.99, 0.99, capacity=4), tier,
+                       answers, lambda p: _para(), lambda p: f"gen({p})",
+                       OracleJudge(), d=D, static_texts=texts)
+    v = _para()
+    pol._promote({"v": v, "h_idx": 1, "enq_t": 10})
+    slot = int(np.argmax(pol._valid_np))
+    assert pol.dyn_answers[slot] == "curated-1"
+    pol._promote({"v": v, "h_idx": 0, "enq_t": 5})   # stale straggler
+    assert pol.dyn_answers[slot] == "curated-1", \
+        "stale promotion clobbered a newer entry"
+    assert int(np.asarray(pol.dyn.written_at)[slot]) == 10
+    assert int(np.asarray(pol.dyn.answer_ref)[slot]) == 1
+    # equal timestamps (the promotion racing its own miss-insert) and
+    # genuinely newer promotions still win, per upsert's `>` guard
+    pol._promote({"v": v, "h_idx": 0, "enq_t": 10})
+    assert pol.dyn_answers[slot] == "curated-0"
+    pol.pool.stop()
+
+
+def test_delayed_judge_promotion_respects_lww():
+    """End-to-end regression: a grey task enqueued at t=1 whose judge
+    completes only after the same key was rewritten at t=2 must NOT
+    promote over the newer entry. Fails on the old unconditional
+    ``T._write`` promote."""
+    tier, answers, texts = _static()
+    judge = _GatedOracle()
+    # capacity 1 + unreachable tau_dynamic: every serve is a backend
+    # miss that overwrites slot 0, giving the key a newer written_at
+    # while the judge is stuck
+    cfg = CacheConfig(tau_static=0.99, tau_dynamic=1.01, sigma_min=0.0,
+                      capacity=1)
+    pol = KritesPolicy(cfg, tier, answers, lambda p: _para(),
+                       lambda p: f"gen({p})", judge, d=D, n_workers=1,
+                       static_texts=texts)
+    pol.serve("p1", {"cls": 0})     # t=1: insert + grey task (enq_t=1)
+    pol.serve("p1", {"cls": 0})     # t=2: rewrite of the same key
+    assert int(pol._written_at_np[0]) == 2
+    judge.gate.set()                # the slow judge finally answers
+    pol.pool.drain()
+    pol.pool.stop()
+    assert pol.pool.stats.approved >= 1     # judge did approve ...
+    assert not bool(pol._static_origin_np[0]), \
+        "stale promotion (enq_t=1) clobbered the t=2 write"
+    assert pol.dyn_answers[0] == "gen(p1)"
+    assert int(np.asarray(pol.dyn.written_at)[0]) == 2
+    assert not bool(np.asarray(pol.dyn.static_origin)[0])
+
+
+def test_fresh_promotion_still_overwrites_its_own_insert():
+    """The guard must not break the normal flow: a promotion whose
+    enq_t equals the miss-insert's timestamp overwrites it in place."""
+    tier, answers, texts = _static()
+    judge = _GatedOracle()
+    cfg = CacheConfig(tau_static=0.99, tau_dynamic=1.01, sigma_min=0.0,
+                      capacity=4)
+    pol = KritesPolicy(cfg, tier, answers, lambda p: _para(),
+                       lambda p: f"gen({p})", judge, d=D, n_workers=1,
+                       static_texts=texts)
+    pol.serve("p1", {"cls": 0})
+    judge.gate.set()
+    pol.pool.drain()
+    pol.pool.stop()
+    assert bool(pol._static_origin_np[0])
+    assert pol.dyn_answers[0] == "curated-0"
+
+
+# ---------------------------------------------------------------------------
+# judge payload fidelity
+# ---------------------------------------------------------------------------
+
+def _recording_judge(seen):
+    def judge(q_cls, h_cls, q_text="", h_text="", answer=""):
+        seen.append(dict(q_cls=q_cls, h_cls=h_cls, q_text=q_text,
+                         h_text=h_text, answer=answer))
+        return int(q_cls) == int(h_cls)
+    return judge
+
+
+def test_grey_payload_carries_real_texts_scalar_and_batch():
+    tier, answers, texts = _static()
+    seen: list = []
+    cfg = CacheConfig(tau_static=0.99, tau_dynamic=0.99, sigma_min=0.0,
+                      capacity=8)
+    # two distinct paraphrases of static row 0, far enough apart that
+    # the second misses the first's promoted entry and is judged too
+    emb = {"scalar prompt": _para(0, 1), "batched prompt": _para(0, 2)}
+    pol = KritesPolicy(cfg, tier, answers, lambda p: emb[p],
+                       lambda p: f"gen({p})", _recording_judge(seen),
+                       d=D, n_workers=1, static_texts=texts,
+                       backend_batch_fn=lambda ps: [f"gen({p})"
+                                                    for p in ps])
+    pol.serve("scalar prompt", {"cls": 0})
+    pol.pool.drain()
+    pol.serve_batch(["batched prompt"], [{"cls": 0}])
+    pol.pool.drain()
+    pol.pool.stop()
+    assert len(seen) == 2
+    for rec, q in zip(seen, ("scalar prompt", "batched prompt")):
+        assert rec["q_text"] == q
+        assert rec["h_text"] == texts[0]        # the static neighbor's
+        assert rec["answer"] == answers[0]      # curated answer
+        assert rec["q_text"] and rec["h_text"] and rec["answer"]
+
+
+def test_grey_payload_nonempty_without_static_texts():
+    """Legacy callers that pass no static_texts still get a non-empty
+    h_text (the curated answer is the fallback proxy) and the real
+    answer — never the old empty strings."""
+    tier, answers, _ = _static()
+    seen: list = []
+    cfg = CacheConfig(0.99, 0.99, sigma_min=0.0, capacity=8)
+    pol = KritesPolicy(cfg, tier, answers, lambda p: _para(),
+                       lambda p: f"gen({p})", _recording_judge(seen),
+                       d=D, n_workers=1)
+    pol.serve("q", {"cls": 0})
+    pol.pool.drain()
+    pol.pool.stop()
+    assert len(seen) == 1
+    assert seen[0]["answer"] == "curated-0"
+    assert seen[0]["h_text"]        # non-empty fallback
+    # and the strict oracle accepts the payload end to end
+    OracleJudge(require_texts=True)(0, 0, **{
+        k: seen[0][k] for k in ("q_text", "h_text", "answer")})
+
+
+def test_oracle_judge_require_texts_rejects_empty_payload():
+    with pytest.raises(ValueError):
+        OracleJudge(require_texts=True)(0, 0, q_text="q", h_text="",
+                                        answer="a")
+    assert OracleJudge(require_texts=True)(1, 1, q_text="q", h_text="h",
+                                           answer="a")
+
+
+# ---------------------------------------------------------------------------
+# judge-rate knob threading (cfg.judge_rate -> live pool)
+# ---------------------------------------------------------------------------
+
+def test_cfg_judge_rate_throttles_live_pool():
+    tier, answers, texts = _static()
+    cfg = CacheConfig(0.99, 0.99, sigma_min=0.0, capacity=8,
+                      judge_rate=0.0)     # judging disabled by config
+    pol = KritesPolicy(cfg, tier, answers, lambda p: _para(),
+                       lambda p: f"gen({p})", OracleJudge(), d=D,
+                       static_texts=texts)
+    for i in range(4):
+        pol.serve(f"p{i}", {"cls": 0})
+    pol.pool.drain()
+    pol.pool.stop()
+    s = pol.stats()
+    assert s["judged"] == 0
+    assert s["judge_rate_limited"] >= 1
+
+    # an explicit wall-clock override still wins over cfg.judge_rate
+    pol2 = KritesPolicy(cfg, tier, answers, lambda p: _para(),
+                        lambda p: f"gen({p})", OracleJudge(), d=D,
+                        judge_rate_per_s=float("inf"),
+                        static_texts=texts)
+    pol2.serve("p0", {"cls": 0})
+    pol2.pool.drain()
+    pol2.pool.stop()
+    assert pol2.stats()["judged"] == 1
+
+
+def test_default_judge_rate_never_throttles():
+    """cfg.judge_rate's default (1 per request) must keep the historic
+    always-judge behavior: one grey submission per request can never be
+    rate-limited."""
+    tier, answers, texts = _static()
+    cfg = CacheConfig(0.99, 0.99, sigma_min=0.0, capacity=64)
+    pol = KritesPolicy(cfg, tier, answers, lambda p: _para(),
+                       lambda p: f"gen({p})", OracleJudge(), d=D,
+                       static_texts=texts)
+    for i in range(20):
+        pol.serve(f"p{i}", {"cls": 0})
+    pol.pool.drain()
+    pol.pool.stop()
+    assert pol.stats()["judge_rate_limited"] == 0
+
+
+# ---------------------------------------------------------------------------
+# async _promote racing serve_batch: host mirrors == device tier
+# ---------------------------------------------------------------------------
+
+def _trace_setup(n=256, capacity=64):
+    spec = dataclasses.replace(LMARENA_LIKE, n_requests=4000,
+                               n_classes=120)
+    bench = build_benchmark(spec)
+    emb = {f"q{i}": bench.eval_emb[i] for i in range(n)}
+    return dict(
+        prompts=[f"q{i}" for i in range(n)],
+        metas=[{"cls": int(bench.eval_cls[i])} for i in range(n)],
+        tier=make_static_tier(jnp.asarray(bench.static_emb),
+                              jnp.asarray(bench.static_cls)),
+        answers=[f"curated-{int(c)}" for c in bench.static_cls],
+        texts=[f"canon-{i}" for i in range(len(bench.static_cls))],
+        d=bench.static_emb.shape[1],
+        embed_fn=lambda p: emb[p],
+        embed_batch_fn=lambda ps: np.stack([emb[p] for p in ps]),
+        backend_batch_fn=lambda ps: [f"gen({p})" for p in ps],
+        n=n, capacity=capacity)
+
+
+@pytest.mark.parametrize("dyn_index", [None, "segmented"])
+def test_promote_racing_serve_batch_keeps_mirrors_identical(dyn_index):
+    """Interleave real async promotions (slow judge, 2 workers) with
+    batched serving under the batch-long dyn_lock hold; afterwards the
+    host mirrors must be field-identical to the JAX tier."""
+    s = _trace_setup()
+
+    def slow_judge(q_cls, h_cls, **kw):
+        time.sleep(0.002)       # let promotions straddle batches
+        return int(q_cls) == int(h_cls)
+
+    cfg = CacheConfig(tau_static=0.92, tau_dynamic=0.88, sigma_min=0.0,
+                      capacity=s["capacity"])
+    pol = KritesPolicy(cfg, s["tier"], s["answers"], s["embed_fn"],
+                       lambda p: f"gen({p})", slow_judge, d=s["d"],
+                       n_workers=2, static_texts=s["texts"],
+                       dyn_index=dyn_index,
+                       embed_batch_fn=s["embed_batch_fn"],
+                       backend_batch_fn=s["backend_batch_fn"])
+    for i in range(0, s["n"], 16):
+        pol.serve_batch(s["prompts"][i:i + 16], s["metas"][i:i + 16])
+    pol.pool.drain()
+    pol.pool.stop()
+    assert pol.pool.stats.approved > 0, "race never exercised promotes"
+    assert np.array_equal(pol._valid_np, np.asarray(pol.dyn.valid))
+    assert np.array_equal(pol._last_used_np,
+                          np.asarray(pol.dyn.last_used))
+    assert np.array_equal(pol._static_origin_np,
+                          np.asarray(pol.dyn.static_origin))
+    assert np.array_equal(pol._written_at_np,
+                          np.asarray(pol.dyn.written_at))
+    # and the policy still serves coherently afterwards, with mirrors
+    # staying in lockstep through the extra batch
+    r = pol.serve_batch([s["prompts"][0]], [s["metas"][0]])[0]
+    assert r.answer is not None
+    assert np.array_equal(pol._valid_np, np.asarray(pol.dyn.valid))
+    assert np.array_equal(pol._last_used_np,
+                          np.asarray(pol.dyn.last_used))
