@@ -5,7 +5,7 @@
 Registered modules (see each module's docstring for what it reproduces):
 ``table1``, ``fig2``, ``greyzone_roi``, ``latency_async``,
 ``verifier_fidelity``, ``kernels``, ``serve_batched``, ``sweep``,
-``ann_index``, ``dyn_index``, ``sharded_serve``.
+``ann_index``, ``dyn_index``, ``sharded_serve``, ``load_service``.
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = remaining fields
 as compact JSON) and writes results/benchmarks.json.
@@ -28,8 +28,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (ann_index, dyn_index, fig2, greyzone_roi,
-                            kernels_bench, latency_async, serve_batched,
-                            sharded_serve, sweep, table1,
+                            kernels_bench, latency_async, load_service,
+                            serve_batched, sharded_serve, sweep, table1,
                             verifier_fidelity)
     modules = {
         "table1": table1, "fig2": fig2, "greyzone_roi": greyzone_roi,
@@ -41,6 +41,7 @@ def main() -> None:
         "ann_index": ann_index,
         "dyn_index": dyn_index,
         "sharded_serve": sharded_serve,
+        "load_service": load_service,
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -36,4 +36,11 @@ echo "== sharded serving smoke (forced host-device mesh, agreement 1.0) =="
 # benchmark-level serving differential with its agreement-1.0 gate
 python -m benchmarks.sharded_serve --smoke
 
+echo "== live service smoke (load -> snapshot -> kill -> warm restart) =="
+# the fault-injection matrix (tests/test_crash_recovery.py) runs in the
+# tier-1 suite above; this smoke drives the real --serve-stdio process
+# over the JSON-lines protocol at a target QPS, snapshots mid-load and
+# asserts the restart comes back warm (DESIGN.md §14)
+python -m benchmarks.load_service --smoke
+
 echo "== CI OK =="

@@ -233,6 +233,14 @@ class VerifyAndPromotePool:
                 except queue.Full:
                     pass   # still tracked; next sweep retries
 
+    def depth(self) -> dict:
+        """Live queue-depth telemetry (the load harness plots this over
+        time — queue depth only delays promotions, §3.1): tasks waiting
+        in the queue and keys dispatched but not yet completed."""
+        with self._lock:
+            return {"queued": self.q.qsize(),
+                    "inflight": len(self._inflight)}
+
     def drain(self, timeout_s: float = 30.0):
         """Block until the queue is empty (tests / shutdown only)."""
         t0 = time.monotonic()

@@ -567,12 +567,17 @@ class KritesPolicy(BaselinePolicy):
                  embed_batch_fn: Optional[Callable] = None,
                  backend_batch_fn: Optional[Callable] = None,
                  index=None, dyn_index=None, static_texts=None,
-                 mesh=None, shard_axis: str = "model"):
+                 mesh=None, shard_axis: str = "model", wal=None):
         super().__init__(cfg, static_tier, static_answers, embed_fn,
                          backend_fn, d, embed_batch_fn=embed_batch_fn,
                          backend_batch_fn=backend_batch_fn, index=index,
                          dyn_index=dyn_index, static_texts=static_texts,
                          mesh=mesh, shard_axis=shard_axis)
+        # write-ahead promotion journal (core/promo_wal.py, DESIGN.md
+        # §14): each approved verdict is appended — inside dyn_lock, so
+        # journal order equals apply order — before its upsert, and
+        # replayed idempotently on restart via the same LWW contract
+        self.wal = wal
         # one judge-budget knob: cfg.judge_rate (per request, shared
         # with the trace simulator) is the default; judge_rate_per_s is
         # an explicit wall-clock override for live deployments
@@ -634,7 +639,7 @@ class KritesPolicy(BaselinePolicy):
         if items:
             self.pool.submit_many(items)
 
-    def _promote(self, payload: dict):
+    def _promote(self, payload: dict, journal: bool = True):
         """Auxiliary overwrite: upsert the curated static answer under
         the new key — idempotent, near-duplicate keys overwrite in
         place, and last-writer-wins guarded exactly as
@@ -642,12 +647,25 @@ class KritesPolicy(BaselinePolicy):
         *written after this task was enqueued* (``written_at > enq_t``)
         is newer state a slow judge must not clobber, so the stale
         promotion is skipped and neither the device tier nor the host
-        mirrors are touched."""
+        mirrors are touched.
+
+        With a ``wal`` the verdict is journaled before the upsert
+        (write-ahead: a crash after the append replays the promotion on
+        restart; a crash before it re-judges at the next grey trigger).
+        ``journal=False`` is the replay path — journaled records must
+        not re-append."""
         h_idx = payload["h_idx"]
         v = jnp.asarray(payload["v"])
         enq_t = payload["enq_t"]
         answer = self._serve_static(h_idx)
         with self.dyn_lock:
+            if journal and self.wal is not None:
+                from repro.core.promo_wal import encode_record
+                ja = payload.get("judge_args", {})
+                self.wal.append(encode_record(
+                    payload["v"], h_idx, enq_t, ttl=self.cfg.ttl,
+                    q_text=ja.get("q_text", ""),
+                    h_text=ja.get("h_text", "")))
             # the async promotion path rides the same index: dedup
             # lookup through the segmented tail/segments (§12) or the
             # row-sharded masked scan (§13), fresh write into the tier
@@ -680,4 +698,8 @@ class KritesPolicy(BaselinePolicy):
                     "judge_rate_limited": ps.rate_limited,
                     "judged": ps.judged, "approved": ps.approved,
                     "redispatched": ps.redispatched})
+        if self.wal is not None:
+            ws = self.wal.stats()
+            out["wal_seq"] = ws["seq"]
+            out["wal_synced_seq"] = ws["synced_seq"]
         return out

@@ -18,9 +18,31 @@ CPU host it forces ``XLA_FLAGS=--xla_force_host_platform_device_count``
 so N host devices exist; decisions are identical to ``--shards 1``:
 
     PYTHONPATH=src python -m repro.launch.serve --requests 200 --shards 4
+
+``--snapshot-dir DIR`` makes the service crash-safe (DESIGN.md §14):
+on start it restores the newest snapshot (dynamic tier + mirrors + warm
+ANN index) and replays the promotion WAL tail past the snapshot's
+``wal_seq`` cursor; every approved promotion is journaled
+(append-before-upsert) so a SIGKILL at any point loses no verified
+promotion. ``--snapshot-every N`` saves periodically; a final snapshot
++ WAL compaction happens on clean shutdown:
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 200 \
+        --snapshot-dir /tmp/krites-snaps
+
+``--serve-stdio`` runs the process as a long-lived JSON-lines service
+on stdin/stdout (one request or control op per line; consecutive serve
+ops are coalesced into one batched call) — the protocol the live load
+harness (``benchmarks/load_service.py``) and the crash-recovery tests
+drive:
+
+    {"op": "serve", "id": 0, "prompt": "how do i fix my bike", "cls": 0}
+    {"op": "stats"} | {"op": "snapshot"} | {"op": "drain"}
+    {"op": "shutdown"}
 """
 import argparse
 import os
+import sys
 import time
 
 
@@ -84,6 +106,122 @@ def build_dyn_index(dyn_index: str, capacity: int, d: int,
     return idx
 
 
+DEMO_INTENTS = [f"how do i {v} my {n}" for v in
+                ("fix", "update", "reset", "clean", "sell")
+                for n in ("bike", "laptop", "router", "garden")]
+DEMO_PREFIXES = ["", "hey ", "um, ", "please, ", "quick q: "]
+
+
+def _serve_stdio(policy, snap_dir, wal) -> None:
+    """JSON-lines service loop (DESIGN.md §14): one message per stdin
+    line, one JSON reply per line on stdout. Messages are processed in
+    arrival order; consecutive ``serve`` ops already queued are
+    coalesced into a single ``serve_batch`` call (the stdio twin of the
+    router's micro-batcher). Control ops: ``stats``, ``snapshot``,
+    ``drain``, ``shutdown``."""
+    import json
+    import queue as _q
+    import threading
+
+    from repro.distributed import checkpoint as ckpt
+    from repro.serving import persist
+
+    inq: "_q.Queue[object]" = _q.Queue()
+
+    def _reader():
+        for line in sys.stdin:
+            line = line.strip()
+            if line:
+                inq.put(line)
+        inq.put(None)
+
+    threading.Thread(target=_reader, daemon=True,
+                     name="stdio-reader").start()
+
+    def emit(obj: dict) -> None:
+        sys.stdout.write(json.dumps(obj) + "\n")
+        sys.stdout.flush()
+
+    def _serve_run(msgs: list) -> None:
+        results = policy.serve_batch(
+            [m.get("prompt", "") for m in msgs],
+            [{"cls": m["cls"]} if "cls" in m else None for m in msgs])
+        for m, r in zip(msgs, results):
+            emit({"ok": True, "id": m.get("id"),
+                  "served_by": r.served_by,
+                  "static_origin": bool(r.static_origin),
+                  "similarity": float(r.similarity),
+                  "answer": None if r.answer is None else str(r.answer)})
+
+    emit({"ok": True, "ready": True, "pid": os.getpid(),
+          "t": policy.t, "wal_seq":
+          wal.seq if wal is not None else None})
+    eof = False
+    while not eof:
+        first = inq.get()
+        if first is None:
+            break
+        batch = [first]
+        while True:          # coalesce whatever has already arrived
+            try:
+                nxt = inq.get_nowait()
+            except _q.Empty:
+                break
+            if nxt is None:
+                eof = True
+                break
+            batch.append(nxt)
+
+        msgs = []
+        for ln in batch:
+            try:
+                msgs.append(json.loads(ln))
+            except ValueError:
+                emit({"ok": False, "error": f"bad json: {ln[:80]!r}"})
+        i = 0
+        while i < len(msgs):
+            msg = msgs[i]
+            op = msg.get("op", "serve")
+            if op == "serve":
+                j = i
+                while j < len(msgs) and \
+                        msgs[j].get("op", "serve") == "serve":
+                    j += 1
+                _serve_run(msgs[i:j])
+                i = j
+                continue
+            if op == "stats":
+                s = policy.stats()
+                s["t"] = policy.t
+                depth = policy.pool.depth()
+                s["judge_queued"] = depth["queued"]
+                s["judge_inflight"] = depth["inflight"]
+                emit({"ok": True, "id": msg.get("id"), "stats": s})
+            elif op == "snapshot":
+                if snap_dir is None:
+                    emit({"ok": False, "id": msg.get("id"),
+                          "error": "no --snapshot-dir"})
+                else:
+                    path = persist.save_snapshot(snap_dir, policy)
+                    ckpt.prune(snap_dir, keep=3)
+                    emit({"ok": True, "id": msg.get("id"),
+                          "snapshot": str(path), "t": policy.t,
+                          "wal_seq":
+                          wal.seq if wal is not None else None})
+            elif op == "drain":
+                policy.pool.drain(float(msg.get("timeout_s", 30.0)))
+                emit({"ok": True, "id": msg.get("id"),
+                      "depth": policy.pool.depth()})
+            elif op == "shutdown":
+                emit({"ok": True, "id": msg.get("id"), "bye": True})
+                eof = True
+                break
+            else:
+                emit({"ok": False, "id": msg.get("id"),
+                      "error": f"unknown op {op!r}"})
+            i += 1
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -114,6 +252,28 @@ def main() -> None:
     ap.add_argument("--compact-every", type=int, default=4,
                     help="segmented dynamic index: merge sealed "
                          "segments whenever this many have accumulated")
+    ap.add_argument("--capacity", type=int, default=512,
+                    help="dynamic-tier capacity")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="crash-safe persistence (DESIGN.md §14): "
+                         "restore the newest snapshot on start, replay "
+                         "the promotion WAL tail, snapshot on shutdown")
+    ap.add_argument("--wal", default=None,
+                    help="promotion write-ahead journal path (default: "
+                         "<snapshot-dir>/promo.wal when --snapshot-dir "
+                         "is set)")
+    ap.add_argument("--wal-fsync-every", type=int, default=1,
+                    help="fsync the WAL every N appends (1 = every "
+                         "approved promotion is durable before its "
+                         "upsert)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="save a snapshot every N served requests "
+                         "(0 = only at shutdown / on the stdio "
+                         "'snapshot' op)")
+    ap.add_argument("--serve-stdio", action="store_true",
+                    help="run as a long-lived JSON-lines service on "
+                         "stdin/stdout instead of the demo loop (the "
+                         "load harness and recovery tests drive this)")
     args = ap.parse_args()
 
     # the host-device count must be forced before the first jax import
@@ -138,19 +298,43 @@ def main() -> None:
     from repro.launch.mesh import make_shard_mesh
     from repro.serving.engine import BatchingFrontend, LLMEngine
 
+    from repro.serving import persist
+
     mesh = make_shard_mesh(args.shards) if args.shards > 1 else None
     embed = Embedder(d_out=64)
     engine = LLMEngine(smoke_config(args.arch), max_len=96)
     frontend = BatchingFrontend(engine, max_batch=8, max_new_tokens=8)
 
-    intents = [f"how do i {v} my {n}" for v in
-               ("fix", "update", "reset", "clean", "sell")
-               for n in ("bike", "laptop", "router", "garden")]
+    snap = None
+    if args.snapshot_dir and \
+            persist.latest_snapshot(args.snapshot_dir) is not None:
+        snap = persist.load_snapshot(args.snapshot_dir)
+        print(f"snapshot: step {snap.step} (t={snap.extra['t']}, "
+              f"wal_seq={snap.extra['wal_seq']})")
+
+    intents = DEMO_INTENTS
     canon = intents
+    # with a snapshot on disk, defer the IVF build: the snapshot's
+    # packed index warm-restores in milliseconds when its corpus hash
+    # matches the rebuilt tier (persist.load_static_index); the cold
+    # build only runs when the snapshot is stale or absent
+    warm_ivf = snap is not None and args.index == "ivf" and mesh is None
     tier, answers, texts, index = build_demo_tier(
         np.asarray(embed.batch(canon)), [f"[curated] {p}" for p in canon],
-        static_rows=args.static_rows, index=args.index,
+        static_rows=args.static_rows,
+        index="flat" if warm_ivf else args.index,
         nprobe=args.nprobe, mesh=mesh, texts=canon)
+    if warm_ivf:
+        index = persist.load_static_index(snap, tier.emb,
+                                          nprobe=args.nprobe)
+        if index is not None:
+            print(f"static index: warm-restored {index.describe()}")
+        else:
+            from repro.index.ivf import IVFIndex, build_ivf
+            index = IVFIndex(build_ivf(tier.emb, corpus_normalized=True),
+                             nprobe=args.nprobe)
+            print(f"static index: {index.describe()} "
+                  "(snapshot index stale/absent — cold rebuild)")
 
     dyn_index = args.dyn_index
     if mesh is not None and dyn_index == "segmented":
@@ -158,20 +342,53 @@ def main() -> None:
               "--shards serves the dynamic tier through the "
               "row-sharded masked scan instead (DESIGN.md §13)")
         dyn_index = "flat"
-    cfg = CacheConfig(args.tau, args.tau, sigma_min=0.3, capacity=512)
+    wal = None
+    wal_path = args.wal or (os.path.join(args.snapshot_dir, "promo.wal")
+                            if args.snapshot_dir else None)
+    if wal_path:
+        from repro.core.promo_wal import PromotionWAL
+        wal = PromotionWAL(wal_path, fsync_every=args.wal_fsync_every)
+
+    cfg = CacheConfig(args.tau, args.tau, sigma_min=0.3,
+                      capacity=args.capacity)
     policy = KritesPolicy(cfg, tier, answers, embed,
                           backend_fn=frontend.submit,
                           judge_fn=OracleJudge(), d=64,
                           backend_batch_fn=frontend.submit_many,
                           index=index, static_texts=texts,
-                          mesh=mesh,
+                          mesh=mesh, wal=wal,
                           dyn_index=build_dyn_index(
                               dyn_index, cfg.capacity, 64,
                               seg_rows=args.seg_rows,
                               compact_every=args.compact_every))
 
+    # crash recovery (DESIGN.md §14): newest snapshot first, then the
+    # journal tail past its wal_seq cursor — promotions journaled after
+    # the capture replay idempotently through the same LWW guard
+    if snap is not None:
+        rep = persist.restore_policy(policy, snap, rebuild="background")
+        print(f"restored: t={rep['t']} dyn_live={rep['dyn_live']} "
+              f"index={rep['index']}")
+    if wal_path and os.path.exists(wal_path):
+        from repro.core.promo_wal import replay_into
+        r = replay_into(policy, wal_path,
+                        skip=snap.extra["wal_seq"] if snap else 0)
+        if r["replayed"] or not r["clean"]:
+            print(f"wal replay: {r['replayed']} promotions "
+                  f"(skipped {r['skipped']}, clean={r['clean']})")
+
+    if args.serve_stdio:
+        _serve_stdio(policy, args.snapshot_dir, wal)
+        if args.snapshot_dir:
+            persist.save_snapshot(args.snapshot_dir, policy)
+        policy.pool.stop()
+        frontend.stop()
+        if wal is not None:
+            wal.close()
+        return
+
     rng = np.random.default_rng(0)
-    prefixes = ["", "hey ", "um, ", "please, ", "quick q: "]
+    prefixes = DEMO_PREFIXES
     t0 = time.time()
     for i in range(args.requests):
         c = int(rng.integers(0, len(intents)))
@@ -182,6 +399,12 @@ def main() -> None:
             print(f"{i+1:5d} reqs | static-origin "
                   f"{s['static_origin_rate']:.3f} | backend "
                   f"{s['backend_rate']:.3f} | judged {s['judged']}")
+        if args.snapshot_dir and args.snapshot_every \
+                and (i + 1) % args.snapshot_every == 0:
+            path = persist.save_snapshot(args.snapshot_dir, policy)
+            from repro.distributed.checkpoint import prune
+            prune(args.snapshot_dir, keep=3)
+            print(f"snapshot -> {path.name}")
     policy.pool.drain()
     s = policy.stats()
     print(f"\nfinal ({time.time()-t0:.1f}s):")
@@ -193,8 +416,23 @@ def main() -> None:
     if sh is not None:
         print(f"  {'shards':22s} {sh['shards']}")
         print(f"  {'shard_occupancy':22s} {sh['shard_occupancy']}")
+    if args.snapshot_dir:
+        # final snapshot, then drop the journal prefix it covers — the
+        # classic checkpoint+truncate cycle (safe only with the WAL
+        # closed: compaction rewrites the file under a new inode)
+        path = persist.save_snapshot(args.snapshot_dir, policy)
+        print(f"  {'snapshot':22s} {path}")
+        if wal is not None:
+            seq = wal.seq
+            wal.close()
+            wal = None
+            from repro.core.promo_wal import compact
+            kept = compact(wal_path, keep_from_seq=seq)
+            print(f"  {'wal_compacted':22s} kept {kept} records")
     policy.pool.stop()
     frontend.stop()
+    if wal is not None:
+        wal.close()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,385 @@
+"""Snapshot/restore of the serving state: both tiers, their ANN
+indexes, and the policy's host mirrors (DESIGN.md §14).
+
+A million-entry static tier takes ~1 min to IVF-build; the dynamic tier
+holds every verified promotion the async pipeline has paid judge calls
+for. Neither should start cold on every process restart. This module
+persists the whole serving state through the atomic-write conventions
+of ``distributed/checkpoint.py`` (tmp dir + ``os.replace`` publish,
+per-leaf blake2s hashes verified on load) and restores it into a
+freshly constructed policy:
+
+- **dynamic tier** — all seven device arrays, the four host decision
+  mirrors, the answer list and the logical clock ``t``, restored
+  field-identically (sharded onto the policy's mesh when serving
+  multi-device);
+- **static ANN index** — the packed IVF layout (centroids, int8 codes,
+  scales, row ids) is saved *without* its corpus (the corpus IS the
+  static tier embedding matrix, stored once) and re-wired to the live
+  tier on load. The manifest records the corpus hash the index was
+  built from: restore installs it only when that hash matches the
+  policy's static tier (warm restore); a stale or absent index triggers
+  a rebuild instead — inline or on a background thread that atomically
+  swaps ``policy.index`` when done, serving exact (flat or existing-
+  index) lookups meanwhile;
+- **segmented dynamic index** — rebuilt from the restored live set via
+  ``SegmentedIndex.bulk_load`` (one merged segment — the steady state a
+  long deployment reaches after compaction): tombstoned slots are not
+  in the live set, so they stay unreachable, and lookups are decision-
+  identical by the exact-rerank contract (§12);
+- **WAL cursor** — the manifest records the promotion journal's
+  ``wal_seq`` at capture time (captured under ``dyn_lock``, so it is
+  consistent with the tier arrays); recovery replays only journal
+  records after it (``promo_wal.replay_into(skip=...)``).
+
+The snapshot manifest is versioned (``format``); loaders refuse
+snapshots they do not understand instead of misreading them.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.distributed import checkpoint as ckpt
+
+SNAP_FORMAT = 1
+SNAP_KIND = "krites-snapshot"
+
+
+def state_hash(arr) -> str:
+    """Content hash used to tie an index to the corpus it was built
+    from (and snapshots to their static tier)."""
+    return ckpt._hash(np.ascontiguousarray(np.asarray(arr)))
+
+
+def _jsonable(x: Any) -> Any:
+    """Answers are strings in every shipped backend; anything exotic is
+    coerced so a snapshot never fails mid-write."""
+    return x if isinstance(x, (str, int, float, bool)) or x is None \
+        else str(x)
+
+
+@dataclass
+class Snapshot:
+    """A loaded snapshot: raw arrays (nested dict) + manifest extras."""
+    step: int
+    tree: dict
+    extra: dict
+    path: Path
+
+
+# ---------------------------------------------------------------------------
+# save
+# ---------------------------------------------------------------------------
+
+def save_snapshot(snap_dir: str | Path, policy, *, step: Optional[int] = None,
+                  include_static: bool = True) -> Path:
+    """Capture the policy's full serving state and publish it atomically.
+
+    The capture (device->host gather of the dynamic tier, mirror
+    copies, ``wal_seq``) happens under ``dyn_lock`` so it is a
+    consistent cut w.r.t. concurrent promotions; the disk write happens
+    after the lock is released, on the captured copies. The WAL is
+    fsynced inside the cut, so ``wal_seq`` counts only durable records.
+    """
+    snap_dir = Path(snap_dir)
+    if step is None:
+        last = latest_snapshot(snap_dir)
+        step = 0 if last is None else last + 1
+
+    with policy.dyn_lock:
+        wal = getattr(policy, "wal", None)
+        if wal is not None:
+            wal.sync()
+        wal_seq = wal.seq if wal is not None else 0
+        dyn = {f: np.asarray(jax_get(v))
+               for f, v in zip(policy.dyn._fields, policy.dyn)}
+        mirrors = {
+            "valid": policy._valid_np.copy(),
+            "last_used": policy._last_used_np.copy(),
+            "static_origin": policy._static_origin_np.copy(),
+            "written_at": policy._written_at_np.copy(),
+        }
+        t = policy.t
+        dyn_answers = [_jsonable(a) for a in policy.dyn_answers]
+
+    tree: dict = {"dyn": dyn, "mirrors": mirrors}
+    extra: dict = {
+        "format": SNAP_FORMAT,
+        "kind": SNAP_KIND,
+        "saved_unix": time.time(),
+        "t": int(t),
+        "wal_seq": int(wal_seq),
+        "capacity": int(policy.cfg.capacity),
+        "d": int(dyn["emb"].shape[1]),
+        "dyn_answers": dyn_answers,
+        "dyn_index": policy.describe_dyn_index()
+        if policy.dyn_index is not None else None,
+        "ivf": None,
+        "static_hash": None,
+    }
+
+    static_emb = np.asarray(jax_get(policy.static.emb))
+    extra["static_hash"] = state_hash(static_emb)
+    if include_static:
+        tree["static"] = {
+            "emb": static_emb,
+            "cls": np.asarray(jax_get(policy.static.cls)),
+            "answer_ref": np.asarray(jax_get(policy.static.answer_ref)),
+        }
+        extra["static_answers"] = [_jsonable(a)
+                                   for a in policy.static_answers]
+        extra["static_texts"] = list(policy.static_texts) \
+            if policy.static_texts is not None else None
+
+    ivf_index = _plain_ivf_index(policy.index)
+    if ivf_index is not None:
+        ivf = ivf_index.ivf
+        tree["ivf"] = {
+            "centroids": np.asarray(jax_get(ivf.centroids)),
+            "codes": np.asarray(jax_get(ivf.codes)),
+            "scales": np.asarray(jax_get(ivf.scales)),
+            "row_ids": np.asarray(jax_get(ivf.row_ids)),
+        }
+        extra["ivf"] = {
+            "nprobe": int(ivf_index.nprobe),
+            "n_candidates": int(ivf_index.n_candidates),
+            # the corpus is not duplicated on disk: it is the static
+            # tier embedding matrix, re-wired on load — this hash is
+            # what makes staleness detectable
+            "corpus_hash": state_hash(np.asarray(jax_get(ivf.corpus))),
+        }
+
+    return ckpt.save(snap_dir, step, tree, extra=extra)
+
+
+def jax_get(x):
+    """`jax.device_get` without importing jax at module import time
+    (the loader side is useful in plain-numpy tooling too)."""
+    import jax
+    return jax.device_get(x)
+
+
+def _plain_ivf_index(index) -> Optional[object]:
+    """The single-device IVFIndex if that is what the policy serves
+    through; sharded/flat/None indexes are not snapshot-persisted (a
+    sharded layout is mesh-shaped — it is rebuilt from the corpus on
+    restore; flat has nothing to persist)."""
+    from repro.index.ivf import IVFIndex
+    return index if isinstance(index, IVFIndex) else None
+
+
+# ---------------------------------------------------------------------------
+# load
+# ---------------------------------------------------------------------------
+
+def latest_snapshot(snap_dir: str | Path) -> Optional[int]:
+    """Newest published snapshot step, ignoring torn tmp dirs (the
+    atomic-rename convention: a crash mid-save leaves only ``.tmp_*``,
+    which is never listed)."""
+    return ckpt.latest_step(snap_dir)
+
+
+def load_snapshot(snap_dir: str | Path, step: Optional[int] = None,
+                  verify: bool = True) -> Snapshot:
+    """Read a snapshot back into host arrays, hash-verifying each leaf.
+
+    Raises ``FileNotFoundError`` when no snapshot exists, ``IOError``
+    on corruption, ``ValueError`` on an unknown manifest format.
+    """
+    snap_dir = Path(snap_dir)
+    if step is None:
+        step = latest_snapshot(snap_dir)
+        if step is None:
+            raise FileNotFoundError(f"no snapshot under {snap_dir}")
+    src = snap_dir / f"step_{step:08d}"
+    manifest = json.loads((src / "manifest.json").read_text())
+    extra = manifest.get("extra", {})
+    if extra.get("format") != SNAP_FORMAT or extra.get("kind") != SNAP_KIND:
+        raise ValueError(
+            f"{src}: not a format-{SNAP_FORMAT} {SNAP_KIND} manifest "
+            f"(got format={extra.get('format')!r} "
+            f"kind={extra.get('kind')!r})")
+
+    tree: dict = {}
+    for name, meta in manifest["leaves"].items():
+        arr = np.load(src / meta["file"])
+        if verify and ckpt._hash(arr) != meta["hash"]:
+            raise IOError(f"snapshot corruption in leaf {name}")
+        node = tree
+        parts = name.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return Snapshot(step=step, tree=tree, extra=extra, path=src)
+
+
+def load_static_index(snap: "Snapshot | str | Path", corpus, *,
+                      nprobe: Optional[int] = None,
+                      n_candidates: Optional[int] = None,
+                      force: Optional[str] = None):
+    """Warm-restore the static IVF index against ``corpus`` (the live
+    static tier embedding matrix). Returns an ``IVFIndex`` ready to
+    inject, or ``None`` when the snapshot carries no index or carries
+    one built from a different corpus (stale — the caller rebuilds).
+    ``nprobe``/``n_candidates`` override the snapshotted operating
+    point (they are serving knobs, not layout)."""
+    import jax.numpy as jnp
+
+    from repro.index.ivf import IVF, IVFIndex
+
+    if not isinstance(snap, Snapshot):
+        try:
+            snap = load_snapshot(snap)
+        except FileNotFoundError:
+            return None
+    meta = snap.extra.get("ivf")
+    if meta is None or "ivf" not in snap.tree:
+        return None
+    if meta["corpus_hash"] != state_hash(corpus):
+        return None                      # stale: corpus changed
+    leaves = snap.tree["ivf"]
+    ivf = IVF(centroids=jnp.asarray(leaves["centroids"]),
+              codes=jnp.asarray(leaves["codes"]),
+              scales=jnp.asarray(leaves["scales"]),
+              row_ids=jnp.asarray(leaves["row_ids"]),
+              corpus=jnp.asarray(corpus, jnp.float32))
+    return IVFIndex(ivf,
+                    nprobe=meta["nprobe"] if nprobe is None else nprobe,
+                    n_candidates=meta["n_candidates"]
+                    if n_candidates is None else n_candidates,
+                    force=force)
+
+
+# ---------------------------------------------------------------------------
+# restore
+# ---------------------------------------------------------------------------
+
+def restore_policy(policy, snap: "Snapshot | str | Path", *,
+                   step: Optional[int] = None,
+                   rebuild: str = "background") -> dict:
+    """Install a snapshot's serving state into a freshly constructed
+    policy (same ``capacity``/``d``/mesh topology as the saver; the
+    dynamic tier and any injected ``dyn_index`` must be empty — restore
+    replaces state, it does not merge).
+
+    Static-index handling (``rebuild``):
+
+    - the snapshot's IVF layout is installed directly when its corpus
+      hash matches the policy's static tier (**warm restore** — the
+      launcher can also do this up front via :func:`load_static_index`
+      and skip the cold build entirely);
+    - otherwise (stale or absent index, and only when the deployment
+      uses one: the policy already carries an ``IVFIndex`` or the
+      snapshot recorded one): ``"inline"`` rebuilds before returning,
+      ``"background"`` returns immediately and atomically swaps
+      ``policy.index`` when the build finishes (serving the existing
+      exact path meanwhile), ``"never"`` leaves the index alone.
+
+    Returns a report: restored step/t/wal_seq, live-entry count, what
+    happened to the index, and the rebuild thread (if any) so callers
+    can join it.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import tiers as T
+
+    if rebuild not in ("background", "inline", "never"):
+        raise ValueError(f"rebuild={rebuild!r}")
+    if not isinstance(snap, Snapshot):
+        snap = load_snapshot(snap, step=step)
+
+    dyn_np = snap.tree["dyn"]
+    cap, d = dyn_np["emb"].shape
+    if cap != policy.cfg.capacity:
+        raise ValueError(f"snapshot capacity {cap} != policy "
+                         f"capacity {policy.cfg.capacity}")
+    if int(snap.extra["t"]) < 0:
+        raise ValueError("negative clock in snapshot")
+
+    dyn = T.DynamicTier(**{f: jnp.asarray(dyn_np[f])
+                           for f in T.DynamicTier._fields})
+    with policy.dyn_lock:
+        if policy.mesh is not None:
+            from repro.index.sharded import shard_dynamic_tier
+            dyn = shard_dynamic_tier(dyn, policy.mesh, policy.shard_axis)
+        policy.dyn = dyn
+        m = snap.tree["mirrors"]
+        policy._valid_np[:] = m["valid"]
+        policy._last_used_np[:] = m["last_used"]
+        policy._static_origin_np[:] = m["static_origin"]
+        policy._written_at_np[:] = m["written_at"]
+        policy.t = int(snap.extra["t"])
+        answers = snap.extra.get("dyn_answers") or [None] * cap
+        policy.dyn_answers = list(answers)
+        if policy.dyn_index is not None:
+            if policy.dyn_index.stats().get("writes", 0):
+                raise ValueError(
+                    "restore_policy needs a fresh dyn_index: the "
+                    "segmented index is rebuilt from the restored "
+                    "live set, not merged into existing state")
+            live = np.nonzero(m["valid"])[0]
+            if len(live):
+                policy.dyn_index.bulk_load(live.astype(np.int32),
+                                           dyn_np["emb"][live])
+
+    report = {
+        "step": snap.step, "t": policy.t,
+        "wal_seq": int(snap.extra.get("wal_seq", 0)),
+        "dyn_live": int(snap.tree["mirrors"]["valid"].sum()),
+        "index": "none", "rebuild_thread": None,
+    }
+
+    # -- static index: warm restore, else rebuild-and-swap ----------------
+    wants_index = _plain_ivf_index(policy.index) is not None \
+        or (policy.index is None and policy.mesh is None
+            and snap.extra.get("ivf") is not None)
+    if not wants_index or rebuild == "never" and policy.index is not None:
+        report["index"] = "kept" if policy.index is not None else "none"
+        return report
+
+    warm = load_static_index(snap, policy.static.emb)
+    if warm is not None:
+        cur = _plain_ivf_index(policy.index)
+        if cur is not None:   # keep the operator's live serving knobs
+            warm = load_static_index(snap, policy.static.emb,
+                                     nprobe=cur.nprobe,
+                                     n_candidates=cur.n_candidates,
+                                     force=cur.force)
+        policy.index = warm
+        report["index"] = "warm"
+        return report
+    if rebuild == "never":
+        report["index"] = "kept" if policy.index is not None else "none"
+        return report
+
+    report["index"] = f"rebuild-{rebuild}"
+    ivf_meta = snap.extra.get("ivf") or {}
+    cur = _plain_ivf_index(policy.index)
+    nprobe = cur.nprobe if cur is not None \
+        else ivf_meta.get("nprobe", 8)
+    n_candidates = cur.n_candidates if cur is not None \
+        else ivf_meta.get("n_candidates", 32)
+
+    def _build_and_swap():
+        from repro.index.ivf import IVFIndex, build_ivf
+        ivf = build_ivf(policy.static.emb, corpus_normalized=True)
+        # atomic swap: attribute assignment is atomic under the GIL,
+        # and every serve reads `policy.index` exactly once per call
+        policy.index = IVFIndex(ivf, nprobe=nprobe,
+                                n_candidates=n_candidates)
+
+    if rebuild == "inline":
+        _build_and_swap()
+    else:
+        th = threading.Thread(target=_build_and_swap, daemon=True,
+                              name="persist-index-rebuild")
+        th.start()
+        report["rebuild_thread"] = th
+    return report

@@ -206,6 +206,17 @@ class CacheRouter:
                 out["dyn_seals"] = dyn_stats["seals"]
                 out["dyn_merges"] = dyn_stats["merges"]
                 out["dyn_tombstones"] = dyn_stats["tombstones"]
+            pool = getattr(self.policy, "pool", None)
+            if pool is not None and hasattr(pool, "depth"):
+                # async VerifyAndPromote backlog (DESIGN.md §4/§14):
+                # the load harness tracks this over time — depth only
+                # delays promotions, never serving
+                depth = pool.depth()
+                out["judge_queued"] = depth["queued"]
+                out["judge_inflight"] = depth["inflight"]
+            wal = getattr(self.policy, "wal", None)
+            if wal is not None:
+                out["wal_seq"] = wal.stats()["seq"]
             if self._last_error:
                 out["last_error"] = self._last_error
             if lat.size:

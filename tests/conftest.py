@@ -25,14 +25,30 @@ except ModuleNotFoundError:
     HAVE_PYTEST_TIMEOUT = False
 
 
-if not HAVE_PYTEST_TIMEOUT:
-
-    def pytest_addoption(parser):
+def pytest_addoption(parser):
+    parser.addoption(
+        "--run-slow", action="store_true", default=False,
+        help="run tests marked @pytest.mark.slow (e.g. the full "
+             "crash-injection matrix in test_crash_recovery.py); "
+             "they are deselected by default to keep tier-1 fast")
+    if not HAVE_PYTEST_TIMEOUT:
         parser.addoption(
             "--timeout", type=float, default=0,
             help="per-test timeout in seconds, 0 = disabled "
                  "(SIGALRM fallback; install pytest-timeout for "
                  "process-level enforcement)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--run-slow"):
+        return
+    skip = pytest.mark.skip(reason="slow: pass --run-slow to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)
+
+
+if not HAVE_PYTEST_TIMEOUT:
 
     @pytest.hookimpl(wrapper=True)
     def pytest_runtest_call(item):

@@ -152,8 +152,9 @@ class _Task:
 
 
 def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
-                 capacity=None, judge_flip=None,
-                 dyn_index=None) -> dict:
+                 capacity=None, judge_flip=None, dyn_index=None,
+                 drain=False, crash_after=None,
+                 extra_replays=0) -> dict:
     """Reference run; returns plain-numpy analogues of ``SimResult``.
 
     ``cfg`` is any object with the :class:`repro.core.tiers.CacheConfig`
@@ -162,6 +163,23 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
     lookups through the :class:`_RefSegIndex` twin (tail + sealed
     segments + tombstones, exact rerank) — decisions must be identical
     to the flat config, keeping this loop the oracle for both.
+
+    **Recovery semantics** (the numpy oracle for DESIGN.md §14).
+    ``drain=True`` runs the end-of-trace promotion burst: every still-
+    pending task is judged in due order and each approved promotion is
+    first appended to a journal (the WAL analogue — journal order is
+    apply order) and then upserted. ``crash_after=k`` models a crash
+    mid-burst: only the first ``k`` journaled upserts land before the
+    process dies; recovery then replays the *whole* journal, in order,
+    with each record's original ``now`` — and ``extra_replays`` runs
+    replay again that many times. The contract under test: any
+    ``crash_after`` point followed by >=1 replay, plus any number of
+    extra replays, yields a ``final`` tier state identical to the
+    uninterrupted run — replay idempotence and the LWW ``written_at``
+    guard are exactly what make this hold. ``final`` (the full dynamic
+    tier arrays) and ``journal_len`` are added to the result only when
+    ``drain=True``, so the existing simulator differentials — which
+    have no drain phase — are untouched.
     """
     static_emb = np.asarray(static_emb, np.float32)
     static_cls = np.asarray(static_cls, np.int32)
@@ -240,9 +258,45 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
         elif want:
             enq_dropped += 1
 
-    return {
+    out = {
         "served_by": served_by, "correct": correct,
         "static_origin": static_origin, "judge_calls": judge_calls,
         "judge_approved": judge_approved, "promotions": promotions,
         "enq_dropped": enq_dropped,
     }
+    if not drain:
+        return out
+
+    # ---- 4. end-of-trace drain: judge the backlog, journal-then-apply
+    journal = []                   # (emb, cls, ref, now) in append order
+    for task in sorted(pending, key=lambda p: p.due):
+        judge_calls += 1
+        if task.qcls == task.hcls or task.flip:
+            judge_approved += 1
+            promotions += 1
+            journal.append((task.emb, task.hcls, task.href,
+                            int(task.due)))
+    applied = len(journal) if crash_after is None \
+        else min(crash_after, len(journal))
+    for rec in journal[:applied]:       # upserts that landed pre-crash
+        dyn.upsert(*rec)
+    if crash_after is not None or extra_replays:
+        for _ in range(max(1 if crash_after is not None else 0,
+                           extra_replays)):
+            for rec in journal:         # full-journal replay, in order
+                dyn.upsert(*rec)
+
+    out.update({
+        "judge_calls": judge_calls, "judge_approved": judge_approved,
+        "promotions": promotions,
+        "journal_len": len(journal),
+        "final": {
+            "emb": dyn.emb.copy(), "cls": dyn.cls.copy(),
+            "answer_ref": dyn.answer_ref.copy(),
+            "static_origin": dyn.static_origin.copy(),
+            "valid": dyn.valid.copy(),
+            "last_used": dyn.last_used.copy(),
+            "written_at": dyn.written_at.copy(),
+        },
+    })
+    return out

@@ -1,0 +1,263 @@
+"""Live fault injection: SIGKILL a serving process mid-promotion-burst,
+recover from snapshot + promotion WAL, and require the recovered tier —
+state and subsequent serving decisions — to be field-identical to a run
+that was never interrupted (DESIGN.md §14).
+
+Protocol. A child process builds a deterministic policy (judge workers
+disabled so nothing races the kill point), serves a miss prefix that
+fills the dynamic tier, snapshots, then applies a fixed burst of
+journaled promotions — printing a line after every WAL append
+(``APPENDED <seq>``, from inside the append-before-upsert window) and
+after every completed upsert (``PROMO <i>``). The parent kills the
+child with SIGKILL at a chosen line event, so the crash lands at every
+interesting point of the write path:
+
+- after ``SNAP``      — nothing journaled; recovery = snapshot alone;
+- after ``APPENDED k``— record k durable, its upsert possibly not
+  applied (the window the write-AHEAD ordering exists for);
+- after ``PROMO k``   — k upserts applied; record k+1 may be mid-append
+  (torn tail);
+- after ``DONE``      — no crash at all: replay-only recovery.
+
+Recovery (in the parent, on the child's files): fresh policy ->
+``restore_policy`` -> ``replay_into`` (r durable records) -> re-apply
+the burst tail ``payloads[r:]`` (the client retry of what never became
+durable) -> replay the journal AGAIN (idempotence under double
+recovery). The result must match the uninterrupted reference
+(snapshot + the full burst) on every tier field and on the decisions
+for a probe sweep. Both child and parent build their state from one
+shared code block (``COMMON``), so the comparison is apples-to-apples.
+
+The fast subset runs in tier-1; the full kill-point matrix (every k,
+both events) is ``@pytest.mark.slow`` — enable with ``--run-slow``.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+ENV = {
+    "PYTHONPATH": SRC,
+    "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+    "JAX_PLATFORMS": "cpu",
+    "PYTHONUNBUFFERED": "1",
+}
+
+# Shared between the child process (exec'd as part of its -c script) and
+# the parent (exec'd into a namespace): the deterministic world both
+# sides must agree on. 32 orthonormal pool vectors (pairwise sim 0, so
+# every decision threshold is unambiguous); static tier = P[:8]; the
+# prompt space p0..p23 = P[8:32]; a 14-record promotion burst whose
+# keys overlap the served prefix (dedup/LWW overwrite) and include
+# out-of-order re-promotions of one key (the LWW guard paths).
+COMMON = textwrap.dedent("""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import tiers as T
+    from repro.core.policy import KritesPolicy
+
+    D, S, CAP, N_PREFIX = 32, 8, 16, 12
+
+    def _pool(n, d, seed=0):
+        rng = np.random.default_rng(seed)
+        q, _ = np.linalg.qr(rng.normal(size=(d, n)))
+        return np.ascontiguousarray(q.T, np.float32)
+
+    P = _pool(32, D)
+    PROMPTS = {f"p{i}": P[8 + i] for i in range(24)}
+
+    def mk_policy(wal=None):
+        tier = T.StaticTier(emb=jnp.asarray(P[:S]),
+                            cls=jnp.arange(S, dtype=jnp.int32),
+                            answer_ref=jnp.arange(S, dtype=jnp.int32))
+        cfg = T.CacheConfig(0.95, 0.9, sigma_min=0.3, capacity=CAP)
+        return KritesPolicy(cfg, tier, [f"a{i}" for i in range(S)],
+                            embed_fn=lambda p: PROMPTS[p],
+                            backend_fn=lambda p: "gen(" + p + ")",
+                            judge_fn=lambda **kw: True, d=D,
+                            n_workers=0, wal=wal)
+
+    def payloads():
+        rng = np.random.default_rng(7)
+        keys = rng.integers(8, 24, size=12)
+        hs = rng.integers(0, S, size=12)
+        ts = 100 + rng.permutation(24)[:12]
+        out = [{"v": P[int(k)], "h_idx": int(h), "enq_t": int(t)}
+               for k, h, t in zip(keys, hs, ts)]
+        # LWW churn on one key: a later re-promotion that must win and
+        # an earlier (stale) one that must lose on any replay order
+        out.append({"v": P[int(keys[0])], "h_idx": int(hs[1]),
+                    "enq_t": 200})
+        out.append({"v": P[int(keys[0])], "h_idx": int(hs[2]),
+                    "enq_t": 50})
+        return out
+""")
+
+N_BURST = 14          # len(payloads()) — pinned by a test below
+
+CHILD = COMMON + textwrap.dedent("""
+    import sys
+    from pathlib import Path
+    from repro.core.promo_wal import PromotionWAL
+    from repro.serving import persist
+
+    snap = Path(sys.argv[1])
+
+    class HookedWAL(PromotionWAL):
+        # the print lands between the (fsynced) append and the tier
+        # upsert: the parent killing on this line crashes the process
+        # inside the write-ahead window
+        def append(self, rec):
+            seq = super().append(rec)
+            print(f"APPENDED {seq}", flush=True)
+            return seq
+
+    pol = mk_policy(wal=HookedWAL(snap / "promo.wal", fsync_every=1))
+    for i in range(N_PREFIX):
+        pol.serve(f"p{i}")
+    persist.save_snapshot(snap, pol)
+    print("SNAP", flush=True)
+    for i, p in enumerate(payloads()):
+        pol._promote(p)
+        print(f"PROMO {i + 1}", flush=True)
+    print("DONE", flush=True)
+""")
+
+_NS: dict = {}
+
+
+def _ns():
+    """Parent-side instance of the shared world (lazy: exec once)."""
+    if not _NS:
+        exec(COMMON, _NS)
+    return _NS
+
+
+def _run_child(tmp: Path, event: str, k):
+    """Run the child; SIGKILL it right after it prints the ``k``-th
+    ``event`` line (``DONE``/``SNAP`` take ``k=None``/0). Returns the
+    lines seen before the kill."""
+    proc = subprocess.Popen(
+        [sys.executable, "-c", CHILD, str(tmp)],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        env=ENV)
+    seen, n_event = [], 0
+    deadline = time.monotonic() + 300
+    try:
+        for line in proc.stdout:
+            assert time.monotonic() < deadline, "child wedged"
+            line = line.strip()
+            seen.append(line)
+            if line == "DONE":
+                assert event == "DONE", \
+                    f"child finished before {event} {k}: {seen}"
+                proc.wait(timeout=60)
+                return seen
+            if line.startswith(event):
+                n_event += 1
+                if event == "SNAP" or n_event == k:
+                    os.kill(proc.pid, signal.SIGKILL)
+                    break
+        else:
+            pytest.fail(f"child exited before {event} {k}: {seen}\n"
+                        f"{proc.stderr.read()}")
+        proc.wait(timeout=60)
+        assert "SNAP" in seen, "killed before the snapshot existed"
+        return seen
+    finally:
+        proc.stderr.close()
+        proc.stdout.close()
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=60)
+
+
+def _state(pol) -> tuple:
+    return (np.asarray(pol.dyn.emb).tobytes(),
+            pol._valid_np.tolist(), pol._written_at_np.tolist(),
+            pol._last_used_np.tolist(), pol._static_origin_np.tolist(),
+            np.asarray(pol.dyn.cls).tolist(),
+            np.asarray(pol.dyn.answer_ref).tolist(),
+            list(pol.dyn_answers), pol.t)
+
+
+def _decisions(pol):
+    out = []
+    for i in range(24):
+        r = pol.serve(f"p{i}")
+        out.append((r.served_by, str(r.answer), bool(r.static_origin),
+                    round(float(r.similarity), 5)))
+    return out
+
+
+def _check_recovery(tmp: Path):
+    """Recover from the (possibly crashed) child's files and compare
+    to the uninterrupted reference, state- and decision-wise."""
+    from repro.core.promo_wal import replay_into
+    from repro.serving import persist
+
+    ns = _ns()
+    burst = ns["payloads"]()
+    assert len(burst) == N_BURST
+
+    recovered = ns["mk_policy"]()
+    persist.restore_policy(recovered, tmp)
+    rep = replay_into(recovered, tmp / "promo.wal")
+    r = rep["replayed"]          # durable records; SIGKILL may have
+    assert 0 <= r <= N_BURST     # torn the tail (rep["clean"] False)
+    for p in burst[r:]:          # client retry of the lost tail
+        recovered._promote(p, journal=False)
+    mid = _state(recovered)
+    # double recovery: replaying the same journal again must be a no-op
+    rep2 = replay_into(recovered, tmp / "promo.wal")
+    assert rep2["replayed"] == r
+    assert _state(recovered) == mid, "second replay changed state"
+
+    reference = ns["mk_policy"]()
+    persist.restore_policy(reference, tmp)
+    for p in burst:
+        reference._promote(p, journal=False)
+
+    assert _state(recovered) == _state(reference), \
+        f"recovered state != uninterrupted (r={r} durable records)"
+    assert _decisions(recovered) == _decisions(reference), \
+        f"post-recovery decisions diverge (r={r})"
+    return r
+
+
+# the fast subset: one kill per distinct write-path region
+FAST_POINTS = [("SNAP", 0), ("APPENDED", 9), ("PROMO", 5),
+               ("DONE", None)]
+
+
+@pytest.mark.parametrize("event,k", FAST_POINTS,
+                         ids=[f"{e}-{k}" for e, k in FAST_POINTS])
+def test_sigkill_recovery(tmp_path, event, k):
+    _run_child(tmp_path, event, k)
+    r = _check_recovery(tmp_path)
+    if event == "DONE":
+        assert r == N_BURST      # everything was durable
+    elif event in ("PROMO", "APPENDED"):
+        assert r >= k if event == "APPENDED" else r >= k - 1
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "event,k",
+    [("PROMO", k) for k in range(1, N_BURST + 1)]
+    + [("APPENDED", k) for k in range(1, N_BURST + 1)],
+    ids=lambda v: str(v))
+def test_sigkill_recovery_matrix(tmp_path, event, k):
+    """Every kill point in the burst, on both sides of the
+    append->upsert window (the full fault-injection matrix)."""
+    _run_child(tmp_path, event, k)
+    _check_recovery(tmp_path)

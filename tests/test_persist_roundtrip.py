@@ -1,0 +1,341 @@
+"""Snapshot/restore round-trip conformance (``serving/persist.py``,
+DESIGN.md §14).
+
+A restored policy must be indistinguishable from the one that was
+snapshotted: every dynamic-tier field, host mirror, answer and the
+logical clock restore exactly, and the *serving decisions* after
+restore are identical to the uninterrupted policy's — through each
+static-index config (exact flat, IVF warm-restored from the packed
+snapshot layout, IVF rebuilt when the snapshot is stale) and through
+the segmented dynamic index (restored via ``bulk_load`` from a live
+set that includes sealed segments and tombstones). Corruption and
+version/topology mismatches must be detected, not misread.
+
+Determinism: judge workers are disabled (``n_workers=0``) so no async
+promotion races the comparisons; promotions are applied as explicit
+``_promote`` bursts. Each test gets its own ``tmp_path``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import tiers as T
+from repro.core.policy import KritesPolicy
+from repro.core.promo_wal import PromotionWAL, replay_into
+from repro.data.synth_traces import LMARENA_LIKE, build_benchmark
+from repro.serving import persist
+
+CAP = 48
+N_SERVE = 96
+N_PROBE = 64
+
+
+@pytest.fixture(scope="module")
+def bench():
+    spec = dataclasses.replace(LMARENA_LIKE, n_requests=600,
+                               n_classes=80, n_topics=8)
+    b = build_benchmark(spec)
+    emb = {f"q{i}": np.asarray(b.eval_emb[i])
+           for i in range(len(b.eval_emb))}
+    return b, emb
+
+
+def _mk(bench, emb, index=None, dyn_index=None, wal=None,
+        static_emb=None) -> KritesPolicy:
+    s_emb = bench.static_emb if static_emb is None else static_emb
+    tier = T.make_static_tier(jnp.asarray(s_emb),
+                              jnp.asarray(bench.static_cls))
+    answers = [f"curated-{int(c)}" for c in bench.static_cls]
+    cfg = T.CacheConfig(0.92, 0.88, sigma_min=0.0, capacity=CAP)
+    return KritesPolicy(cfg, tier, answers, lambda p: emb[p],
+                        lambda p: f"gen({p})",
+                        judge_fn=lambda **kw: True,
+                        d=s_emb.shape[1], n_workers=0,
+                        index=index, dyn_index=dyn_index, wal=wal)
+
+
+def _drive(pol, bench, lo, hi):
+    for i in range(lo, hi):
+        pol.serve(f"q{i}", meta={"cls": int(bench.eval_cls[i])})
+
+
+def _burst(pol, bench, m, t0, seed=3):
+    """Deterministic promotion burst: m approved verdicts, including
+    re-promotions of the same key at later timestamps (LWW churn)."""
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, 200, size=m)
+    for k, i in enumerate(idx):
+        pol._promote({"v": np.asarray(bench.eval_emb[int(i)]),
+                      "h_idx": int(np.argmax(
+                          bench.static_emb @ bench.eval_emb[int(i)])),
+                      "enq_t": t0 + k})
+    pol.t = max(pol.t, t0 + m)
+
+
+def _decisions(pol, bench, lo, hi):
+    out = []
+    for i in range(lo, hi):
+        r = pol.serve(f"q{i}", meta={"cls": int(bench.eval_cls[i])})
+        out.append((r.served_by, str(r.answer), bool(r.static_origin),
+                    round(float(r.similarity), 5)))
+    return out
+
+
+def _assert_same_state(a: KritesPolicy, b: KritesPolicy):
+    for f in T.DynamicTier._fields:
+        assert np.array_equal(np.asarray(getattr(a.dyn, f)),
+                              np.asarray(getattr(b.dyn, f))), f
+    assert np.array_equal(a._valid_np, b._valid_np)
+    assert np.array_equal(a._last_used_np, b._last_used_np)
+    assert np.array_equal(a._static_origin_np, b._static_origin_np)
+    assert np.array_equal(a._written_at_np, b._written_at_np)
+    assert a.dyn_answers == b.dyn_answers
+    assert a.t == b.t
+
+
+# ---------------------------------------------------------------------------
+# flat path
+# ---------------------------------------------------------------------------
+
+def test_snapshot_restores_every_field(bench, tmp_path):
+    b, emb = bench
+    live = _mk(b, emb)
+    _drive(live, b, 0, N_SERVE)
+    _burst(live, b, 20, live.t + 1)
+    persist.save_snapshot(tmp_path, live)
+
+    restored = _mk(b, emb)
+    rep = persist.restore_policy(restored, tmp_path)
+    assert rep["dyn_live"] == int(live._valid_np.sum()) > 0
+    _assert_same_state(live, restored)
+
+
+def test_restored_decisions_identical_flat(bench, tmp_path):
+    """The serving contract: after restore, every subsequent decision
+    (tier, answer, provenance, similarity) matches the policy that
+    never went down."""
+    b, emb = bench
+    live = _mk(b, emb)
+    _drive(live, b, 0, N_SERVE)
+    _burst(live, b, 16, live.t + 1)
+    persist.save_snapshot(tmp_path, live)
+
+    restored = _mk(b, emb)
+    persist.restore_policy(restored, tmp_path)
+    want = _decisions(live, b, N_SERVE, N_SERVE + N_PROBE)
+    got = _decisions(restored, b, N_SERVE, N_SERVE + N_PROBE)
+    assert got == want
+    _assert_same_state(live, restored)   # probes mutate identically too
+
+
+def test_snapshot_plus_wal_tail_recovers_live_state(bench, tmp_path):
+    """The full recovery recipe in-process: snapshot mid-stream, keep
+    journaling promotions, then restore + replay(skip=wal_seq). The
+    seq cursor prevents pre-snapshot records from clobbering the LRU
+    clocks the snapshot captured."""
+    b, emb = bench
+    wal = PromotionWAL(tmp_path / "promo.wal", fsync_every=1)
+    live = _mk(b, emb, wal=wal)
+    _drive(live, b, 0, 40)
+    _burst(live, b, 12, live.t + 1)           # journaled pre-snapshot
+    _drive(live, b, 40, 64)                   # LRU touches after burst
+    persist.save_snapshot(tmp_path, live)
+    _burst(live, b, 9, live.t + 1, seed=11)   # journaled post-snapshot
+    wal.close()
+
+    snap = persist.load_snapshot(tmp_path)
+    assert snap.extra["wal_seq"] == 12
+    recovered = _mk(b, emb)
+    persist.restore_policy(recovered, snap)
+    rep = replay_into(recovered, tmp_path / "promo.wal",
+                      skip=snap.extra["wal_seq"])
+    assert rep == {"records": 21, "skipped": 12, "replayed": 9,
+                   "clean": True}
+    recovered.t = live.t
+    _assert_same_state(live, recovered)
+    assert _decisions(recovered, b, 64, 64 + 32) \
+        == _decisions(live, b, 64, 64 + 32)
+
+
+# ---------------------------------------------------------------------------
+# IVF static index: warm restore + stale rebuild
+# ---------------------------------------------------------------------------
+
+def _with_ivf(pol):
+    """Build the serving IVF from the policy's own (normalized) tier
+    matrix — the corpus identity the snapshot's ``corpus_hash`` ties
+    warm restore to."""
+    from repro.index.ivf import IVFIndex, build_ivf
+    pol.index = IVFIndex(build_ivf(pol.static.emb, n_clusters=8,
+                                   iters=4, corpus_normalized=True),
+                         nprobe=64, n_candidates=64)
+    return pol
+
+
+def test_ivf_warm_restore_decision_identical(bench, tmp_path):
+    b, emb = bench
+    live = _with_ivf(_mk(b, emb))
+    _drive(live, b, 0, N_SERVE)
+    _burst(live, b, 16, live.t + 1)
+    persist.save_snapshot(tmp_path, live)
+
+    restored = _mk(b, emb)                    # no index: cold process
+    rep = persist.restore_policy(restored, tmp_path)
+    assert rep["index"] == "warm"
+    # the warm index is the snapshotted packed layout re-wired to the
+    # live corpus — serving through it must match the live policy
+    assert _decisions(restored, b, N_SERVE, N_SERVE + N_PROBE) \
+        == _decisions(live, b, N_SERVE, N_SERVE + N_PROBE)
+
+
+def test_ivf_stale_snapshot_rebuilds(bench, tmp_path):
+    """Same dynamic state, but the static corpus changed after the
+    snapshot: the saved index must NOT be installed (its row geometry
+    is wrong); an inline rebuild over the new corpus must serve
+    decisions identical to a never-persisted policy on that corpus."""
+    b, emb = bench
+    live = _with_ivf(_mk(b, emb))
+    _drive(live, b, 0, N_SERVE)
+    persist.save_snapshot(tmp_path, live)
+
+    new_emb = np.asarray(b.static_emb).copy()
+    new_emb[:8] = -new_emb[:8]                # corpus drifted
+    stale = _mk(b, emb, static_emb=new_emb)
+    rep = persist.restore_policy(stale, tmp_path, rebuild="inline")
+    assert rep["index"] == "rebuild-inline"
+
+    fresh = _with_ivf(_mk(b, emb, static_emb=new_emb))
+    persist.restore_policy(fresh, tmp_path, rebuild="never")
+    assert _decisions(stale, b, N_SERVE, N_SERVE + N_PROBE) \
+        == _decisions(fresh, b, N_SERVE, N_SERVE + N_PROBE)
+
+
+def test_ivf_background_rebuild_swaps_atomically(bench, tmp_path):
+    b, emb = bench
+    live = _with_ivf(_mk(b, emb))
+    _drive(live, b, 0, 32)
+    persist.save_snapshot(tmp_path, live)
+
+    new_emb = np.asarray(b.static_emb).copy()
+    new_emb[:8] = -new_emb[:8]
+    pol = _mk(b, emb, static_emb=new_emb)
+    rep = persist.restore_policy(pol, tmp_path, rebuild="background")
+    assert rep["index"] == "rebuild-background"
+    rep["rebuild_thread"].join(120)
+    assert not rep["rebuild_thread"].is_alive()
+    assert pol.index is not None
+    assert pol.index.describe().startswith("ivf(")
+
+
+# ---------------------------------------------------------------------------
+# segmented dynamic index: bulk_load restore with seals + tombstones
+# ---------------------------------------------------------------------------
+
+def _seg_index():
+    from repro.index.segmented import SegmentedIndex
+    # tiny tail + aggressive compaction: the drive below seals several
+    # segments and tombstones slots via LRU overwrite + re-promotion;
+    # full probe + candidate budgets covering the live set = the
+    # test-enforced flat-equivalence config (DESIGN.md §12)
+    return SegmentedIndex(CAP, 64, tail_rows=8, compact_every=2,
+                          nprobe=None, n_candidates=CAP,
+                          tail_candidates=CAP)
+
+
+def test_segmented_restore_decision_identical(bench, tmp_path):
+    b, emb = bench
+    live = _mk(b, emb, dyn_index=_seg_index())
+    _drive(live, b, 0, N_SERVE)               # > CAP writes: overwrites
+    _burst(live, b, 24, live.t + 1)           # + promotion churn
+    st = live.dyn_index.stats()
+    assert st["seals"] > 0 and st["tombstones"] > 0, \
+        f"drive did not exercise seals/tombstones: {st}"
+    persist.save_snapshot(tmp_path, live)
+
+    restored = _mk(b, emb, dyn_index=_seg_index())
+    persist.restore_policy(restored, tmp_path)
+    # bulk_load seeds exactly the live set (tombstoned slots excluded)
+    assert restored.dyn_index.stats()["live"] == \
+        int(live._valid_np.sum())
+
+    flat = _mk(b, emb)
+    persist.restore_policy(flat, tmp_path)
+    want = _decisions(live, b, N_SERVE, N_SERVE + N_PROBE)
+    assert _decisions(restored, b, N_SERVE, N_SERVE + N_PROBE) == want
+    # exact-rerank contract: the restored segmented path serves the
+    # same decisions as the flat masked scan over the same tier
+    assert _decisions(flat, b, N_SERVE, N_SERVE + N_PROBE) == want
+
+
+def test_restore_rejects_used_dyn_index(bench, tmp_path):
+    b, emb = bench
+    live = _mk(b, emb)
+    _drive(live, b, 0, 16)
+    persist.save_snapshot(tmp_path, live)
+    dirty = _mk(b, emb, dyn_index=_seg_index())
+    _drive(dirty, b, 16, 24)                  # index now has state
+    with pytest.raises(ValueError, match="fresh dyn_index"):
+        persist.restore_policy(dirty, tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# integrity + versioning
+# ---------------------------------------------------------------------------
+
+def test_corrupt_leaf_detected(bench, tmp_path):
+    b, emb = bench
+    live = _mk(b, emb)
+    _drive(live, b, 0, 16)
+    path = persist.save_snapshot(tmp_path, live)
+    victim = sorted(path.glob("*.npy"))[0]
+    raw = bytearray(victim.read_bytes())
+    raw[-1] ^= 0xFF
+    victim.write_bytes(bytes(raw))
+    with pytest.raises(IOError, match="corruption"):
+        persist.load_snapshot(tmp_path)
+
+
+def test_unknown_manifest_format_rejected(bench, tmp_path):
+    b, emb = bench
+    live = _mk(b, emb)
+    path = persist.save_snapshot(tmp_path, live)
+    mf = json.loads((path / "manifest.json").read_text())
+    mf["extra"]["format"] = 99
+    (path / "manifest.json").write_text(json.dumps(mf))
+    with pytest.raises(ValueError, match="format"):
+        persist.load_snapshot(tmp_path)
+
+
+def test_capacity_mismatch_rejected(bench, tmp_path):
+    b, emb = bench
+    live = _mk(b, emb)
+    persist.save_snapshot(tmp_path, live)
+    other = KritesPolicy(
+        T.CacheConfig(0.92, 0.88, sigma_min=0.0, capacity=CAP * 2),
+        live.static, live.static_answers, lambda p: emb[p],
+        lambda p: "g", judge_fn=lambda **kw: True, d=64, n_workers=0)
+    with pytest.raises(ValueError, match="capacity"):
+        persist.restore_policy(other, tmp_path)
+
+
+def test_latest_snapshot_ignores_torn_tmp(bench, tmp_path):
+    b, emb = bench
+    live = _mk(b, emb)
+    persist.save_snapshot(tmp_path, live, step=3)
+    persist.save_snapshot(tmp_path, live, step=7)
+    # a crash mid-save leaves only an unpublished tmp dir
+    (tmp_path / ".tmp_step_00000009").mkdir()
+    assert persist.latest_snapshot(tmp_path) == 7
+    assert persist.load_snapshot(tmp_path).step == 7
+
+
+def test_missing_snapshot_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        persist.load_snapshot(tmp_path / "nowhere")
+    assert persist.latest_snapshot(tmp_path / "nowhere") is None

@@ -119,6 +119,63 @@ def test_simulate_matches_segmented_reference(trace):
     _assert_matches(res, ref, "simulate-vs-segmented-ref")
 
 
+def _final_equal(a, b, label):
+    for name, want in b["final"].items():
+        got = a["final"][name]
+        assert np.array_equal(got, want), (
+            f"{label}: recovered tier field {name} diverges "
+            f"({np.sum(got != want)} rows)")
+
+
+@pytest.mark.parametrize("idx", range(3))
+def test_crash_replay_recovers_reference_state(trace, idx):
+    """Recovery oracle (DESIGN.md §14): crash the end-of-trace promotion
+    burst at every point — after 0, 1, ..., all journaled upserts — and
+    replay the full journal; the recovered tier must be field-identical
+    to the uninterrupted run at every crash point. This is the numpy
+    statement of the theorem the live fault-injection tests
+    (test_crash_recovery.py) check on the real WAL + policy."""
+    s_emb, s_cls, q_emb, q_cls = trace
+    cfg, krites = CONFIGS[idx]
+    base = ref_simulate(s_emb, s_cls, q_emb, q_cls, cfg, krites,
+                        drain=True)
+    assert base["journal_len"] > 0, "trace produced no drained backlog"
+    for k in range(base["journal_len"] + 1):
+        crashed = ref_simulate(s_emb, s_cls, q_emb, q_cls, cfg, krites,
+                               drain=True, crash_after=k)
+        _final_equal(crashed, base, f"cfg{idx} crash_after={k}")
+
+
+def test_replay_is_idempotent_reference(trace):
+    """N replays of the full journal == 1 application (no crash): the
+    oracle-level statement of WAL replay idempotence."""
+    s_emb, s_cls, q_emb, q_cls = trace
+    cfg, krites = CONFIGS[0]
+    base = ref_simulate(s_emb, s_cls, q_emb, q_cls, cfg, krites,
+                        drain=True)
+    for n in (1, 3):
+        again = ref_simulate(s_emb, s_cls, q_emb, q_cls, cfg, krites,
+                             drain=True, extra_replays=n)
+        _final_equal(again, base, f"extra_replays={n}")
+
+
+def test_drain_does_not_change_trace_decisions(trace):
+    """The drain phase runs after the last request: per-request fields
+    must be untouched relative to the non-drain run (guards the
+    existing simulator differentials against the new path)."""
+    s_emb, s_cls, q_emb, q_cls = trace
+    cfg, krites = CONFIGS[0]
+    plain = ref_simulate(s_emb, s_cls, q_emb, q_cls, cfg, krites)
+    drained = ref_simulate(s_emb, s_cls, q_emb, q_cls, cfg, krites,
+                           drain=True)
+    for name, want in plain.items():
+        if name in ("judge_calls", "judge_approved", "promotions"):
+            continue   # drain legitimately grows the judge counters
+        assert np.array_equal(np.asarray(drained[name]),
+                              np.asarray(want)), name
+    assert drained["judge_calls"] >= plain["judge_calls"]
+
+
 def test_noisy_judge_flips_match_reference(trace):
     """judge_flip (noisy-verifier false approvals) follows the same
     delayed-payload path — must match the reference end to end."""

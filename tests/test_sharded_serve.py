@@ -231,3 +231,64 @@ def test_sharded_promotion_lands_on_owning_shard():
     pol.pool.stop()
     print("ok")
     """))
+
+
+def test_sharded_snapshot_restore_matches_live():
+    """Persistence on the mesh path (DESIGN.md §14): snapshot a mesh
+    policy mid-run, restore into a fresh mesh policy — the device tier
+    is re-sharded onto the mesh field-identically (mirrors included),
+    and the restored process serves the rest of the trace decision-
+    for-decision like the one that never went down."""
+    print(_run(_SERVE_SETUP + """
+    import tempfile
+    from pathlib import Path
+    from repro.serving import persist
+
+    def serve_span(pol, j, lo, hi):
+        out = []
+        for i in range(lo, hi, 32):
+            out += [pol.serve(p, me) for p, me in
+                    zip(prompts[i:i+32], metas[i:i+32])]
+            j.gate.set(); pol.pool.drain(); j.gate.clear()
+        return out
+
+    j1 = Gated()
+    p1 = KritesPolicy(cfg, tier, answers, lambda p: emb[p],
+                      lambda p: f"gen({p})", j1, d=d, n_workers=1,
+                      static_texts=texts, mesh=mesh, **kw)
+    serve_span(p1, j1, 0, 128)
+    assert p1.stats()["approved"] > 0, "prefix produced no promotions"
+    snap_dir = Path(tempfile.mkdtemp(prefix="snap-mesh-"))
+    persist.save_snapshot(snap_dir, p1)
+
+    j2 = Gated()
+    p2 = KritesPolicy(cfg, tier, answers, lambda p: emb[p],
+                      lambda p: f"gen({p})", j2, d=d, n_workers=1,
+                      static_texts=texts, mesh=mesh, **kw)
+    rep = persist.restore_policy(p2, snap_dir)
+    assert rep["index"] == "none" and rep["dyn_live"] > 0
+
+    for f in ("emb", "cls", "answer_ref", "static_origin", "valid",
+              "last_used", "written_at"):
+        assert np.array_equal(np.asarray(getattr(p2.dyn, f)),
+                              np.asarray(getattr(p1.dyn, f))), f
+    assert np.array_equal(p2._valid_np, p1._valid_np)
+    assert np.array_equal(p2._last_used_np, p1._last_used_np)
+    assert np.array_equal(p2._static_origin_np, p1._static_origin_np)
+    assert np.array_equal(p2._written_at_np, p1._written_at_np)
+    assert p2.dyn_answers == p1.dyn_answers and p2.t == p1.t
+    sh = p2.shard_stats()
+    assert sh["shards"] == 4
+    assert sum(sh["shard_occupancy"]) == int(p2._valid_np.sum())
+
+    o1 = serve_span(p1, j1, 128, n)
+    o2 = serve_span(p2, j2, 128, n)
+    for a, b in zip(o1, o2):
+        assert (a.served_by, a.answer, a.static_origin) \\
+            == (b.served_by, b.answer, b.static_origin)
+    for pol, j in ((p1, j1), (p2, j2)):
+        j.gate.set(); pol.pool.drain(); pol.pool.stop()
+    assert np.array_equal(p2._valid_np, p1._valid_np)
+    assert np.array_equal(p2._written_at_np, p1._written_at_np)
+    print("ok")
+    """))
