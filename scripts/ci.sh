@@ -36,6 +36,13 @@ echo "== sharded serving smoke (forced host-device mesh, agreement 1.0) =="
 # benchmark-level serving differential with its agreement-1.0 gate
 python -m benchmarks.sharded_serve --smoke
 
+echo "== fused serve smoke (single-pass pipeline, agreement-1.0 gate) =="
+# the policy-level differential (tests/test_fused_serve_policy.py) runs
+# in the tier-1 suite above; this smoke gates the fused lookup pair
+# against the dispatched lookups — hard agreement == 1.0 at a
+# full-coverage probe budget (DESIGN.md §15)
+python -m benchmarks.fused_serve --smoke
+
 echo "== live service smoke (load -> snapshot -> kill -> warm restart) =="
 # the fault-injection matrix (tests/test_crash_recovery.py) runs in the
 # tier-1 suite above; this smoke drives the real --serve-stdio process

@@ -1,9 +1,13 @@
-"""Render the roofline table (markdown) from results/dryrun/*.json."""
+"""Render the roofline table (markdown) from results/dryrun/*.json,
+plus the serve-path bandwidth table from results/benchmarks.json
+(``fused_serve`` rows — run ``python -m benchmarks.run --only
+fused_serve`` first)."""
 import json
 import sys
 from pathlib import Path
 
 RES = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+BENCH = Path(__file__).resolve().parent.parent / "results" / "benchmarks.json"
 
 
 def fmt_bytes(b):
@@ -41,6 +45,63 @@ def table(mesh="pod16x16", out=sys.stdout):
               f"| {fmt_bytes(r.get('bytes_per_device'))} |", file=out)
 
 
+def _fused_bytes(r):
+    """Modeled HBM traffic per fused call: per row, nprobe int8 bands
+    (codes + fp32 scales + i32 ids) plus the bf16 dynamic tiles + slot
+    ids, plus queries in and the four candidate lists out."""
+    b, d = r["B"], r["d"]
+    bands = b * r["nprobe"] * r["cap"] * (d + 4 + 4)
+    dyn = b * r["dyn_capacity"] * (2 * d + 4)
+    io = b * d * 4 + b * 2 * (r["C"] + r["Cd"]) * 4
+    return bands + dyn + io
+
+
+def _flat_bytes(r, n_rows):
+    """Dispatched-flat traffic: both fp32 corpora streamed once per
+    batch (matmul), plus queries and top-1 outputs."""
+    d = r["d"]
+    return (n_rows + r["dyn_capacity"]) * d * 4 + r["B"] * (d + 4) * 4
+
+
+def serve_path_table(out=sys.stdout):
+    """Serve-path effective bandwidth (DESIGN.md §15): measured lookup
+    time vs modeled bytes moved, fused pipeline against the dispatched
+    flat path. Graceful no-op when benchmarks.json is missing or has no
+    ``fused_serve`` rows."""
+    if not BENCH.exists():
+        print("(no results/benchmarks.json — run "
+              "`python -m benchmarks.run --only fused_serve` first)",
+              file=out)
+        return
+    rows = {r["name"]: r for r in json.loads(BENCH.read_text())
+            if r.get("name", "").startswith("fused_serve/")
+            and r.get("us_per_call", 0) > 0}
+    fused = sorted(
+        (r for n, r in rows.items()
+         if n.endswith("_fused") and "cap" in r),
+        key=lambda r: int(r["name"].split("/N")[1].split("_")[0]))
+    if not fused:
+        print("(no fused_serve rows in results/benchmarks.json)", file=out)
+        return
+    print("| N | path | us/call | us/req | modeled MiB | eff GB/s "
+          "| agreement |", file=out)
+    print("|" + "---|" * 7, file=out)
+    for r in fused:
+        n_rows = int(r["name"].split("/N")[1].split("_")[0])
+        flat = rows.get(f"fused_serve/N{n_rows}_dispatched_flat")
+        for name, rr, nbytes in (
+                ("dispatched_flat", flat,
+                 flat and _flat_bytes(r, n_rows)),
+                ("fused", r, _fused_bytes(r))):
+            if rr is None:
+                continue
+            t = rr["us_per_call"] / 1e6
+            agree = r.get("agreement", "-") if name == "fused" else "1.0"
+            print(f"| {n_rows} | {name} | {rr['us_per_call']:.0f} "
+                  f"| {rr['us_per_req']:.1f} | {nbytes/2**20:.2f} "
+                  f"| {nbytes/t/1e9:.2f} | {agree} |", file=out)
+
+
 def summary():
     rows = [r for r in load() if r.get("ok")]
     n_by_mesh = {}
@@ -59,3 +120,5 @@ if __name__ == "__main__":
     for mesh in ("pod16x16", "pod2x16x16"):
         print(f"\n### mesh {mesh}\n")
         table(mesh)
+    print("\n### serve path (fused vs dispatched, DESIGN.md §15)\n")
+    serve_path_table()

@@ -11,6 +11,8 @@ never waits on this pool. Queue depth only delays promotions (§3.1).
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 import queue
 import threading
 import time
@@ -63,6 +65,12 @@ class VerifyAndPromotePool:
         self.q: "queue.Queue[VerifyTask]" = queue.Queue(max_depth)
         self.stats = PoolStats()
         self._inflight: dict = {}
+        # retry backoff is deadline-based, not sleep-based: a retrying
+        # task parks here as (ready_at, seq, task) and is re-enqueued by
+        # whichever worker/reaper loop next observes ready_at passed —
+        # no worker slot blocks for the backoff duration
+        self._delayed: list = []
+        self._seq = itertools.count()
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._rate = rate_per_s
@@ -153,8 +161,24 @@ class VerifyAndPromotePool:
         return False
 
     # -- worker side -------------------------------------------------------
+    def _flush_delayed(self) -> None:
+        """Re-enqueue every parked retry whose backoff deadline passed.
+        Called from the worker loops (<=0.1 s latency via the queue-get
+        timeout) and the reaper sweep."""
+        while True:
+            with self._lock:
+                if not self._delayed \
+                        or self._delayed[0][0] > time.monotonic():
+                    return
+                _, _, task = heapq.heappop(self._delayed)
+            try:
+                self.q.put_nowait(task)
+            except queue.Full:
+                self._abandon_copy(task.key)
+
     def _run(self):
         while not self._stop.is_set():
+            self._flush_delayed()
             try:
                 task = self.q.get(timeout=0.1)
             except queue.Empty:
@@ -184,13 +208,22 @@ class VerifyAndPromotePool:
             except Exception:  # noqa: BLE001 — transient failure: retry
                 task.attempts += 1
                 if task.attempts < self._max_attempts:
+                    # deadline-based requeue: park the task until its
+                    # backoff expires (no worker sleeps) and push the
+                    # inflight dispatch clock to that deadline, so the
+                    # straggler reaper — which fires on `now - e[0] >
+                    # deadline` — cannot re-dispatch a task that is
+                    # merely backing off (duplicate judge calls,
+                    # inflated copy counts)
+                    ready_at = time.monotonic() \
+                        + self._backoff * (2 ** task.attempts)
                     with self._lock:
                         self.stats.retried += 1
-                    time.sleep(self._backoff * (2 ** task.attempts))
-                    try:
-                        self.q.put_nowait(task)
-                    except queue.Full:
-                        self._abandon_copy(task.key)
+                        entry = self._inflight.get(task.key)
+                        if entry is not None:
+                            entry[0] = ready_at
+                        heapq.heappush(self._delayed,
+                                       (ready_at, next(self._seq), task))
                 else:
                     self._abandon_copy(task.key)
 
@@ -215,6 +248,7 @@ class VerifyAndPromotePool:
         (idempotent) promote."""
         while not self._stop.is_set():
             self._stop.wait(self._deadline / 2)
+            self._flush_delayed()
             now = time.monotonic()
             with self._lock:
                 stuck = [(k, e) for k, e in self._inflight.items()
@@ -239,7 +273,8 @@ class VerifyAndPromotePool:
         in the queue and keys dispatched but not yet completed."""
         with self._lock:
             return {"queued": self.q.qsize(),
-                    "inflight": len(self._inflight)}
+                    "inflight": len(self._inflight),
+                    "backing_off": len(self._delayed)}
 
     def drain(self, timeout_s: float = 30.0):
         """Block until the queue is empty (tests / shutdown only)."""

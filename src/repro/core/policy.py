@@ -97,6 +97,18 @@ def _pad_to(arr: np.ndarray, n: int) -> np.ndarray:
     return np.concatenate([arr, np.repeat(arr[:1], n - len(arr), axis=0)])
 
 
+def _usable_rows(V_np: np.ndarray) -> np.ndarray:
+    """Which rows of an already-normalized (B, d) block are servable
+    cache keys. ``l2_normalize`` maps a zero embedding to zero (its
+    cosine against everything is 0, so argmax picks an arbitrary row)
+    and passes NaN/inf through — and a non-finite key *inserted* into
+    the tier poisons every later argmax over it. A good normalized row
+    has unit norm, so ``> 0.5`` cleanly separates degenerate rows
+    without chasing float error."""
+    return np.isfinite(V_np).all(axis=-1) \
+        & (np.linalg.norm(V_np, axis=-1) > 0.5)
+
+
 @dataclass
 class ServeResult:
     answer: object
@@ -117,12 +129,24 @@ class BaselinePolicy:
                  embed_batch_fn: Optional[Callable] = None,
                  backend_batch_fn: Optional[Callable] = None,
                  index=None, dyn_index=None, static_texts=None,
-                 mesh=None, shard_axis: str = "model"):
+                 mesh=None, shard_axis: str = "model", fused=None):
         self.cfg = cfg
         self.static = static_tier
         # injectable static-tier index (FlatIndex/IVFIndex/
         # ShardedIVFIndex, DESIGN.md §11/§13); None = exact flat lookup
         self.index = index
+        # injectable fused serve path (kernels/fused_serve, DESIGN.md
+        # §15): ONE dispatch for the static IVF probe + the masked
+        # dynamic top-1. Flag-gated and exclusive — it replaces both
+        # lookups, so composing it with another index/mesh config would
+        # silently shadow that config's lookup semantics.
+        if fused is not None and (index is not None
+                                  or dyn_index is not None
+                                  or mesh is not None):
+            raise ValueError(
+                "fused= replaces both tier lookups; it cannot be "
+                "combined with index=, dyn_index= or mesh=")
+        self.fused = fused
         # injectable dynamic-tier index (SegmentedIndex, DESIGN.md §12);
         # None = exact flat masked scan. "segmented" builds the default.
         if dyn_index == "segmented":
@@ -244,36 +268,72 @@ class BaselinePolicy:
         t0 = time.monotonic()
         self.t += 1
         v = l2_normalize(jnp.asarray(self.embed_fn(prompt), jnp.float32))
-        if self.index is not None:
-            sv, si = self.index.topk(v[None], 1)
-            s_s, h_idx = sv[0, 0], si[0, 0]
-        elif self.mesh is not None:
-            sv, si = self._sh_static_fn(self._static_mesh_tier, v[None])
-            s_s, h_idx = sv[0], si[0]
-        else:
-            s_s, h_idx = T.static_lookup(self.static, v)
-        s_s, h_idx = float(s_s), int(h_idx)
-        if s_s >= self.cfg.tau_static:
-            res = ServeResult(self._serve_static(h_idx), "static", True,
-                              s_s, time.monotonic() - t0)
+        if not _usable_rows(np.asarray(v)[None])[0]:
+            # degenerate embedding (zero / non-finite): serve via the
+            # backend without caching — inserting it would poison the
+            # tier's argmax for every later request — and without a
+            # grey trigger (a promotion would insert the same key)
+            answer = self.backend_fn(prompt)
+            res = ServeResult(answer, "backend", False, 0.0,
+                              time.monotonic() - t0)
             self.events.append((res.served_by, res.static_origin))
             return res
-
-        with self.dyn_lock:
-            sd, jd = self._dyn_topk(self.dyn, v[None])
-            s_d, j = float(sd[0]), int(jd[0])
-            if s_d >= self.cfg.tau_dynamic:
-                if self.mesh is None:
-                    self.dyn = T.touch(self.dyn, j, self.t)
-                else:   # owner-local scatter, same shapes as the batch
-                    self.dyn = self._touch_many(
-                        self.dyn, np.asarray([j]), np.asarray([self.t]))
-                self._last_used_np[j] = self.t
-                res = ServeResult(self.dyn_answers[j], "dynamic",
-                                  bool(self._static_origin_np[j]), s_d,
-                                  time.monotonic() - t0)
-            else:
+        if self.fused is not None:
+            # fused fast path (DESIGN.md §15): BOTH tier lookups in one
+            # dispatch, under the lock so the touch below lands on the
+            # very tier snapshot the lookup scanned
+            with self.dyn_lock:
+                ssb, hib, sdb, jdb = jax.device_get(
+                    T.serve_lookup_batch(self.static, self.dyn, v[None],
+                                         self.fused))
+                s_s, h_idx = float(ssb[0]), int(hib[0])
+                s_d, j = float(sdb[0]), int(jdb[0])
                 res = None
+                if s_s < self.cfg.tau_static \
+                        and s_d >= self.cfg.tau_dynamic:
+                    self.dyn = T.touch(self.dyn, j, self.t)
+                    self._last_used_np[j] = self.t
+                    res = ServeResult(self.dyn_answers[j], "dynamic",
+                                      bool(self._static_origin_np[j]),
+                                      s_d, time.monotonic() - t0)
+            if s_s >= self.cfg.tau_static:
+                res = ServeResult(self._serve_static(h_idx), "static",
+                                  True, s_s, time.monotonic() - t0)
+                self.events.append((res.served_by, res.static_origin))
+                return res
+        else:
+            if self.index is not None:
+                sv, si = self.index.topk(v[None], 1)
+                s_s, h_idx = sv[0, 0], si[0, 0]
+            elif self.mesh is not None:
+                sv, si = self._sh_static_fn(self._static_mesh_tier,
+                                            v[None])
+                s_s, h_idx = sv[0], si[0]
+            else:
+                s_s, h_idx = T.static_lookup(self.static, v)
+            s_s, h_idx = float(s_s), int(h_idx)
+            if s_s >= self.cfg.tau_static:
+                res = ServeResult(self._serve_static(h_idx), "static",
+                                  True, s_s, time.monotonic() - t0)
+                self.events.append((res.served_by, res.static_origin))
+                return res
+
+            with self.dyn_lock:
+                sd, jd = self._dyn_topk(self.dyn, v[None])
+                s_d, j = float(sd[0]), int(jd[0])
+                if s_d >= self.cfg.tau_dynamic:
+                    if self.mesh is None:
+                        self.dyn = T.touch(self.dyn, j, self.t)
+                    else:   # owner-local scatter, batch-shaped
+                        self.dyn = self._touch_many(
+                            self.dyn, np.asarray([j]),
+                            np.asarray([self.t]))
+                    self._last_used_np[j] = self.t
+                    res = ServeResult(self.dyn_answers[j], "dynamic",
+                                      bool(self._static_origin_np[j]),
+                                      s_d, time.monotonic() - t0)
+                else:
+                    res = None
 
         if res is None:
             answer = self.backend_fn(prompt)   # outside the lock
@@ -296,11 +356,17 @@ class BaselinePolicy:
         self._after_static_miss(prompt, v, h_idx, s_s, res, meta)
         return res
 
-    def _mirror_write(self, slot: int, now: int, static_origin: bool):
+    def _mirror_write(self, slot: int, now: int, static_origin: bool,
+                      written_at: Optional[int] = None):
+        """Host twin of a tier row write. ``now`` is the LRU clock;
+        ``written_at`` (the LWW clock) defaults to it, but async
+        promotions pass their enqueue time — same split as
+        ``tiers._write``."""
         self._valid_np[slot] = True
         self._last_used_np[slot] = now
         self._static_origin_np[slot] = static_origin
-        self._written_at_np[slot] = now
+        self._written_at_np[slot] = now if written_at is None \
+            else written_at
 
     # ------------------------------------------------------------------
     # batched serving path
@@ -362,10 +428,19 @@ class BaselinePolicy:
         V = self._embed_batch(prompts)                        # (B, d)
         if Bp != B:
             V = jnp.pad(V, ((0, Bp - B), (0, 0)))
+        # degenerate-embedding guard (same contract as the scalar path):
+        # zero out unusable rows so one NaN can't leak through the fused
+        # lookups, and serve them backend-only further down — never
+        # cached, never grey-triggered
+        ok = _usable_rows(np.asarray(V)[:B])
+        if not ok.all():
+            V = jnp.where(jnp.asarray(np.pad(ok, (0, Bp - B)))[:, None],
+                          V, 0.0)
         V_np = np.asarray(V)[:B]
-        s_sb, h_idxb = jax.device_get(
-            self._static_topk_batch(V))                       # fused top-1
-        s_sb, h_idxb = s_sb[:B], h_idxb[:B]
+        if self.fused is None:
+            s_sb, h_idxb = jax.device_get(
+                self._static_topk_batch(V))                   # fused top-1
+            s_sb, h_idxb = s_sb[:B], h_idxb[:B]
 
         results: List[Optional[ServeResult]] = [None] * B
         grey_rows = []          # static-miss rows, for the Krites hook
@@ -375,7 +450,15 @@ class BaselinePolicy:
             # tier object is immutable, so `snap` stays the batch-start
             # state while mutations accumulate on the host
             snap = self.dyn
-            s_db, j_db = jax.device_get(self._dyn_topk(snap, V))
+            if self.fused is not None:
+                # fused fast path (DESIGN.md §15): static probe + masked
+                # dynamic top-1 in ONE dispatch over the whole batch
+                s_sb, h_idxb, s_db, j_db = jax.device_get(
+                    T.serve_lookup_batch(self.static, snap, V,
+                                         self.fused))
+                s_sb, h_idxb = s_sb[:B], h_idxb[:B]
+            else:
+                s_db, j_db = jax.device_get(self._dyn_topk(snap, V))
             s_db, j_db = s_db[:B], j_db[:B]
 
             written: dict = {}   # slot -> backend row that wrote it last
@@ -389,6 +472,15 @@ class BaselinePolicy:
             for i in range(B):
                 self.t += 1
                 ti = self.t
+                if not ok[i]:
+                    # backend-only: slot sentinel -1 skips the cache
+                    # write when the batched answers come back
+                    backend_rows.append(i)
+                    backend_slots.append(-1)
+                    results[i] = ServeResult(None, "backend", False,
+                                             0.0, 0.0)
+                    self.events.append(("backend", False))
+                    continue
                 ss_i, h_i = float(s_sb[i]), int(h_idxb[i])
                 if ss_i >= self.cfg.tau_static:
                     results[i] = ServeResult(self._serve_static(h_i),
@@ -464,7 +556,8 @@ class BaselinePolicy:
             if backend_rows:
                 for slot, i, ans in zip(backend_slots, backend_rows,
                                         answers):
-                    self.dyn_answers[slot] = ans
+                    if slot >= 0:   # -1 = degenerate row, never cached
+                        self.dyn_answers[slot] = ans
                     results[i].answer = ans
                 for i, producer in deferred:
                     results[i].answer = results[producer].answer
@@ -505,6 +598,8 @@ class BaselinePolicy:
     def describe_index(self) -> str:
         """Telemetry string for the static-tier index in use (router
         stats surface this — serving/router.py)."""
+        if self.fused is not None:
+            return self.fused.describe()
         if self.index is None:
             S = len(self._static_ref_np)
             if self.mesh is not None:
@@ -567,12 +662,13 @@ class KritesPolicy(BaselinePolicy):
                  embed_batch_fn: Optional[Callable] = None,
                  backend_batch_fn: Optional[Callable] = None,
                  index=None, dyn_index=None, static_texts=None,
-                 mesh=None, shard_axis: str = "model", wal=None):
+                 mesh=None, shard_axis: str = "model", wal=None,
+                 fused=None):
         super().__init__(cfg, static_tier, static_answers, embed_fn,
                          backend_fn, d, embed_batch_fn=embed_batch_fn,
                          backend_batch_fn=backend_batch_fn, index=index,
                          dyn_index=dyn_index, static_texts=static_texts,
-                         mesh=mesh, shard_axis=shard_axis)
+                         mesh=mesh, shard_axis=shard_axis, fused=fused)
         # write-ahead promotion journal (core/promo_wal.py, DESIGN.md
         # §14): each approved verdict is appended — inside dyn_lock, so
         # journal order equals apply order — before its upsert, and
@@ -653,12 +749,20 @@ class KritesPolicy(BaselinePolicy):
         (write-ahead: a crash after the append replays the promotion on
         restart; a crash before it re-judges at the next grey trigger).
         ``journal=False`` is the replay path — journaled records must
-        not re-append."""
+        not re-append.
+
+        Clock split: ``written_at`` gets ``enq_t`` (the LWW guard must
+        compare against the enqueue time), but ``last_used`` gets the
+        *live* clock — a promotion applied after a slow judge is fresh
+        state; stamping its LRU clock with the stale ``enq_t`` would
+        make it the coldest entry in the tier and the eviction victim
+        of the very next insert under churn."""
         h_idx = payload["h_idx"]
         v = jnp.asarray(payload["v"])
         enq_t = payload["enq_t"]
         answer = self._serve_static(h_idx)
         with self.dyn_lock:
+            apply_t = self.t      # live LRU clock, read under the lock
             if journal and self.wal is not None:
                 from repro.core.promo_wal import encode_record
                 ja = payload.get("judge_args", {})
@@ -684,8 +788,9 @@ class KritesPolicy(BaselinePolicy):
                 self.dyn, slot, v,
                 jnp.int32(int(self._static_cls_np[h_idx])),
                 jnp.int32(int(self._static_ref_np[h_idx])),
-                jnp.asarray(True), enq_t)
-            self._mirror_write(slot, enq_t, static_origin=True)
+                jnp.asarray(True), enq_t, last_used=apply_t)
+            self._mirror_write(slot, apply_t, static_origin=True,
+                               written_at=enq_t)
             if self.dyn_index is not None:
                 self.dyn_index.record_write(slot, payload["v"])
             self.dyn_answers[slot] = answer

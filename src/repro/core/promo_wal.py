@@ -13,8 +13,9 @@ code path:
 
 - **replay is idempotent** — re-promoting a journaled record finds its
   own near-duplicate key (sim >= 0.9999) and rewrites the identical
-  fields (``written_at``/``last_used`` both equal the record's
-  ``enq_t``), so N replays produce the state of one;
+  fields (``written_at`` equals the record's ``enq_t``; ``last_used``
+  is the policy's live clock, constant across back-to-back replays),
+  so N replays produce the state of one;
 - **replay is LWW-safe** — a journaled promotion whose key already
   holds a *newer* entry (``written_at > enq_t``) is skipped exactly
   like a live slow-judge straggler would be;

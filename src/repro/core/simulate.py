@@ -170,14 +170,17 @@ def _lru_slots(valid, last_used, cap) -> jax.Array:
 
 
 def _row_write(dyn: T.DynamicTier, ks, slot, cond, q, cls, ref, so,
-               now) -> T.DynamicTier:
+               now, wa=None) -> T.DynamicTier:
     """Conditionally write one tier row per config: semantically
     ``jnp.where(cond, T._write(...), dyn)`` but touching a single row per
     field (a K-row scatter) instead of copying whole tiers — the
     difference between O(K*d) and O(K*C*d) write traffic per scan step.
 
     ``q`` is (K, d) or broadcastable; ``cls``/``ref`` are (K,) or
-    scalar; ``cond``/``slot`` are (K,)."""
+    scalar; ``cond``/``slot`` are (K,). ``now`` stamps the LRU clock;
+    ``wa`` (default ``now``) stamps ``written_at`` — promotions pass
+    their *enqueue* time so the LWW guard clock matches the live
+    policy's while the LRU clock stays the apply time."""
     qk = jnp.broadcast_to(q, dyn.emb.shape[:1] + dyn.emb.shape[2:])
     cond2 = cond[:, None]
 
@@ -196,7 +199,7 @@ def _row_write(dyn: T.DynamicTier, ks, slot, cond, q, cls, ref, so,
         static_origin=upd(dyn.static_origin, so),
         valid=upd(dyn.valid, True),
         last_used=upd(dyn.last_used, now),
-        written_at=upd(dyn.written_at, now),
+        written_at=upd(dyn.written_at, now if wa is None else wa),
     )
 
 
@@ -264,10 +267,13 @@ def _scan_core(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
             >= 0.9999
         pslot = jnp.where(dup, j_dup, _lru_slots(dyn.valid,
                                                  dyn.last_used, cap))
-        stale = jnp.logical_and(dup, dyn.written_at[ks, j_dup] > t)
+        # LWW guard against the task's *enqueue* time (idx_due), and the
+        # promotion's own written_at records that enqueue time, while its
+        # LRU clock is the apply step t — the live `_promote` clock split
+        stale = jnp.logical_and(dup, dyn.written_at[ks, j_dup] > idx_due)
         do_promote = jnp.logical_and(approve, ~stale)
         dyn = _row_write(dyn, ks, pslot, do_promote, promo_qk, p_hc,
-                         p_hr, True, t)
+                         p_hr, True, t, wa=idx_due)
         judge_calls = st.judge_calls + due.astype(jnp.int32)
         judge_approved = st.judge_approved + approve.astype(jnp.int32)
         promotions = st.promotions + approve.astype(jnp.int32)
@@ -449,10 +455,14 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
                          jnp.where(valid0, dyn.last_used, -T.BIG), T.BIG)
 
         def wa_of(dqi_row, wa_snap):
-            """Current written_at of gathered rows: window writes happen
-            at step t0 + (dqi mod B)."""
-            return jnp.where(dqi_row >= 0, t0 + jnp.mod(dqi_row, B),
-                             wa_snap)
+            """Current written_at of gathered rows. A miss row written
+            this window (dqi < B) carries its write step t0 + dqi; a
+            promotion row (dqi >= B, applied at step t0 + dqi - B)
+            carries its *enqueue* time, lat0 earlier — the live
+            ``_promote`` clock split (LWW compares enqueue times)."""
+            w = jnp.mod(dqi_row, B)
+            wa_win = jnp.where(dqi_row < B, t0 + w, t0 + w - lat0)
+            return jnp.where(dqi_row >= 0, wa_win, wa_snap)
 
         def step(carry, sxs):
             key, dqi, ring, budget, jc, ja, pr, drop = carry
@@ -487,7 +497,7 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
                 >= 0.9999
             pslot = jnp.where(dup, j_dup, jj[:, 1])
             stale = jnp.logical_and(
-                dup, wa_of(dqi[ks, j_dup], wa0[ks, j_dup]) > t)
+                dup, wa_of(dqi[ks, j_dup], wa0[ks, j_dup]) > idx_due)
             do_promote = jnp.logical_and(approve, ~stale)
             p_hot = jnp.logical_and(do_promote[:, None],
                                     iota_c == pslot[:, None])
@@ -580,7 +590,10 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
         ref_a = jnp.where(mask, jnp.where(dqi < B, -1, p_hr[w]),
                           dyn.answer_ref)
         so_a = jnp.where(mask, dqi >= B, so0)
-        wa_a = jnp.where(mask, t0 + w, wa0)
+        # promotion rows record their enqueue time (apply - lat0), miss
+        # rows their write step — mirrors wa_of above
+        wa_a = jnp.where(mask,
+                         jnp.where(dqi < B, t0 + w, t0 + w - lat0), wa0)
         valid_a = jnp.logical_or(dyn.valid, mask)
         # rows neither touched nor written kept their old clock; key holds
         # the new clock for everything else (sentinels mark untouched

@@ -145,6 +145,27 @@ def dynamic_lookup_batch(tier: DynamicTier, q: jax.Array, index=None,
             idx.astype(jnp.int32))
 
 
+def serve_lookup_batch(static_tier: StaticTier, dyn_tier: DynamicTier,
+                       q: jax.Array, fused):
+    """Both tier lookups in ONE dispatch (DESIGN.md §15).
+
+    ``fused`` is a ``kernels.fused_serve.FusedServe`` — the static IVF
+    probe and the masked dynamic top-1 run in a single fused pass with
+    the micro-batch resident in VMEM, int8/bf16 until a final exact
+    fp32 rerank. q (B, d) L2-normalized. Returns
+    ``(static sims (B,), static idx (B,), dyn sims (B,), dyn idx (B,))``
+    — the concatenation of :func:`static_lookup_batch` and
+    :func:`dynamic_lookup_batch` whenever recall@C / recall@Cd holds
+    (the rerank recomputes the very same fp32 dots, so only *which*
+    rows got scored can differ, never the served score). The static
+    tier's packed IVF layout lives inside ``fused``; ``static_tier``
+    rides along for interface symmetry and future exact fallbacks.
+    """
+    del static_tier   # the packed layout in `fused` covers the corpus
+    ss, hi, sd, j = fused.lookup(q, dyn_tier)
+    return ss, hi.astype(jnp.int32), sd, j.astype(jnp.int32)
+
+
 # ---------------------------------------------------------------------------
 # mutations (all functional)
 # ---------------------------------------------------------------------------
@@ -164,7 +185,13 @@ def _lru_slot(tier: DynamicTier, cap=None) -> jax.Array:
 
 
 def _write(tier: DynamicTier, slot, q, cls, answer_ref, static_origin,
-           now) -> DynamicTier:
+           now, last_used=None) -> DynamicTier:
+    """Write one row. ``now`` stamps ``written_at`` (the LWW guard's
+    clock — for async promotions this is the *enqueue* time). The LRU
+    clock defaults to the same value, but callers applying a delayed
+    write (a slow judge's promotion) pass the live clock as
+    ``last_used`` so the entry lands LRU-warm instead of inheriting an
+    enqueue-time coldness that the very next insert would evict."""
     return DynamicTier(
         emb=tier.emb.at[slot].set(q),
         cls=tier.cls.at[slot].set(cls.astype(jnp.int32)),
@@ -172,7 +199,8 @@ def _write(tier: DynamicTier, slot, q, cls, answer_ref, static_origin,
             answer_ref.astype(jnp.int32)),
         static_origin=tier.static_origin.at[slot].set(static_origin),
         valid=tier.valid.at[slot].set(True),
-        last_used=tier.last_used.at[slot].set(now),
+        last_used=tier.last_used.at[slot].set(
+            now if last_used is None else last_used),
         written_at=tier.written_at.at[slot].set(now),
     )
 
@@ -187,13 +215,20 @@ def insert(tier: DynamicTier, q, cls, answer_ref, now,
 
 def upsert(tier: DynamicTier, q, cls, answer_ref, now,
            static_origin=True, dedup_sim: float = 0.9999,
-           lww: bool = True, cap=None) -> DynamicTier:
+           lww: bool = True, cap=None, last_used=None) -> DynamicTier:
     """Auxiliary overwrite (Alg. 2 line 21): idempotent, LWW-guarded.
 
     If a near-identical key exists (sim >= dedup_sim), overwrite that slot
     (idempotent re-promotion); otherwise take the LRU slot. With
     ``lww=True`` an existing *newer* entry (written after this task was
     enqueued, i.e. written_at > now) is left alone.
+
+    ``now`` is the *enqueue* time of the promotion (it stamps
+    ``written_at``, the LWW clock). ``last_used`` is the live clock at
+    apply time and stamps the LRU clock; it defaults to ``now`` for
+    synchronous callers, but async callers must pass it — a delayed
+    promotion stamped LRU-cold at its enqueue time would be the
+    eviction victim of the very next insert.
     """
     s, j = dynamic_lookup(tier, q)
     dup = s >= dedup_sim
@@ -201,7 +236,7 @@ def upsert(tier: DynamicTier, q, cls, answer_ref, now,
     skip = jnp.logical_and(dup, tier.written_at[j] > now) if lww \
         else jnp.asarray(False)
     new = _write(tier, slot, q, jnp.asarray(cls), jnp.asarray(answer_ref),
-                 jnp.asarray(static_origin), now)
+                 jnp.asarray(static_origin), now, last_used=last_used)
     return jax.tree.map(lambda a, b: jnp.where(skip, a, b), tier, new)
 
 

@@ -134,28 +134,32 @@ def _owned_slots(slots, axis: str, rows_per: int):
 
 
 def sharded_dyn_write(tier, slot, q, cls, answer_ref, static_origin, now,
-                      mesh, axis: str = "model"):
+                      mesh, axis: str = "model", last_used=None):
     """Shard-routed twin of ``tiers._write``: one slot write (scalar
     serve-path insert / async promotion) landing only on the owning
     shard. All operands are replicated scalars except the tier itself;
-    no collective runs."""
+    no collective runs. Like the single-device twin, ``now`` stamps
+    ``written_at`` (the LWW clock — enqueue time for promotions) and
+    ``last_used`` defaults to it unless the caller passes the live
+    clock so a delayed promotion lands LRU-warm."""
     rows_per = tier.emb.shape[0] // mesh.shape[axis]
 
     def local(emb, c, ar, so, va, lu, wa, slot, q, cls, answer_ref,
-              static_origin, now):
+              static_origin, now, lu_now):
         ls = _owned_slots(slot, axis, rows_per)
         return (emb.at[ls].set(q, mode="drop"),
                 c.at[ls].set(cls.astype(jnp.int32), mode="drop"),
                 ar.at[ls].set(answer_ref.astype(jnp.int32), mode="drop"),
                 so.at[ls].set(static_origin, mode="drop"),
                 va.at[ls].set(True, mode="drop"),
-                lu.at[ls].set(now, mode="drop"),
+                lu.at[ls].set(lu_now, mode="drop"),
                 wa.at[ls].set(now, mode="drop"))
 
     fn = shard_map(
         local, mesh=mesh,
         in_specs=(P(axis, None), P(axis), P(axis), P(axis), P(axis),
-                  P(axis), P(axis), P(), P(None), P(), P(), P(), P()),
+                  P(axis), P(axis), P(), P(None), P(), P(), P(), P(),
+                  P()),
         out_specs=(P(axis, None), P(axis), P(axis), P(axis), P(axis),
                    P(axis), P(axis)),
         check_vma=False)
@@ -164,7 +168,8 @@ def sharded_dyn_write(tier, slot, q, cls, answer_ref, static_origin, now,
         tier.valid, tier.last_used, tier.written_at,
         jnp.asarray(slot, jnp.int32), q, jnp.asarray(cls),
         jnp.asarray(answer_ref), jnp.asarray(static_origin),
-        jnp.asarray(now, jnp.int32))
+        jnp.asarray(now, jnp.int32),
+        jnp.asarray(now if last_used is None else last_used, jnp.int32))
     return tier._replace(emb=emb, cls=c, answer_ref=ar, static_origin=so,
                          valid=va, last_used=lu, written_at=wa)
 

@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the fused serve-pipeline kernel.
+
+The static half reuses ``ivf_scan_ref`` verbatim (same probed clusters,
+same dequantized int8 scoring, same (score desc, global id asc)
+ordering). The dynamic half mirrors the kernel's precision exactly:
+tier rows round-trip through bf16 (the streamed tile dtype) before the
+fp32 dot against the normalized query, invalid slots are masked to NEG
+with id -1, and the top-``Cd`` candidates come out in the same
+(score desc, slot asc) order with padding flushed as (NEG, -1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ivf_scan.ref import (  # noqa: F401 — shared contract
+    BIG_IDX, NEG, _normalize, ivf_scan_ref, select_clusters)
+
+
+def dyn_scan_ref(queries: jax.Array, dyn_emb: jax.Array,
+                 dyn_valid: jax.Array, n_dyn_candidates: int):
+    """Reference dynamic-tier candidate scan.
+
+    queries (B, d); dyn_emb (C, d) fp32 (valid rows L2-normalized);
+    dyn_valid (C,) bool. Returns (approx scores (B, Cd) fp32, tier
+    slots (B, Cd) int32); absent candidates have score NEG and id -1.
+    """
+    C = dyn_emb.shape[0]
+    Cd = min(n_dyn_candidates, C)
+    q = _normalize(queries)
+    e = dyn_emb.astype(jnp.bfloat16).astype(jnp.float32)   # tile dtype
+    sims = q @ e.T                                         # (B, C)
+    ids = jnp.where(dyn_valid, jnp.arange(C, dtype=jnp.int32), -1)
+    sims = jnp.where(ids[None, :] < 0, NEG, sims)
+    flat_i = jnp.broadcast_to(ids[None, :], sims.shape)
+    order = jnp.lexsort((flat_i, -sims))[:, :Cd]
+    vals = jnp.take_along_axis(sims, order, axis=1)
+    cand = jnp.take_along_axis(flat_i, order, axis=1)
+    return vals, jnp.where(vals == NEG, -1, cand).astype(jnp.int32)
+
+
+def fused_serve_ref(queries: jax.Array, centroids: jax.Array,
+                    codes: jax.Array, scales: jax.Array,
+                    row_ids: jax.Array, dyn_emb: jax.Array,
+                    dyn_valid: jax.Array, nprobe: int,
+                    n_candidates: int, n_dyn_candidates: int):
+    """Reference fused probe: static IVF scan + dynamic masked scan.
+
+    Returns (static scores (B, C), static global ids (B, C),
+             dyn scores (B, Cd), dyn tier slots (B, Cd)) under the
+    kernel's clamps (C <= nprobe*cap, Cd <= capacity).
+    """
+    K, cap, _ = codes.shape
+    nprobe = min(nprobe, K)
+    n_candidates = min(n_candidates, nprobe * cap)
+    sv, si = ivf_scan_ref(queries, centroids, codes, scales, row_ids,
+                          nprobe, n_candidates)
+    dv, di = dyn_scan_ref(queries, dyn_emb, dyn_valid, n_dyn_candidates)
+    return sv, si, dv, di

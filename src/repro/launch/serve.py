@@ -19,6 +19,15 @@ so N host devices exist; decisions are identical to ``--shards 1``:
 
     PYTHONPATH=src python -m repro.launch.serve --requests 200 --shards 4
 
+``--fused`` serves both tier decisions in ONE dispatch (DESIGN.md
+§15): the static IVF probe and the masked dynamic top-1 run as a
+single fused pass (``kernels/fused_serve``) with exact fp32 reranks,
+so served scores match the dispatched paths. It replaces both lookups
+and is mutually exclusive with ``--index ivf``, ``--dyn-index
+segmented`` and ``--shards``:
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 200 --fused
+
 ``--snapshot-dir DIR`` makes the service crash-safe (DESIGN.md §14):
 on start it restores the newest snapshot (dynamic tier + mirrors + warm
 ANN index) and replays the promotion WAL tail past the snapshot's
@@ -241,6 +250,13 @@ def main() -> None:
                          "synthetic entries (exercises the ANN path at "
                          "realistic tier sizes)")
     ap.add_argument("--nprobe", type=int, default=8)
+    ap.add_argument("--fused", action="store_true",
+                    help="serve through the fused single-pass pipeline "
+                         "(DESIGN.md §15): static IVF probe + masked "
+                         "dynamic top-1 in ONE kernel dispatch. "
+                         "Replaces both tier lookups; incompatible "
+                         "with --index ivf, --dyn-index segmented and "
+                         "--shards > 1")
     ap.add_argument("--dyn-index", choices=["flat", "segmented"],
                     default="flat",
                     help="dynamic-tier lookup strategy (DESIGN.md §12); "
@@ -336,6 +352,18 @@ def main() -> None:
             print(f"static index: {index.describe()} "
                   "(snapshot index stale/absent — cold rebuild)")
 
+    fused = None
+    if args.fused:
+        if args.index != "flat" or args.dyn_index != "flat" \
+                or args.shards > 1:
+            ap.error("--fused replaces both tier lookups; drop "
+                     "--index ivf / --dyn-index segmented / --shards")
+        from repro.index.ivf import build_ivf
+        from repro.kernels.fused_serve import FusedServe
+        fused = FusedServe(build_ivf(tier.emb, corpus_normalized=True),
+                           nprobe=args.nprobe)
+        print(f"serve path: {fused.describe()}")
+
     dyn_index = args.dyn_index
     if mesh is not None and dyn_index == "segmented":
         print("note: --dyn-index segmented is single-device only; "
@@ -356,7 +384,7 @@ def main() -> None:
                           judge_fn=OracleJudge(), d=64,
                           backend_batch_fn=frontend.submit_many,
                           index=index, static_texts=texts,
-                          mesh=mesh, wal=wal,
+                          mesh=mesh, wal=wal, fused=fused,
                           dyn_index=build_dyn_index(
                               dyn_index, cfg.capacity, 64,
                               seg_rows=args.seg_rows,

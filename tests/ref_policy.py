@@ -17,7 +17,10 @@ Semantics mirrored (see DESIGN.md §3-4, §10):
   request t + max(1, judge_latency), at most one completion per step
   (earliest due first), processed before the step's serving decision;
 - promotion upsert: near-duplicate overwrite (sim >= 0.9999), else LRU
-  slot; last-writer-wins guard on the duplicate's ``written_at``.
+  slot; last-writer-wins guard comparing the duplicate's ``written_at``
+  against the task's *enqueue* time, and the clock split of the live
+  policy: the promoted row's ``written_at`` records the enqueue time
+  (LWW) while ``last_used`` records the apply time (LRU-warm).
 """
 from __future__ import annotations
 
@@ -121,24 +124,35 @@ class _Dyn:
                        -2**40)
         return int(np.argmin(key))
 
-    def write(self, slot, q, cls, ref, so, now):
+    def write(self, slot, q, cls, ref, so, now, written_at=None):
+        """``now`` stamps the LRU clock; ``written_at`` (default
+        ``now``) stamps the LWW clock — promotions pass their enqueue
+        time, mirroring ``tiers._write``."""
         self.emb[slot] = q
         self.cls[slot] = cls
         self.answer_ref[slot] = ref
         self.static_origin[slot] = so
         self.valid[slot] = True
         self.last_used[slot] = now
-        self.written_at[slot] = now
+        self.written_at[slot] = now if written_at is None else written_at
         if self.index is not None:
             self.index.record_write(slot)
 
-    def upsert(self, q, cls, ref, now, so=True):
-        """Idempotent, LWW-guarded promotion write (Alg. 2 line 21)."""
+    def upsert(self, q, cls, ref, now, enq=None, so=True):
+        """Idempotent, LWW-guarded promotion write (Alg. 2 line 21).
+
+        ``enq`` is the promotion's enqueue time (default ``now``): the
+        LWW guard compares against it and it becomes the row's
+        ``written_at``, while ``now`` — the apply time — becomes the
+        LRU clock, so a delayed promotion lands LRU-warm (the live
+        ``KritesPolicy._promote`` clock split)."""
+        enq = now if enq is None else enq
         s, j = self.lookup(q)
         dup = s >= DEDUP_SIM
-        if dup and self.written_at[j] > now:
+        if dup and self.written_at[j] > enq:
             return                     # stale judgment: newer entry wins
-        self.write(j if dup else self.lru_slot(), q, cls, ref, so, now)
+        self.write(j if dup else self.lru_slot(), q, cls, ref, so, now,
+                   written_at=enq)
 
 
 @dataclass
@@ -220,7 +234,8 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
             if task.qcls == task.hcls or task.flip:
                 judge_approved += 1
                 promotions += 1
-                dyn.upsert(task.emb, task.hcls, task.href, now=t)
+                dyn.upsert(task.emb, task.hcls, task.href, now=t,
+                           enq=task.due - lat)
 
         # ---- 2. serving path ----
         static_hit = ss >= cfg.tau_static
@@ -268,14 +283,14 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
         return out
 
     # ---- 4. end-of-trace drain: judge the backlog, journal-then-apply
-    journal = []                   # (emb, cls, ref, now) in append order
+    journal = []              # (emb, cls, ref, now, enq) in append order
     for task in sorted(pending, key=lambda p: p.due):
         judge_calls += 1
         if task.qcls == task.hcls or task.flip:
             judge_approved += 1
             promotions += 1
             journal.append((task.emb, task.hcls, task.href,
-                            int(task.due)))
+                            int(task.due), int(task.due) - lat))
     applied = len(journal) if crash_after is None \
         else min(crash_after, len(journal))
     for rec in journal[:applied]:       # upserts that landed pre-crash

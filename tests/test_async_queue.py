@@ -135,6 +135,58 @@ def test_straggler_redispatch_first_completion_wins():
     assert pool.stats.judged >= 2         # both copies ran the judge
 
 
+def test_backoff_is_not_redispatched_and_does_not_block_workers():
+    """Reaper vs retry-backoff regression (fails on the old code, two
+    ways). The old retry path slept the backoff inside the worker and
+    re-enqueued without resetting the inflight dispatch clock ``e[0]``,
+    so (a) ``_reap_stragglers`` re-dispatched a task that was merely
+    backing off — duplicate judge calls counted as ``redispatched`` —
+    and (b) the sleep blocked the worker slot for the whole backoff.
+    Now the retry parks on a deadline heap with the dispatch clock
+    pushed to its ready time: no spurious redispatch, and the single
+    worker stays free for other tasks during the backoff."""
+    calls = {"k0": 0}
+    promoted = []
+    other_done = threading.Event()
+
+    def judge(p):
+        if p["id"] == 0:
+            calls["k0"] += 1
+            if calls["k0"] == 1:
+                raise RuntimeError("transient")   # -> 2.0 s backoff
+        return True
+
+    def promote(p):
+        promoted.append(p["id"])
+        if p["id"] == 1:
+            other_done.set()
+
+    # backoff (1.0 * 2^1 = 2.0 s) far exceeds the straggler deadline
+    # (0.2 s): the old code's reaper fires several times during it
+    pool = VerifyAndPromotePool(judge_fn=judge, promote_fn=promote,
+                                n_workers=1, backoff_s=1.0,
+                                straggler_deadline_s=0.2)
+    t0 = time.monotonic()
+    pool.submit(("k", 0), {"id": 0})
+    time.sleep(0.05)                  # let the failing attempt start
+    pool.submit(("k", 1), {"id": 1})
+    # the single worker must process task 1 while task 0 backs off
+    assert other_done.wait(1.0), \
+        "worker slot was blocked for the backoff duration"
+    assert time.monotonic() - t0 < 2.0     # well inside k0's backoff
+    assert pool.stats.redispatched == 0, \
+        "reaper re-dispatched a task that was merely backing off"
+
+    pool.drain(10)                    # k0 retries after its backoff
+    pool.stop()
+    assert sorted(promoted) == [0, 1]
+    assert pool.stats.redispatched == 0
+    assert pool.stats.retried == 1
+    assert pool.stats.approved == 2
+    assert pool.stats.duplicate_completions == 0
+    assert pool.stats.judged == 2     # k0 success + k1 (fail doesn't count)
+
+
 def test_straggler_key_free_for_resubmission_after_completion():
     """Once the winner completes, the key leaves the inflight set: a
     fresh submit of the same key must be accepted, not deduped."""

@@ -1,0 +1,106 @@
+"""Degenerate-embedding guard (zero-norm / non-finite keys).
+
+``l2_normalize`` maps a zero embedding to zero and passes NaN/inf
+through. Before the guard, the serving path inserted such rows into the
+dynamic tier on a backend miss — and one non-finite key poisons every
+later masked argmax over the tier (NaN similarity against everything).
+The guard serves these requests via the backend without caching them
+and without a grey-zone trigger, on both the scalar and batched paths.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.judge import OracleJudge
+from repro.core.policy import KritesPolicy, _usable_rows
+from repro.core.tiers import CacheConfig, make_static_tier
+
+D = 8
+
+
+def _static(n=4):
+    emb = np.eye(D, dtype=np.float32)[:n]
+    tier = make_static_tier(jnp.asarray(emb),
+                            jnp.arange(n, dtype=jnp.int32))
+    answers = [f"curated-{i}" for i in range(n)]
+    texts = [f"canonical prompt {i}" for i in range(n)]
+    return tier, answers, texts
+
+
+def _para(i=0, j=1, w=0.3):
+    v = np.eye(D, dtype=np.float32)[i] + w * np.eye(D, dtype=np.float32)[j]
+    return (v / np.linalg.norm(v)).astype(np.float32)
+
+
+def _policy(emb_map):
+    tier, answers, texts = _static()
+    return KritesPolicy(
+        CacheConfig(0.95, 0.9, sigma_min=0.3, capacity=4), tier, answers,
+        lambda p: emb_map[p], lambda p: f"gen({p})", OracleJudge(), d=D,
+        n_workers=0, static_texts=texts)
+
+
+def test_usable_rows_mask():
+    good = _para()
+    rows = np.stack([good, np.zeros(D, np.float32),
+                     np.full(D, np.nan, np.float32),
+                     np.full(D, np.inf, np.float32)])
+    # the mask is evaluated post-normalization in the policy; emulate
+    from repro.index.flat import l2_normalize
+    rows = np.asarray(l2_normalize(jnp.asarray(rows)))
+    assert _usable_rows(rows).tolist() == [True, False, False, False]
+
+
+def test_scalar_zero_embedding_served_by_backend_not_cached():
+    emb = {"z": np.zeros(D, np.float32), "p": _para(0, 1, 0.6)}
+    pol = _policy(emb)
+    res = pol.serve("z")
+    assert res.served_by == "backend" and res.answer == "gen(z)"
+    assert not pol._valid_np.any(), "degenerate key was cached"
+    assert pol.pool.stats.submitted == 0, "degenerate grey trigger"
+    # the cache still works for normal traffic afterwards
+    assert pol.serve("p").served_by == "backend"     # miss -> insert
+    assert pol.serve("p").served_by == "dynamic"     # cached fine
+
+
+def test_scalar_nan_embedding_does_not_poison_cache():
+    emb = {"bad": np.full(D, np.nan, np.float32),
+           "p": _para(0, 1, 0.6)}
+    pol = _policy(emb)
+    assert pol.serve("p").served_by == "backend"     # insert good key
+    assert pol.serve("bad").served_by == "backend"
+    assert pol.serve("bad").answer == "gen(bad)"
+    # old code: the NaN row lands in the tier, every later masked
+    # argmax sees NaN sims and the dynamic hit below disappears
+    r = pol.serve("p")
+    assert r.served_by == "dynamic" and r.answer == "gen(p)"
+    assert int(pol._valid_np.sum()) == 1
+
+
+def test_batch_mixed_good_and_degenerate_rows():
+    emb = {"a": _para(0, 1, 0.5), "z": np.zeros(D, np.float32),
+           "n": np.full(D, np.nan, np.float32), "b": _para(2, 3, 0.5)}
+    pol = _policy(emb)
+    res = pol.serve_batch(["a", "z", "n", "b"])
+    assert [r.served_by for r in res] == ["backend"] * 4
+    assert [r.answer for r in res] == \
+        ["gen(a)", "gen(z)", "gen(n)", "gen(b)"]
+    # only the two good rows were cached
+    assert int(pol._valid_np.sum()) == 2
+    assert sorted(a for a in pol.dyn_answers if a is not None) == \
+        ["gen(a)", "gen(b)"]
+    # a repeat batch hits the cache for good rows, backend for bad ones
+    res2 = pol.serve_batch(["a", "n", "b"])
+    assert [r.served_by for r in res2] == ["dynamic", "backend", "dynamic"]
+    assert res2[0].answer == "gen(a)" and res2[2].answer == "gen(b)"
+    assert int(pol._valid_np.sum()) == 2
+
+
+def test_batch_all_degenerate_rows():
+    emb = {"z": np.zeros(D, np.float32),
+           "n": np.full(D, np.nan, np.float32)}
+    pol = _policy(emb)
+    res = pol.serve_batch(["z", "n"])
+    assert [r.served_by for r in res] == ["backend", "backend"]
+    assert [r.answer for r in res] == ["gen(z)", "gen(n)"]
+    assert not pol._valid_np.any()
+    assert pol.pool.stats.submitted == 0

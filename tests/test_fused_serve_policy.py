@@ -1,0 +1,190 @@
+"""Fused serve path vs the dispatched lookups: decision-identical.
+
+The fused single-pass pipeline (``kernels/fused_serve``, DESIGN.md §15)
+replaces the policy's two lookups (static top-1 + masked dynamic top-1)
+with ONE dispatch. These tests pin the safety contract of the flag: a
+fused policy must serve *field-identical* results — served_by, answer,
+static_origin, similarity — to the flat-dispatched and IVF-dispatched
+policies, scalar and batched, and leave identical tier state behind.
+
+The fused configs here probe every cluster with a candidate budget
+covering the whole corpus / tier (recall 1.0 by construction), so the
+exact fp32 rerank makes equality mathematical, not statistical: any
+mismatch is a real serving-path bug, hence the hard agreement == 1.0.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.judge import OracleJudge
+from repro.core.policy import KritesPolicy
+from repro.core.tiers import CacheConfig, make_static_tier
+from repro.index.ivf import IVFIndex, build_ivf
+from repro.kernels.fused_serve import FusedServe
+
+D, S, CAP = 32, 24, 16
+
+
+def _world(seed=0):
+    """Static tier + a trace with static hits, grey-zone paraphrases,
+    repeats (dynamic hits) and novel prompts, all via an embed map."""
+    rng = np.random.default_rng(seed)
+    emb = rng.standard_normal((S, D)).astype(np.float32)
+    emb /= np.linalg.norm(emb, axis=1, keepdims=True)
+    tier = make_static_tier(jnp.asarray(emb),
+                            jnp.arange(S, dtype=jnp.int32))
+    answers = [f"curated-{i}" for i in range(S)]
+    texts = [f"canonical prompt {i}" for i in range(S)]
+
+    emb_map, trace = {}, []
+
+    def para(i, w, name, cls):
+        v = emb[i] + w * rng.standard_normal(D).astype(np.float32)
+        emb_map[name] = (v / np.linalg.norm(v)).astype(np.float32)
+        trace.append((name, {"cls": cls}))
+
+    for i in range(8):
+        para(i, 0.05, f"hit-{i}", i)        # sim ~0.999 -> static hit
+    for i in range(8):
+        para(i, 0.45, f"grey-{i}", i)       # grey zone -> judge+promote
+    for i in range(6):
+        v = rng.standard_normal(D).astype(np.float32)
+        emb_map[f"novel-{i}"] = v / np.linalg.norm(v)
+        trace.append((f"novel-{i}", None))  # backend miss -> insert
+    # repeats: dynamic hits on promoted/inserted keys
+    for name in [f"grey-{i}" for i in range(4)] + ["novel-0", "novel-3"]:
+        trace.append((name, {"cls": -1} if name.startswith("n") else
+                      {"cls": int(name.split("-")[1])}))
+    return tier, answers, texts, emb_map, trace
+
+
+def _policy(tier, answers, texts, emb_map, **kw):
+    return KritesPolicy(
+        CacheConfig(0.95, 0.9, sigma_min=0.3, capacity=CAP),
+        tier, answers, lambda p: emb_map[p], lambda p: f"gen({p})",
+        OracleJudge(), d=D, n_workers=1, static_texts=texts, **kw)
+
+
+def _variants(tier, answers, texts, emb_map):
+    ivf = build_ivf(np.asarray(tier.emb), n_clusters=4, iters=4,
+                    corpus_normalized=True)
+    return {
+        "flat": _policy(tier, answers, texts, emb_map),
+        "ivf": _policy(tier, answers, texts, emb_map,
+                       index=IVFIndex(ivf, nprobe=4, n_candidates=S)),
+        # full probe + corpus-wide candidate budgets: recall 1.0, so
+        # the fused decisions must be exactly the dispatched ones
+        "fused": _policy(tier, answers, texts, emb_map,
+                         fused=FusedServe(ivf, nprobe=4,
+                                          n_candidates=S,
+                                          n_dyn_candidates=CAP)),
+    }
+
+
+def _row(r):
+    return (r.served_by, str(r.answer), bool(r.static_origin),
+            float(r.similarity))
+
+
+def _same(a, b):
+    # decisions must match exactly; the similarity only to float32
+    # accumulation order (matmul vs gathered-einsum differ in the ulp)
+    return a[:3] == b[:3] \
+        and (a[3] == b[3] or abs(a[3] - b[3]) < 5e-5)
+
+
+def _assert_same_state(pols):
+    base = pols["flat"]
+    for name, p in pols.items():
+        assert (p._valid_np == base._valid_np).all(), name
+        assert (p._static_origin_np == base._static_origin_np).all(), name
+        assert (p._written_at_np == base._written_at_np).all(), name
+        assert (p._last_used_np == base._last_used_np).all(), name
+        assert p.dyn_answers == base.dyn_answers, name
+        np.testing.assert_allclose(np.asarray(p.dyn.emb),
+                                   np.asarray(base.dyn.emb), atol=1e-6)
+
+
+def test_scalar_fused_matches_dispatched_agreement_one():
+    tier, answers, texts, emb_map, trace = _world()
+    pols = _variants(tier, answers, texts, emb_map)
+    total = agree = 0
+    for prompt, meta in trace:
+        rows = {}
+        for name, p in pols.items():
+            rows[name] = _row(p.serve(prompt, meta=meta))
+            p.pool.drain(5)    # promotions land before the next serve
+        total += 1
+        agree += int(_same(rows["fused"], rows["flat"])
+                     and _same(rows["ivf"], rows["flat"]))
+        assert _same(rows["fused"], rows["flat"]), (prompt, rows)
+        assert _same(rows["ivf"], rows["flat"]), (prompt, rows)
+    assert total and agree / total == 1.0
+    _assert_same_state(pols)
+    for p in pols.values():
+        p.pool.stop()
+
+
+def test_batch_fused_matches_dispatched_agreement_one():
+    tier, answers, texts, emb_map, trace = _world(seed=1)
+    pols = _variants(tier, answers, texts, emb_map)
+    total = agree = 0
+    for lo in range(0, len(trace), 8):
+        chunk = trace[lo:lo + 8]
+        prompts = [p for p, _ in chunk]
+        metas = [m for _, m in chunk]
+        rows = {name: [_row(r) for r in
+                       p.serve_batch(prompts, metas)]
+                for name, p in pols.items()}
+        for p in pols.values():
+            p.pool.drain(5)
+        for i in range(len(chunk)):
+            total += 1
+            same = _same(rows["fused"][i], rows["flat"][i]) \
+                and _same(rows["ivf"][i], rows["flat"][i])
+            agree += int(same)
+            assert same, (prompts[i], {k: v[i] for k, v in rows.items()})
+    assert total and agree / total == 1.0
+    _assert_same_state(pols)
+    for p in pols.values():
+        p.pool.stop()
+
+
+def test_fused_excludes_other_lookup_configs():
+    """fused= replaces both lookups; combining it with index=,
+    dyn_index= or mesh= must be rejected, not silently shadowed."""
+    tier, answers, texts, emb_map, _ = _world()
+    ivf = build_ivf(np.asarray(tier.emb), n_clusters=4,
+                    corpus_normalized=True)
+    fused = FusedServe(ivf)
+    with pytest.raises(ValueError):
+        _policy(tier, answers, texts, emb_map, fused=fused,
+                index=IVFIndex(ivf))
+    with pytest.raises(ValueError):
+        _policy(tier, answers, texts, emb_map, fused=fused,
+                dyn_index="segmented")
+
+
+def test_fused_interpret_kernel_end_to_end_tiny():
+    """One tiny config through the real Pallas kernel (interpret mode)
+    inside the policy — the fused flag's device path, not just the jnp
+    twin — must still match the flat policy decision for decision."""
+    tier, answers, texts, emb_map, trace = _world(seed=2)
+    pols = {
+        "flat": _policy(tier, answers, texts, emb_map),
+        "fused": _policy(
+            tier, answers, texts, emb_map,
+            fused=FusedServe(
+                build_ivf(np.asarray(tier.emb), n_clusters=4, iters=4,
+                          corpus_normalized=True),
+                nprobe=4, n_candidates=S, n_dyn_candidates=CAP,
+                force="interpret")),
+    }
+    for prompt, meta in trace[:8]:     # interpret mode is slow; a
+        rows = {}                      # prefix covers hit/grey/backend
+        for name, p in pols.items():
+            rows[name] = _row(p.serve(prompt, meta=meta))
+            p.pool.drain(5)
+        assert _same(rows["fused"], rows["flat"]), (prompt, rows)
+    for p in pols.values():
+        p.pool.stop()

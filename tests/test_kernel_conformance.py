@@ -40,6 +40,8 @@ from repro.kernels.embedding_bag.ops import embedding_bag
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.flash_attention.ops import attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.fused_serve.ops import fused_serve_probe
+from repro.kernels.fused_serve.ref import fused_serve_ref
 from repro.kernels.ivf_scan.ops import ivf_scan
 from repro.kernels.ivf_scan.ref import NEG, ivf_scan_ref
 from repro.kernels.simsearch.ops import cosine_topk
@@ -284,7 +286,75 @@ BAG = Family(
 )
 
 
-FAMILIES = (SIMSEARCH, IVF_SCAN, FLASH, DECODE, BAG)
+# --------------------------------------------------------------------------
+# fused_serve — single-pass static IVF probe + dynamic masked scan
+# --------------------------------------------------------------------------
+
+def _fused_make(case, dtype, rng):
+    N, d, B, K, nprobe, C, cap_dyn, Cd, valid_frac = case
+    centers = rng.standard_normal((max(2, K), d))
+    rows = (centers[rng.integers(0, max(2, K), N)]
+            + 0.3 * rng.standard_normal((N, d))).astype(np.float32)
+    q = (rows[rng.integers(0, N, B)]
+         + 0.05 * rng.standard_normal((B, d))).astype(np.float32) \
+        if B else np.zeros((0, d), np.float32)
+    ivf = build_ivf(rows, n_clusters=K, iters=3)
+    dyn = np.zeros((cap_dyn, d), np.float32)
+    valid = np.zeros(cap_dyn, bool)
+    n_live = int(round(valid_frac * cap_dyn))
+    if n_live:
+        live = rng.choice(cap_dyn, n_live, replace=False)
+        e = rng.standard_normal((n_live, d)).astype(np.float32)
+        dyn[live] = e / np.linalg.norm(e, axis=1, keepdims=True)
+        valid[live] = True
+    return {"q": jnp.asarray(q), "ivf": ivf, "nprobe": nprobe, "C": C,
+            "dyn": jnp.asarray(dyn), "valid": jnp.asarray(valid),
+            "Cd": Cd}
+
+
+def _fused_check(got, want, dtype):
+    sv, si, dv, di = got
+    sv_r, si_r, dv_r, di_r = want
+    # static half: the ivf_scan contract verbatim
+    _ivf_check((sv, si), (sv_r, si_r), dtype)
+    # dynamic half: exact slots in (score desc, slot asc) order,
+    # padding/invalid flushed as (NEG, -1)
+    assert dv.shape == dv_r.shape and di.shape == di_r.shape
+    assert di.dtype == jnp.int32
+    assert np.array_equal(np.asarray(di), np.asarray(di_r))
+    np.testing.assert_allclose(np.asarray(dv), np.asarray(dv_r),
+                               rtol=1e-5, atol=1e-5)
+    assert bool(jnp.all((di >= 0) | (dv == NEG)))
+
+
+FUSED = Family(
+    name="fused_serve",
+    make=_fused_make,
+    ops=lambda x, force: fused_serve_probe(
+        x["q"], x["ivf"].centroids, x["ivf"].codes, x["ivf"].scales,
+        x["ivf"].row_ids, x["dyn"], x["valid"], nprobe=x["nprobe"],
+        n_candidates=x["C"], n_dyn_candidates=x["Cd"], force=force),
+    ref=lambda x: fused_serve_ref(
+        x["q"], x["ivf"].centroids, x["ivf"].codes, x["ivf"].scales,
+        x["ivf"].row_ids, x["dyn"], x["valid"], x["nprobe"], x["C"],
+        x["Cd"]),
+    check=_fused_check,
+    cases=(
+        #  N,  d, B,  K, nprobe,  C, cap, Cd, valid_frac
+        (512, 16, 3,  8,      3,  8,  64,  8, 0.6),
+        (2000, 32, 7, 32,     6, 24, 256, 16, 0.9),
+        (640, 48, 1, 12,     12, 48, 100, 16, 0.5),   # full probe,
+        (300,  8, 5,  4,      2,  4,  24,  4, 0.3),   # odd capacity
+    ),
+    edge_cases=(
+        (64,  8, 0,  4,      2,  4,  32,  8, 0.5),    # empty batch
+        (64,  8, 3,  4,      2,  4,  32,  8, 0.0),    # all-invalid dyn
+        (1,   8, 2,  1,      1,  1,   4,  8, 1.0),    # 1-row corpus,
+    ),                                                # Cd > capacity
+)
+
+
+FAMILIES = (SIMSEARCH, IVF_SCAN, FLASH, DECODE, BAG, FUSED)
 _BY_NAME = {f.name: f for f in FAMILIES}
 
 

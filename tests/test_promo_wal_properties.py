@@ -206,7 +206,10 @@ def test_lww_interleaving_matches_numpy_oracle(ops):
         cls_np = np.asarray(STATIC.cls)
         for k, h, t in ops:
             live._promote({"v": POOL[k], "h_idx": h, "enq_t": t})
-            oracle.upsert(POOL[k], int(cls_np[h]), int(ref_np[h]), t)
+            # the policy never serves here, so its live clock stays 0:
+            # apply time (LRU clock) 0, enqueue time (LWW clock) t
+            oracle.upsert(POOL[k], int(cls_np[h]), int(ref_np[h]), 0,
+                          enq=t)
         live.wal.close()
 
         replayed = _policy()

@@ -111,6 +111,52 @@ def test_delayed_judge_promotion_respects_lww():
     assert not bool(np.asarray(pol.dyn.static_origin)[0])
 
 
+def test_delayed_promotion_survives_subsequent_insert():
+    """LRU regression: a slow judge's promotion must land LRU-warm.
+
+    The old ``_promote`` stamped ``last_used`` with the task's enqueue
+    time, so a promotion applied at t=3 for a task enqueued at t=1
+    entered the tier as the LRU-coldest entry and was evicted by the
+    very next insert. With the clock split (written_at = enq_t for LWW,
+    last_used = live clock) it must survive. Fails on the old code.
+    """
+    tier, answers, texts = _static()
+    judge = _GatedOracle()
+    cfg = CacheConfig(tau_static=0.95, tau_dynamic=0.9, sigma_min=0.3,
+                      capacity=3)
+    # p1 is a paraphrase of static row 0 (grey); p2/p3/p4 are orthogonal
+    # directions (plain misses that only churn the LRU clock)
+    eye = np.eye(D, dtype=np.float32)
+    emb = {"p1": _para(0, 1, 0.5), "p2": eye[4], "p3": eye[5],
+           "p4": eye[6]}
+    pol = KritesPolicy(cfg, tier, answers, lambda p: emb[p],
+                       lambda p: f"gen({p})", judge, d=D, n_workers=1,
+                       static_texts=texts)
+    pol.serve("p1", {"cls": 0})   # t=1: miss insert slot0 + grey task
+    pol.serve("p2", {"cls": 4})   # t=2: miss insert slot1
+    pol.serve("p3", {"cls": 5})   # t=3: miss insert slot2 (tier full)
+    judge.gate.set()              # the slow judge answers at t=3
+    pol.pool.drain()
+    assert pol.pool.stats.approved == 1
+    # the promotion overwrote its own miss insert in slot0: LWW clock
+    # keeps the enqueue time, LRU clock gets the live time
+    assert bool(pol._static_origin_np[0])
+    assert int(np.asarray(pol.dyn.written_at)[0]) == 1
+    assert int(np.asarray(pol.dyn.last_used)[0]) == 3
+    assert int(pol._last_used_np[0]) == 3
+
+    pol.serve("p4", {"cls": 6})   # t=4: insert must evict p2, not p1
+    assert bool(pol._static_origin_np[0]), \
+        "delayed promotion was evicted by the next insert (LRU-cold)"
+    assert pol.dyn_answers[0] == "curated-0"
+
+    # and the promoted pointer still serves its query
+    r = pol.serve("p1", {"cls": 0})
+    pol.pool.stop()
+    assert r.served_by == "dynamic" and r.static_origin
+    assert r.answer == "curated-0"
+
+
 def test_fresh_promotion_still_overwrites_its_own_insert():
     """The guard must not break the normal flow: a promotion whose
     enq_t equals the miss-insert's timestamp overwrites it in place."""
