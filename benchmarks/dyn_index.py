@@ -69,7 +69,8 @@ def _make_tier(rows: np.ndarray, capacity: int):
         static_origin=jnp.zeros(capacity, bool),
         valid=jnp.asarray(valid),
         last_used=jnp.zeros(capacity, jnp.int32),
-        written_at=jnp.zeros(capacity, jnp.int32))
+        written_at=jnp.zeros(capacity, jnp.int32),
+        expires_at=jnp.zeros(capacity, jnp.int32))
 
 
 def _apply_churn(tier, index, rng, n_writes: int):

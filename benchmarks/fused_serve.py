@@ -67,6 +67,7 @@ def _workload(n_rows: int, rng, b: int = B, d: int = D):
         valid=jnp.asarray(valid),
         last_used=jnp.asarray(clocks),
         written_at=jnp.asarray(clocks),
+        expires_at=jnp.zeros((DYN_CAP,), jnp.int32),
     )
     return corpus_np, q_np, jax.block_until_ready(dyn)
 

@@ -1,0 +1,246 @@
+"""L1 exact-match front tier + freshness benchmark (DESIGN.md §16):
+repeat-rate x volatile-fraction sweep over the live serving path.
+
+Production cache traffic is repeat-heavy: a large fraction of requests
+are byte-identical (up to whitespace/case) re-asks of something served
+minutes ago. The L1 front tier turns each of those into one O(1) dict
+probe — no embedder forward, no static top-k, no dynamic scan — so the
+win scales with the repeat rate. The freshness layer bounds what that
+speed costs in correctness: volatile queries either bypass the cache
+(zero stale serves by construction) or expire on a short per-class
+TTL.
+
+Per (repeat_rate, volatile_frac) operating point, both policies serve
+the SAME prompt stream through ``serve_batch`` (router-shaped
+micro-batches) with the real hashing-n-gram embedder:
+
+- ``us_per_call`` / ``us_no_l1`` / ``speedup_vs_no_l1`` — wall time per
+  request with the L1 front tier vs the identical policy without it;
+- ``l1_hit_rate`` — fraction of requests the front tier absorbed;
+- ``stale_rate_ttl`` — stale volatile serves under TTL-only freshness
+  (short ``ttl_volatile``, drift clock on, no bypass);
+- ``stale_rate_bypass`` — same stream with ``volatile_bypass`` on
+  (must be 0: bypassed queries never touch a cached answer).
+
+    PYTHONPATH=src python -m benchmarks.l1_freshness [--smoke]
+
+``--smoke`` is the CI entry (scripts/ci.sh): asserts zero stale serves
+with bypass on, decision agreement 1.0 vs the no-L1 twin on non-repeat
+traffic, and zero embedder calls on the repeated suffix of a
+pure-repeat stream.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import tiers as T
+from repro.core.freshness import FreshnessPolicy
+from repro.core.policy import KritesPolicy
+
+D = 64
+BATCH = 8
+REPEAT_RATES = (0.0, 0.5, 0.9)
+VOLATILE_FRACS = (0.0, 0.3)
+DRIFT_EVERY = 64
+
+
+def _mk_prompt(i: int, volatile: bool) -> str:
+    # the freshness class rides in the text itself, exactly as live
+    # traffic would carry it ("price"/"today" are volatile triggers)
+    return (f"price of item {i} today" if volatile
+            else f"explain the design of component {i}")
+
+
+def _trace(n: int, repeat_rate: float, volatile_frac: float, rng):
+    """Prompt stream with an expected exact-repeat fraction: each
+    request re-asks a uniformly random earlier prompt with probability
+    ``repeat_rate``, else introduces a fresh one (volatile with
+    probability ``volatile_frac``)."""
+    prompts, fresh = [], 0
+    for _ in range(n):
+        if prompts and rng.random() < repeat_rate:
+            prompts.append(prompts[int(rng.integers(len(prompts)))])
+        else:
+            prompts.append(_mk_prompt(fresh,
+                                      rng.random() < volatile_frac))
+            fresh += 1
+    return prompts
+
+
+def _mk_policy(embed, l1, freshness, capacity: int = 2048):
+    intents = [f"how do i {v} my {nn}" for v in
+               ("fix", "update", "reset", "clean", "sell")
+               for nn in ("bike", "laptop", "router", "phone")]
+    tier = T.make_static_tier(
+        jnp.asarray(embed.batch(intents)),
+        jnp.arange(len(intents), dtype=jnp.int32))
+    cfg = T.CacheConfig(0.92, 0.88, sigma_min=0.3, capacity=capacity,
+                        l1=l1 is not None,
+                        volatile_bypass=bool(freshness
+                                             and freshness.volatile_bypass),
+                        ttl_volatile=freshness.ttl_volatile
+                        if freshness else 0,
+                        ttl_stable=freshness.ttl_stable
+                        if freshness else 0)
+    return KritesPolicy(cfg, tier,
+                        [f"[curated] {p}" for p in intents], embed,
+                        backend_fn=lambda p: f"gen({p})",
+                        judge_fn=lambda **kw: True, d=D, n_workers=0,
+                        l1=l1, freshness=freshness)
+
+
+def _drive(policy, prompts, batch: int = BATCH) -> float:
+    t0 = time.perf_counter()
+    for lo in range(0, len(prompts), batch):
+        policy.serve_batch(prompts[lo:lo + batch])
+    return time.perf_counter() - t0
+
+
+def _warm(policy) -> None:
+    """Compile every semantic sub-batch size before the timed loop.
+    The L1 front (and the volatile bypass) shrink the embedded
+    sub-batch, so a repeat-heavy stream walks through the whole size
+    ladder — the embedder forward and the pre-pad normalize compile
+    per raw size — unlike the no-L1 twin, which only ever sees the
+    full batch. Without this, the L1 side would be charged XLA compile
+    time the steady state never pays."""
+    for bs in range(1, BATCH + 1):
+        policy.serve_batch([_mk_prompt(100_000 + 64 * bs + j, False)
+                            for j in range(bs)])
+
+
+def _bench_one(repeat_rate: float, volatile_frac: float, n: int,
+               embed) -> dict:
+    rng = np.random.default_rng(17)
+    prompts = _trace(n, repeat_rate, volatile_frac, rng)
+    ttl_fresh = FreshnessPolicy(volatile_bypass=False, ttl_volatile=16,
+                                ttl_stable=0, ttl_unknown=0,
+                                drift_every=DRIFT_EVERY)
+    byp_fresh = FreshnessPolicy(volatile_bypass=True, ttl_volatile=16,
+                                ttl_stable=0, ttl_unknown=0,
+                                drift_every=DRIFT_EVERY)
+
+    # scratch pass over this exact trace first: the point's one-off XLA
+    # compiles (TTL-death scatter counts, LRU touch counts, sub-batch
+    # sizes) land on a throwaway policy instead of whichever timed twin
+    # happens to run first
+    for l1_cap in (4096, None):
+        scratch = _mk_policy(embed, l1_cap, ttl_fresh)
+        _warm(scratch)
+        _drive(scratch, prompts)
+
+    with_l1 = _mk_policy(embed, 4096, ttl_fresh)
+    _warm(with_l1)
+    t0, h0, s0, e0 = (with_l1.t, with_l1._l1_hits,
+                      with_l1._stale_serves, with_l1._ttl_evictions)
+    l1_s = _drive(with_l1, prompts)
+
+    no_l1 = _mk_policy(embed, None, ttl_fresh)
+    _warm(no_l1)
+    plain_s = _drive(no_l1, prompts)
+
+    bypass = _mk_policy(embed, 4096, byp_fresh)
+    _warm(bypass)
+    b0 = bypass.t
+    _drive(bypass, prompts)
+
+    return {
+        "name": f"l1_freshness/rep{repeat_rate}_vol{volatile_frac}",
+        "us_per_call": round(1e6 * l1_s / n, 1),
+        "us_no_l1": round(1e6 * plain_s / n, 1),
+        "speedup_vs_no_l1": round(plain_s / l1_s, 2),
+        "l1_hit_rate": round((with_l1._l1_hits - h0) / n, 3),
+        "stale_rate_ttl": round((with_l1._stale_serves - s0) / n, 4),
+        "stale_rate_bypass": round(
+            bypass._stale_serves / max(bypass.t - b0, 1), 4),
+        "bypassed_volatile": bypass._l1_bypass,
+        "ttl_evictions": with_l1._ttl_evictions - e0,
+        "requests": n, "batch": BATCH, "d": D,
+    }
+
+
+def run(scale: str = "small"):
+    from repro.embedding.embedder import Embedder
+    n = 512 if scale == "small" else 4096
+    embed = Embedder(d_out=D)
+    return [_bench_one(r, v, n, embed) for r in REPEAT_RATES
+            for v in VOLATILE_FRACS]
+
+
+def smoke() -> None:
+    """CI gate (scripts/ci.sh): the three freshness invariants on live
+    traffic — bypass means zero stale serves, the L1 front tier is
+    decision-invisible on non-repeat traffic, and pure repeats never
+    reach the embedder."""
+    from repro.embedding.embedder import Embedder
+
+    rng = np.random.default_rng(3)
+    base = Embedder(d_out=D)
+    calls = {"n": 0}
+
+    class CountingEmbedder:
+        def __call__(self, p):
+            calls["n"] += 1
+            return base(p)
+
+        def batch(self, ps):
+            calls["n"] += len(ps)
+            return base.batch(ps)
+
+    embed = CountingEmbedder()
+    fresh = FreshnessPolicy(volatile_bypass=True, ttl_volatile=16,
+                            ttl_stable=0, ttl_unknown=0,
+                            drift_every=32)
+
+    # 1) zero stale serves with volatile bypass on, repeat-heavy stream
+    prompts = _trace(320, 0.7, 0.4, rng)
+    pol = _mk_policy(embed, 4096, fresh)
+    _drive(pol, prompts)
+    assert pol._stale_serves == 0, \
+        f"{pol._stale_serves} stale serves under volatile bypass"
+    assert pol._l1_bypass > 0, "smoke stream produced no volatile traffic"
+    assert pol._l1_hits > 0, "smoke stream produced no L1 hits"
+    n_bypassed, n_l1_hits = pol._l1_bypass, pol._l1_hits
+
+    # 2) decision agreement 1.0 vs the no-L1 twin on non-repeat traffic
+    distinct = _trace(128, 0.0, 0.3, rng)
+    with_l1 = _mk_policy(embed, 4096, fresh)
+    no_l1 = _mk_policy(embed, None, fresh)
+    dec = [[(r.served_by, str(r.answer), bool(r.static_origin),
+             round(float(r.similarity), 5)) for r in p.serve_batch(distinct)]
+           for p in (with_l1, no_l1)]
+    agree = sum(a == b for a, b in zip(*dec)) / len(distinct)
+    assert agree == 1.0, f"decision agreement {agree} < 1.0"
+    assert with_l1._l1_hits == 0, "non-repeat stream hit L1"
+
+    # 3) zero embedder calls on the repeated suffix of a pure-repeat run
+    uniq = [_mk_prompt(i, False) for i in range(24)]
+    pol = _mk_policy(embed, 4096, None)
+    pol.serve_batch(uniq)
+    n0 = calls["n"]
+    for _ in range(3):
+        pol.serve_batch(uniq)
+    assert calls["n"] == n0, \
+        f"pure repeats paid {calls['n'] - n0} embedder calls"
+    print(f"[OK] l1_freshness smoke: bypassed={n_bypassed} "
+          f"agreement={agree:.3f} l1_hits={n_l1_hits} "
+          f"embed_calls_on_repeats=0")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=["small", "full"], default="small")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: zero stale serves under bypass + "
+                         "decision-agreement-1.0 + zero-embed repeats")
+    a = ap.parse_args()
+    if a.smoke:
+        smoke()
+    else:
+        for r in run(scale=a.scale):
+            print(r)

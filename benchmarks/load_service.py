@@ -197,7 +197,8 @@ def run_load(client: ServeClient, qps: float, duration_s: float, *,
 
     # windowed aggregation off the scheduled (open-loop) timeline
     n_win = max(1, int(np.ceil(duration_s / window_s)))
-    wins = [{"lat": [], "by": {"static": 0, "dynamic": 0, "backend": 0}}
+    wins = [{"lat": [], "stale": 0, "promoted": 0,
+             "by": {"l1": 0, "static": 0, "dynamic": 0, "backend": 0}}
             for _ in range(n_win)]
     lost = 0
     for k, p in enumerate(pend):
@@ -206,7 +207,14 @@ def run_load(client: ServeClient, qps: float, duration_s: float, *,
             continue
         w = wins[min(int((p.sched - start) / window_s), n_win - 1)]
         w["lat"].append(p.recv_t - p.sched)
-        w["by"][p.reply["served_by"]] += 1
+        by = p.reply["served_by"]
+        w["by"][by] = w["by"].get(by, 0) + 1
+        w["stale"] += bool(p.reply.get("stale"))
+        # dynamic hits serving promoted (static-origin) content — the
+        # per-window hit-source attribution splits the dynamic tier by
+        # content origin (DESIGN.md §16)
+        w["promoted"] += (by == "dynamic"
+                          and bool(p.reply.get("static_origin")))
     windows = []
     for i, w in enumerate(wins):
         m = sum(w["by"].values())
@@ -218,11 +226,14 @@ def run_load(client: ServeClient, qps: float, duration_s: float, *,
             if len(lat) else None,
             "p99_ms": round(1e3 * float(np.percentile(lat, 99)), 2)
             if len(lat) else None,
+            "l1_rate": round(w["by"]["l1"] / m, 3) if m else None,
             "static_rate": round(w["by"]["static"] / m, 3) if m else None,
             "dynamic_rate": round(w["by"]["dynamic"] / m, 3)
             if m else None,
+            "promoted_rate": round(w["promoted"] / m, 3) if m else None,
             "backend_rate": round(w["by"]["backend"] / m, 3)
             if m else None,
+            "stale_rate": round(w["stale"] / m, 3) if m else None,
         })
     lat_all = np.asarray([p.recv_t - p.sched for p in pend
                           if p.reply is not None])
@@ -245,7 +256,8 @@ def _drift(windows):
         return None
     a, b = full[0], full[-1]
     return {k: round(b[k] - a[k], 3)
-            for k in ("static_rate", "dynamic_rate", "backend_rate")}
+            for k in ("l1_rate", "static_rate", "dynamic_rate",
+                      "backend_rate")}
 
 
 # ---------------------------------------------------------------------------

@@ -50,4 +50,12 @@ echo "== live service smoke (load -> snapshot -> kill -> warm restart) =="
 # asserts the restart comes back warm (DESIGN.md §14)
 python -m benchmarks.load_service --smoke
 
+echo "== L1 + freshness smoke (bypass -> zero stale, agreement 1.0) =="
+# the property/live-policy suite (tests/test_l1_freshness.py) runs in
+# tier-1 above; this smoke gates the serving invariants on real
+# embedder traffic: volatile bypass => zero stale serves, the L1 front
+# tier decision-invisible on non-repeat traffic, and pure repeats
+# costing zero embedder calls (DESIGN.md §16)
+python -m benchmarks.l1_freshness --smoke
+
 echo "== CI OK =="

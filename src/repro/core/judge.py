@@ -28,8 +28,11 @@ class OracleJudge:
     contract).
     """
 
-    def __init__(self, require_texts: bool = False):
+    def __init__(self, require_texts: bool = False, freshness=None):
         self.require_texts = require_texts
+        # a core.freshness.FreshnessPolicy; when given, this judge also
+        # emits a per-entry TTL verdict alongside every approval
+        self.freshness = freshness
 
     def __call__(self, q_cls: int, h_cls: int, q_text: str = "",
                  h_text: str = "", answer: str = "") -> bool:
@@ -38,6 +41,17 @@ class OracleJudge:
                 f"judge payload missing verification texts: "
                 f"q_text={q_text!r} h_text={h_text!r} answer={answer!r}")
         return int(q_cls) == int(h_cls)
+
+    def assign_ttl(self, q_text: str = "", h_text: str = "",
+                   answer: str = "") -> int:
+        """TTL verdict for an approved promotion (DESIGN.md §16): how
+        many request ticks the promoted entry should live, judged from
+        the query's staleness-risk class (0 = unbounded). The verdict
+        rides the promotion payload into the WAL and the dynamic
+        tier's ``expires_at`` column."""
+        if self.freshness is None:
+            return 0
+        return int(self.freshness.ttl_for_text(q_text or h_text))
 
 
 @dataclass

@@ -256,9 +256,12 @@ def replay_into(policy, path: str | Path, *, skip: int = 0) -> dict:
         if int(rec.get("seq", i + 1)) <= skip:
             skipped += 1
             continue
+        # the record's TTL verdict (0 = unbounded) reconstructs the same
+        # expires_at on replay: expiry anchors at enq_t, which is here
         policy._promote({"v": decode_vector(rec),
                          "h_idx": int(rec["h_idx"]),
-                         "enq_t": int(rec["enq_t"])}, journal=False)
+                         "enq_t": int(rec["enq_t"]),
+                         "ttl": int(rec.get("ttl", 0))}, journal=False)
         replayed += 1
     return {"records": len(records), "skipped": skipped,
             "replayed": replayed, "clean": clean}

@@ -44,7 +44,12 @@ import numpy as np
 from repro.core import tiers as T
 
 # served-by codes in the event stream
-MISS, STATIC_HIT, DYN_HIT_DYNAMIC, DYN_HIT_PROMOTED = 0, 1, 2, 3
+MISS, STATIC_HIT, DYN_HIT_DYNAMIC, DYN_HIT_PROMOTED, L1_HIT = 0, 1, 2, 3, 4
+
+# "never expires" sentinel for the sim's L1 expiry column (0 = empty
+# slot, so an unbounded entry needs a finite stand-in; request clocks
+# are bounded by the trace length, far below 2**30)
+_L1_NEVER = jnp.int32(1 << 30)
 
 
 class SimState(NamedTuple):
@@ -57,6 +62,12 @@ class SimState(NamedTuple):
     trace, so at completion time it is re-gathered from the trace at
     index t - judge_latency. This keeps the carry small and the per-step
     ring traffic to one column write + one gather.
+
+    The L1 exact-match front (DESIGN.md §16) carries four (K, nk)
+    columns keyed by the trace's ``key_id`` (nk = number of distinct
+    exact-duplicate keys; 1 when L1 is off): the entry's expiry clock
+    (0 = empty), the content clock its answer was produced at (the
+    drift-staleness epoch), and the stored correctness/provenance bits.
     """
     dyn: T.DynamicTier   # batched: (K, C, d) / (K, C) leaves
     ring: jax.Array      # (K, R) bool enqueue bits
@@ -66,16 +77,25 @@ class SimState(NamedTuple):
     judge_approved: jax.Array  # (K,)
     promotions: jax.Array      # (K,)
     enq_dropped: jax.Array     # (K,)
+    l1_exp: jax.Array          # (K, nk) i32 expiry (0 = empty slot)
+    l1_w: jax.Array            # (K, nk) i32 content clock
+    l1_ok: jax.Array           # (K, nk) bool stored correctness
+    l1_so: jax.Array           # (K, nk) bool stored static_origin
+    ttl_evicted: jax.Array     # (K,) dynamic entries dead by expiry
+    bypassed: jax.Array        # (K,) volatile requests sent straight back
 
 
 class SimResult(NamedTuple):
     served_by: jax.Array        # (N,) int8 event codes ((K, N) for sweeps)
     correct: jax.Array          # (N,) bool (True for misses too)
     static_origin: jax.Array    # (N,) bool — curated answer served
-    judge_calls: jax.Array
+    stale: jax.Array            # (N,) bool — hit served across a drift
+    judge_calls: jax.Array      # epoch (freshness accounting, §16)
     judge_approved: jax.Array
     promotions: jax.Array
     enq_dropped: jax.Array
+    ttl_evicted: jax.Array
+    bypassed: jax.Array
 
 
 class SweepConfig(NamedTuple):
@@ -93,6 +113,10 @@ class SweepConfig(NamedTuple):
     judge_latency: jax.Array  # (K,) i32, each <= static ring size
     krites: jax.Array        # (K,) bool
     dedup: jax.Array         # (K,) bool — skip judging on promoted hits
+    l1: jax.Array            # (K,) bool — exact-match front tier on
+    volatile_bypass: jax.Array  # (K,) bool — volatile queries skip cache
+    ttl_volatile: jax.Array  # (K,) i32 entry lifetime, volatile queries
+    ttl_stable: jax.Array    # (K,) i32 entry lifetime, everything else
 
     @property
     def n(self) -> int:
@@ -115,6 +139,12 @@ def sweep_from_configs(cfgs: Sequence[T.CacheConfig],
                                   jnp.int32),
         krites=jnp.asarray(kr),
         dedup=jnp.asarray([c.dedup for c in cfgs], bool),
+        l1=jnp.asarray([c.l1 for c in cfgs], bool),
+        volatile_bypass=jnp.asarray([c.volatile_bypass for c in cfgs],
+                                    bool),
+        ttl_volatile=jnp.asarray([c.ttl_volatile for c in cfgs],
+                                 jnp.int32),
+        ttl_stable=jnp.asarray([c.ttl_stable for c in cfgs], jnp.int32),
     )
 
 
@@ -157,20 +187,23 @@ def _make_batched_tier(K: int, C: int, d: int) -> T.DynamicTier:
         valid=jnp.zeros((K, C), bool),
         last_used=jnp.zeros((K, C), jnp.int32),
         written_at=jnp.zeros((K, C), jnp.int32),
+        expires_at=jnp.zeros((K, C), jnp.int32),
     )
 
 
-def _lru_slots(valid, last_used, cap) -> jax.Array:
-    """Batched :func:`tiers._lru_slot`: first invalid row, else LRU,
-    restricted to rows [0, cap_k) per config. (K,) int32."""
-    C = valid.shape[1]
-    key = jnp.where(valid, last_used, -T.BIG)
+def _lru_slots(live, last_used, cap) -> jax.Array:
+    """Batched :func:`tiers._lru_slot`: first non-live row, else LRU,
+    restricted to rows [0, cap_k) per config. (K,) int32. ``live`` is
+    validity net of per-entry expiry (an expired row is reclaimable,
+    exactly like the live policy after its eager sweep)."""
+    C = live.shape[1]
+    key = jnp.where(live, last_used, -T.BIG)
     key = jnp.where(jnp.arange(C)[None, :] < cap[:, None], key, T.BIG)
     return jnp.argmin(key, axis=1).astype(jnp.int32)
 
 
 def _row_write(dyn: T.DynamicTier, ks, slot, cond, q, cls, ref, so,
-               now, wa=None) -> T.DynamicTier:
+               now, wa=None, exp=0) -> T.DynamicTier:
     """Conditionally write one tier row per config: semantically
     ``jnp.where(cond, T._write(...), dyn)`` but touching a single row per
     field (a K-row scatter) instead of copying whole tiers — the
@@ -180,7 +213,8 @@ def _row_write(dyn: T.DynamicTier, ks, slot, cond, q, cls, ref, so,
     scalar; ``cond``/``slot`` are (K,). ``now`` stamps the LRU clock;
     ``wa`` (default ``now``) stamps ``written_at`` — promotions pass
     their *enqueue* time so the LWW guard clock matches the live
-    policy's while the LRU clock stays the apply time."""
+    policy's while the LRU clock stays the apply time. ``exp`` ((K,) or
+    scalar) stamps the per-entry expiry clock (0 = never)."""
     qk = jnp.broadcast_to(q, dyn.emb.shape[:1] + dyn.emb.shape[2:])
     cond2 = cond[:, None]
 
@@ -200,24 +234,41 @@ def _row_write(dyn: T.DynamicTier, ks, slot, cond, q, cls, ref, so,
         valid=upd(dyn.valid, True),
         last_used=upd(dyn.last_used, now),
         written_at=upd(dyn.written_at, now if wa is None else wa),
+        expires_at=upd(dyn.expires_at,
+                       jnp.broadcast_to(jnp.asarray(exp, jnp.int32),
+                                        ks.shape)),
     )
 
 
 def _scan_core(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
+               volatile, key_id,
                tau_s, tau_d, sigma, rate, cap, lat, kr, dd,
-               C: int, R: int) -> SimResult:
+               l1f, vbp, ttl_v, ttl_s,
+               C: int, R: int, D: int, nk: int,
+               use_l1: bool, use_ttl: bool) -> SimResult:
     """All K configs' full-trace scan, in explicit batched form — the
     general path that supports *per-config* judge_latency (uniform
     sweeps take :func:`_scan_core_blocked` instead).
 
     Config scalars arrive as (K,) traced arrays; only shapes (K, C, R,
-    trace length) are static. Each step does one
-    serving lookup (one gemv over the batched tier, shared query) and
-    one promotion-dedup lookup (batched per-config queries). The tier
-    row promoted this step is excluded from the shared pre-write pass
-    and patched back in as one O(d) candidate, which reproduces the
-    post-write argmax exactly (lowest-index tie-break included). See
-    DESIGN.md §10.
+    nk, trace length) and the feature gates (D, use_l1, use_ttl) are
+    static — with every freshness feature off, the compiled program is
+    the pre-§16 one. Each step does one serving lookup (one gemv over
+    the batched tier, shared query) and one promotion-dedup lookup
+    (batched per-config queries). The tier row promoted this step is
+    excluded from the shared pre-write pass and patched back in as one
+    O(d) candidate, which reproduces the post-write argmax exactly
+    (lowest-index tie-break included). See DESIGN.md §10.
+
+    Freshness semantics (§16), matching the live policy and the numpy
+    reference: per-entry expiry is *lazy* — an entry with
+    ``0 < expires_at < t`` is masked from every lookup and becomes an
+    immediate LRU reclaim candidate, which is observationally identical
+    to the live policy's eager sweep; ``ttl_evicted`` counts each such
+    death once, at its first expired step. Volatile bypass serves the
+    backend with no cache side effects at all; an L1 hit serves the
+    stored answer with no tier traffic; both are decided before the
+    semantic path.
     """
     N, d = q_emb.shape
     K = tau_s.shape[0]
@@ -233,12 +284,36 @@ def _scan_core(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
         judge_approved=jnp.zeros((K,), jnp.int32),
         promotions=jnp.zeros((K,), jnp.int32),
         enq_dropped=jnp.zeros((K,), jnp.int32),
+        l1_exp=jnp.zeros((K, nk), jnp.int32),
+        l1_w=jnp.zeros((K, nk), jnp.int32),
+        l1_ok=jnp.zeros((K, nk), bool),
+        l1_so=jnp.zeros((K, nk), bool),
+        ttl_evicted=jnp.zeros((K,), jnp.int32),
+        bypassed=jnp.zeros((K,), jnp.int32),
     )
 
+    def epoch(x):
+        return x // D
+
     def step(st: SimState, xs):
-        q, qc, ss, hc = xs
+        q, qc, ss, hc, vol, kid = xs
         t = st.t
         dyn = st.dyn
+
+        # ---- 0. per-entry expiry: the lazy mask + the once-per-death
+        # eviction count (an entry dies the first step past its expiry;
+        # counted before any write can reuse its slot this step)
+        if use_ttl:
+            exp = dyn.expires_at
+            live = jnp.logical_and(
+                dyn.valid, jnp.logical_or(exp == 0, t <= exp))
+            ttl_evicted = st.ttl_evicted + jnp.sum(
+                jnp.logical_and(dyn.valid,
+                                jnp.logical_and(exp > 0, t == exp + 1)),
+                axis=1).astype(jnp.int32)
+        else:
+            live = dyn.valid
+            ttl_evicted = st.ttl_evicted
 
         # ---- 1. async completion due now. The task due at step t is the
         # one enqueued at t - latency (exactly one candidate per step:
@@ -261,22 +336,52 @@ def _scan_core(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
 
         # inlined T.upsert semantics (dedup overwrite + LWW guard) as one
         # conditional K-row write, on the pre-write tier
-        s_promo = jnp.where(dyn.valid, s_promo_raw, -jnp.inf)
+        s_promo = jnp.where(live, s_promo_raw, -jnp.inf)
         j_dup = jnp.argmax(s_promo, axis=1)
         dup = jnp.take_along_axis(s_promo, j_dup[:, None], 1)[:, 0] \
             >= 0.9999
-        pslot = jnp.where(dup, j_dup, _lru_slots(dyn.valid,
+        pslot = jnp.where(dup, j_dup, _lru_slots(live,
                                                  dyn.last_used, cap))
         # LWW guard against the task's *enqueue* time (idx_due), and the
         # promotion's own written_at records that enqueue time, while its
         # LRU clock is the apply step t — the live `_promote` clock split
-        stale = jnp.logical_and(dup, dyn.written_at[ks, j_dup] > idx_due)
-        do_promote = jnp.logical_and(approve, ~stale)
+        stale_w = jnp.logical_and(dup,
+                                  dyn.written_at[ks, j_dup] > idx_due)
+        do_promote = jnp.logical_and(approve, ~stale_w)
+        if use_ttl:
+            # the judge's TTL verdict: expiry anchors at enqueue time
+            # (it is what the promotion WAL records); a verdict that
+            # outlived its own TTL is dropped, like the live _promote
+            tau_p = jnp.where(volatile[src], ttl_v, ttl_s)
+            exp_p = jnp.where(tau_p > 0, idx_due + tau_p, 0)
+            do_promote = jnp.logical_and(
+                do_promote,
+                ~jnp.logical_and(exp_p > 0, exp_p < t))
+        else:
+            exp_p = jnp.zeros((K,), jnp.int32)
         dyn = _row_write(dyn, ks, pslot, do_promote, promo_qk, p_hc,
-                         p_hr, True, t, wa=idx_due)
+                         p_hr, True, t, wa=idx_due, exp=exp_p)
         judge_calls = st.judge_calls + due.astype(jnp.int32)
         judge_approved = st.judge_approved + approve.astype(jnp.int32)
         promotions = st.promotions + approve.astype(jnp.int32)
+
+        # ---- 1b. freshness front: volatile bypass, then the L1 exact-
+        # match probe — both decided before the semantic path, with no
+        # tier traffic (matching the live serve() ordering)
+        byp = jnp.logical_and(vbp, vol)                     # (K,)
+        if use_l1:
+            le = st.l1_exp[:, kid]                          # (K,)
+            l1hit = jnp.logical_and(
+                l1f, jnp.logical_and(~byp,
+                                     jnp.logical_and(le > 0, t <= le)))
+            l1_ok_col = st.l1_ok[:, kid]
+            l1_so_col = st.l1_so[:, kid]
+            l1_w_col = st.l1_w[:, kid]
+        else:
+            l1hit = jnp.zeros((K,), bool)
+            l1_ok_col = l1_so_col = jnp.zeros((K,), bool)
+            l1_w_col = jnp.zeros((K,), jnp.int32)
+        front = jnp.logical_or(byp, l1hit)
 
         # ---- 2. serving path (identical for baseline and Krites).
         # The shared sims are pre-promotion: mask out the row just
@@ -286,7 +391,7 @@ def _scan_core(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
         # tie-breaking, because the candidate is the only changed row.
         promoted_col = jnp.logical_and(
             do_promote[:, None], jnp.arange(C)[None, :] == pslot[:, None])
-        s_serve = jnp.where(jnp.logical_and(dyn.valid, ~promoted_col),
+        s_serve = jnp.where(jnp.logical_and(live, ~promoted_col),
                             s_serve_raw, -jnp.inf)
         j0 = jnp.argmax(s_serve, axis=1)
         s0 = jnp.take_along_axis(s_serve, j0[:, None], 1)[:, 0]
@@ -298,33 +403,86 @@ def _scan_core(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
         s_dyn = jnp.where(cand, patch_sim, s0)
         j_dyn = jnp.where(cand, pslot, j0).astype(jnp.int32)
 
-        static_hit = ss >= tau_s
-        dyn_hit = jnp.logical_and(~static_hit, s_dyn >= tau_d)
-        miss = jnp.logical_and(~static_hit, ~dyn_hit)
+        static_hit_sem = ss >= tau_s
+        dyn_hit_sem = jnp.logical_and(~static_hit_sem, s_dyn >= tau_d)
+        static_hit = jnp.logical_and(static_hit_sem, ~front)
+        dyn_hit = jnp.logical_and(dyn_hit_sem, ~front)
+        miss_wb = jnp.logical_and(
+            ~front, jnp.logical_and(~static_hit_sem, ~dyn_hit_sem))
 
+        cls_j = dyn.cls[ks, j_dyn]
+        wa_j = dyn.written_at[ks, j_dyn]
         served_cls = jnp.where(static_hit, hc,
-                               jnp.where(dyn_hit, dyn.cls[ks, j_dyn], qc))
+                               jnp.where(dyn_hit, cls_j, qc))
         is_promoted = jnp.logical_and(dyn_hit,
                                       dyn.static_origin[ks, j_dyn])
         served_by = jnp.where(
-            static_hit, STATIC_HIT,
-            jnp.where(is_promoted, DYN_HIT_PROMOTED,
-                      jnp.where(dyn_hit, DYN_HIT_DYNAMIC, MISS))
-        ).astype(jnp.int8)
-        correct = served_cls == qc
-        static_origin = jnp.logical_or(static_hit, is_promoted)
+            l1hit, L1_HIT,
+            jnp.where(static_hit, STATIC_HIT,
+                      jnp.where(is_promoted, DYN_HIT_PROMOTED,
+                                jnp.where(dyn_hit, DYN_HIT_DYNAMIC,
+                                          MISS)))).astype(jnp.int8)
+        correct = jnp.where(l1hit, l1_ok_col, served_cls == qc)
+        static_origin = jnp.where(
+            l1hit, l1_so_col, jnp.logical_or(static_hit, is_promoted))
+
+        # drift staleness: a volatile query served content produced in
+        # an earlier drift epoch (static corpus content is epoch 0;
+        # backend answers are current by definition)
+        if D > 0:
+            stale = jnp.logical_and(vol, jnp.where(
+                l1hit, epoch(t) != epoch(l1_w_col),
+                jnp.where(static_hit, epoch(t) != 0,
+                          jnp.where(dyn_hit, epoch(t) != epoch(wa_j),
+                                    False))))
+        else:
+            stale = jnp.zeros((K,), bool)
 
         # LRU touch on dynamic hit (single-row conditional update)
         dyn = dyn._replace(last_used=dyn.last_used.at[ks, j_dyn].set(
             jnp.where(dyn_hit, t, dyn.last_used[ks, j_dyn])))
-        # baseline write-back on miss (backend answer has the query's class)
+        # baseline write-back on miss (backend answer has the query's
+        # class); its lifetime is the query's staleness-risk TTL
+        if use_ttl:
+            live2 = jnp.logical_and(
+                dyn.valid, jnp.logical_or(dyn.expires_at == 0,
+                                          t <= dyn.expires_at))
+            tau_q = jnp.where(vol, ttl_v, ttl_s)
+            exp_i = jnp.where(tau_q > 0, t + tau_q, 0)
+        else:
+            live2 = dyn.valid
+            tau_q = jnp.zeros((K,), jnp.int32)
+            exp_i = jnp.zeros((K,), jnp.int32)
         dyn = _row_write(dyn, ks,
-                         _lru_slots(dyn.valid, dyn.last_used, cap),
-                         miss, q, qc, jnp.int32(-1), False, t)
+                         _lru_slots(live2, dyn.last_used, cap),
+                         miss_wb, q, qc, jnp.int32(-1), False, t,
+                         exp=exp_i)
 
-        # ---- 3. grey-zone trigger (Krites only; off-path) ----
+        # ---- 2b. L1 write-back: every semantic serve lands in the L1
+        # under the query's exact key (never refreshed by later hits —
+        # the stored content clock is what staleness is judged against)
+        if use_l1:
+            do_l1w = jnp.logical_and(
+                l1f, jnp.logical_and(~byp, ~l1hit))
+            content_t = jnp.where(static_hit, 0,
+                                  jnp.where(dyn_hit, wa_j, t))
+            exp_l1 = jnp.where(tau_q > 0, t + tau_q, _L1_NEVER)
+            l1_exp = st.l1_exp.at[:, kid].set(
+                jnp.where(do_l1w, exp_l1, st.l1_exp[:, kid]))
+            l1_w = st.l1_w.at[:, kid].set(
+                jnp.where(do_l1w, content_t, l1_w_col))
+            l1_ok = st.l1_ok.at[:, kid].set(
+                jnp.where(do_l1w, correct, l1_ok_col))
+            l1_so = st.l1_so.at[:, kid].set(
+                jnp.where(do_l1w, static_origin, l1_so_col))
+        else:
+            l1_exp, l1_w = st.l1_exp, st.l1_w
+            l1_ok, l1_so = st.l1_ok, st.l1_so
+
+        # ---- 3. grey-zone trigger (Krites only; off-path). Front-
+        # resolved requests never embed, so they can never trigger.
         grey = jnp.logical_and(ss >= sigma, ss < tau_s)
-        want = jnp.logical_and(grey, kr)
+        want = jnp.logical_and(jnp.logical_and(grey, kr), ~front)
         # dedup: skip if a promoted pointer already serves this query
         want = jnp.logical_and(
             want, ~jnp.logical_and(
@@ -341,27 +499,34 @@ def _scan_core(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
             judge_calls=judge_calls, judge_approved=judge_approved,
             promotions=promotions,
             enq_dropped=st.enq_dropped
-            + jnp.logical_and(want, ~can).astype(jnp.int32))
-        return new_state, (served_by, correct, static_origin)
+            + jnp.logical_and(want, ~can).astype(jnp.int32),
+            l1_exp=l1_exp, l1_w=l1_w, l1_ok=l1_ok, l1_so=l1_so,
+            ttl_evicted=ttl_evicted,
+            bypassed=st.bypassed + byp.astype(jnp.int32))
+        return new_state, (served_by, correct, static_origin, stale)
 
     # the pending-queue payloads (h_idx, judge_flip, classes) are
     # re-gathered from the closed-over trace at completion time, so the
     # per-step xs carry only what the serving decision itself reads
-    xs = (q_emb, q_cls, s_static, h_cls)
-    final, (served_by, correct, static_origin) = jax.lax.scan(
+    xs = (q_emb, q_cls, s_static, h_cls, volatile, key_id)
+    final, (served_by, correct, static_origin, stale) = jax.lax.scan(
         step, state, xs)
     # ys stack as (N, K): transpose to the (K, N) config-major layout
-    return SimResult(served_by.T, correct.T, static_origin.T,
+    return SimResult(served_by.T, correct.T, static_origin.T, stale.T,
                      final.judge_calls, final.judge_approved,
-                     final.promotions, final.enq_dropped)
+                     final.promotions, final.enq_dropped,
+                     final.ttl_evicted, final.bypassed)
 
 
 _BLOCK = 64  # blocked-core window; per-block sims buffer = 2*B*K*C fp32
 
 
 def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
+                       volatile, key_id,
                        tau_s, tau_d, sigma, rate, cap, lat, kr, dd,
-                       C: int, R: int) -> SimResult:
+                       l1f, vbp, ttl_v, ttl_s,
+                       C: int, R: int, D: int, nk: int,
+                       use_l1: bool, use_ttl: bool) -> SimResult:
     """Blocked variant of :func:`_scan_core` for the common case where
     every swept config shares one judge_latency.
 
@@ -386,6 +551,13 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
     and the gemms run at matmul (not gemv) throughput — this is what
     buys the sweep its order-of-magnitude over the sequential loop
     (benchmarks/sweep.py).
+
+    Freshness (§16): expiry is a third per-row carry ``expw`` (the
+    window-current ``expires_at``, alive only when ``use_ttl``) because
+    liveness must be consulted at every lookup/LRU decision; the L1
+    front carries its four (K, nk) columns across steps like the
+    stepwise core. All of it is gated on static flags so a
+    freshness-free sweep compiles to the original program.
     """
     N, d = q_emb.shape
     K = tau_s.shape[0]
@@ -400,6 +572,8 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
     h_cls_p = jnp.pad(h_cls, (0, pad))
     h_idx_p = jnp.pad(h_idx, (0, pad))
     flip_p = jnp.pad(judge_flip, (0, pad))
+    vol_p = jnp.pad(volatile, (0, pad))
+    kid_p = jnp.pad(key_id, (0, pad))
     ss_p = jnp.pad(s_static, (0, pad), constant_values=-jnp.inf)
     # front-padded twins so the delayed window t0-lat .. t0+B-1-lat can be
     # dynamic-sliced with a nonnegative start (R >= lat); the zero rows
@@ -409,6 +583,7 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
     hc_del_src = jnp.concatenate([jnp.zeros((R,), jnp.int32), h_cls_p])
     hr_del_src = jnp.concatenate([jnp.zeros((R,), jnp.int32), h_idx_p])
     fl_del_src = jnp.concatenate([jnp.zeros((R,), bool), flip_p])
+    vl_del_src = jnp.concatenate([jnp.zeros((R,), bool), vol_p])
 
     state = SimState(
         dyn=_make_batched_tier(K, C, d),
@@ -419,12 +594,21 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
         judge_approved=jnp.zeros((K,), jnp.int32),
         promotions=jnp.zeros((K,), jnp.int32),
         enq_dropped=jnp.zeros((K,), jnp.int32),
+        l1_exp=jnp.zeros((K, nk), jnp.int32),
+        l1_w=jnp.zeros((K, nk), jnp.int32),
+        l1_ok=jnp.zeros((K, nk), bool),
+        l1_so=jnp.zeros((K, nk), bool),
+        ttl_evicted=jnp.zeros((K,), jnp.int32),
+        bypassed=jnp.zeros((K,), jnp.int32),
     )
 
     iota_c = jnp.arange(C)[None, :]
 
+    def epoch(x):
+        return x // D
+
     def block(st: SimState, xs):
-        qb, qcb, ssb, hcb = xs               # (B, ...) current window
+        qb, qcb, ssb, hcb, volb, kidb = xs   # (B, ...) current window
         t0 = st.t
         dyn = st.dyn
 
@@ -435,6 +619,7 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
         p_hc = jax.lax.dynamic_slice(hc_del_src, (start,), (B,))
         p_hr = jax.lax.dynamic_slice(hr_del_src, (start,), (B,))
         p_fl = jax.lax.dynamic_slice(fl_del_src, (start,), (B,))
+        p_vl = jax.lax.dynamic_slice(vl_del_src, (start,), (B,))
 
         qstack = jnp.concatenate([qb, q_del])            # (2B, d)
         snap = (qstack @ dyn.emb.reshape(K * C, d).T
@@ -453,6 +638,12 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
                                   dyn.written_at)
         key0 = jnp.where(iota_c < cap[:, None],
                          jnp.where(valid0, dyn.last_used, -T.BIG), T.BIG)
+        # window-current expiry carry (only consulted when use_ttl): a
+        # real (K, C) carry rather than a dqi-derivation because every
+        # lookup and LRU decision reads liveness, and the write points
+        # already update key/dqi at the same spots
+        exp0 = dyn.expires_at if use_ttl \
+            else jnp.zeros((K, 1), jnp.int32)
 
         def wa_of(dqi_row, wa_snap):
             """Current written_at of gathered rows. A miss row written
@@ -465,14 +656,24 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
             return jnp.where(dqi_row >= 0, wa_win, wa_snap)
 
         def step(carry, sxs):
-            key, dqi, ring, budget, jc, ja, pr, drop = carry
-            (s_idx, qc, ss, hc, snap_cur, snap_del, qq_cur, qq_del,
-             pqc, phc, phr, pfl) = sxs
+            (key, dqi, expw, ring, budget, jc, ja, pr, drop, tev, byc,
+             l1e, l1w, l1ok, l1so) = carry
+            (s_idx, qc, ss, hc, vol, kid, snap_cur, snap_del, qq_cur,
+             qq_del, pqc, phc, phr, pfl, pvl) = sxs
             t = t0 + s_idx
             active = t < N
             written = dqi >= 0
             dq = jnp.clip(dqi, 0)
             valid = jnp.logical_or(valid0, written)
+            if use_ttl:
+                live = jnp.logical_and(
+                    valid, jnp.logical_or(expw == 0, t <= expw))
+                tev = tev + jnp.where(active, jnp.sum(
+                    jnp.logical_and(valid, jnp.logical_and(
+                        expw > 0, t == expw + 1)),
+                    axis=1).astype(jnp.int32), 0)
+            else:
+                live = valid
 
             # ---- 1. async completion due now (= request t - latency) --
             idx_due = t - lat0
@@ -487,41 +688,81 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
             # rides in the same fused reduction as a -key lane: int32
             # keys here are {-BIG, lu <= N < 2^24, BIG}, all exact in
             # f32, and argmax(-key) keeps argmin's first-index tie-break.
-            s_promo = jnp.where(valid,
+            # Expired rows are masked from the dedup sims and demoted to
+            # immediate-reclaim (-BIG) in the key lane.
+            s_promo = jnp.where(live,
                                 jnp.where(written, qq_del[dq], snap_del),
                                 -jnp.inf)
-            both = jnp.stack([s_promo, -key.astype(jnp.float32)], 1)
+            if use_ttl:
+                key_eff = jnp.where(
+                    jnp.logical_and(key < T.BIG, ~live), -T.BIG, key)
+            else:
+                key_eff = key
+            both = jnp.stack([s_promo, -key_eff.astype(jnp.float32)], 1)
             jj = jnp.argmax(both, axis=2).astype(jnp.int32)   # (K, 2)
             j_dup = jj[:, 0]
             dup = jnp.take_along_axis(s_promo, j_dup[:, None], 1)[:, 0] \
                 >= 0.9999
             pslot = jnp.where(dup, j_dup, jj[:, 1])
-            stale = jnp.logical_and(
+            stale_w = jnp.logical_and(
                 dup, wa_of(dqi[ks, j_dup], wa0[ks, j_dup]) > idx_due)
-            do_promote = jnp.logical_and(approve, ~stale)
+            do_promote = jnp.logical_and(approve, ~stale_w)
+            if use_ttl:
+                tau_p = jnp.where(pvl, ttl_v, ttl_s)
+                exp_p = jnp.where(tau_p > 0, idx_due + tau_p, 0)
+                do_promote = jnp.logical_and(
+                    do_promote,
+                    ~jnp.logical_and(exp_p > 0, exp_p < t))
             p_hot = jnp.logical_and(do_promote[:, None],
                                     iota_c == pslot[:, None])
             key = jnp.where(p_hot, t, key)
             dqi = jnp.where(p_hot, B + s_idx, dqi)
+            if use_ttl:
+                expw = jnp.where(p_hot, exp_p[:, None], expw)
             written = dqi >= 0
             dq = jnp.clip(dqi, 0)
             valid = jnp.logical_or(valid0, written)
+            if use_ttl:
+                live = jnp.logical_and(
+                    valid, jnp.logical_or(expw == 0, t <= expw))
+            else:
+                live = valid
             jc = jc + due.astype(jnp.int32)
             ja = ja + approve.astype(jnp.int32)
             pr = pr + approve.astype(jnp.int32)
 
+            # ---- 1b. freshness front (bypass + L1 probe), decided
+            # before the semantic path like the live serve()
+            byp = jnp.logical_and(jnp.logical_and(vbp, vol), active)
+            if use_l1:
+                le = l1e[:, kid]
+                l1hit = jnp.logical_and(
+                    jnp.logical_and(l1f, active),
+                    jnp.logical_and(~byp, jnp.logical_and(le > 0,
+                                                          t <= le)))
+                l1_ok_col, l1_so_col = l1ok[:, kid], l1so[:, kid]
+                l1_w_col = l1w[:, kid]
+            else:
+                l1hit = jnp.zeros((K,), bool)
+                l1_ok_col = l1_so_col = jnp.zeros((K,), bool)
+                l1_w_col = jnp.zeros((K,), jnp.int32)
+            front = jnp.logical_or(byp, l1hit)
+
             # ---- 2. serving path (sees this step's promotion: dqi was
             # updated above, so the promoted row reads QQ, not snap) ----
-            s_serve = jnp.where(valid,
+            s_serve = jnp.where(live,
                                 jnp.where(written, qq_cur[dq], snap_cur),
                                 -jnp.inf)
             j_dyn = jnp.argmax(s_serve, axis=1).astype(jnp.int32)
             s_dyn = jnp.take_along_axis(s_serve, j_dyn[:, None], 1)[:, 0]
 
-            static_hit = ss >= tau_s
-            dyn_hit = jnp.logical_and(~static_hit, s_dyn >= tau_d)
+            static_hit = jnp.logical_and(ss >= tau_s, ~front)
+            dyn_hit = jnp.logical_and(
+                jnp.logical_and(~(ss >= tau_s), s_dyn >= tau_d), ~front)
             miss = jnp.logical_and(
-                active, jnp.logical_and(~static_hit, ~dyn_hit))
+                active, jnp.logical_and(
+                    ~front, jnp.logical_and(~(ss >= tau_s),
+                                            ~(s_dyn >= tau_d))))
             dyn_hit = jnp.logical_and(dyn_hit, active)
 
             # winning row's class/provenance, derived from dqi: window
@@ -532,31 +773,75 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
                               jnp.where(dqi_j < B, qcb[jnp.clip(w_j, 0)],
                                         p_hc[w_j]))
             so_j = jnp.where(dqi_j < 0, so0[ks, j_dyn], dqi_j >= B)
+            wa_j = wa_of(dqi_j, wa0[ks, j_dyn])
 
             served_cls = jnp.where(static_hit, hc,
                                    jnp.where(dyn_hit, cls_j, qc))
             is_promoted = jnp.logical_and(dyn_hit, so_j)
             served_by = jnp.where(
-                static_hit, STATIC_HIT,
-                jnp.where(is_promoted, DYN_HIT_PROMOTED,
-                          jnp.where(dyn_hit, DYN_HIT_DYNAMIC, MISS))
-            ).astype(jnp.int8)
-            correct = served_cls == qc
-            static_origin = jnp.logical_or(static_hit, is_promoted)
+                l1hit, L1_HIT,
+                jnp.where(static_hit, STATIC_HIT,
+                          jnp.where(is_promoted, DYN_HIT_PROMOTED,
+                                    jnp.where(dyn_hit, DYN_HIT_DYNAMIC,
+                                              MISS)))).astype(jnp.int8)
+            correct = jnp.where(l1hit, l1_ok_col, served_cls == qc)
+            static_origin = jnp.where(
+                l1hit, l1_so_col,
+                jnp.logical_or(static_hit, is_promoted))
+            if D > 0:
+                stale = jnp.logical_and(
+                    jnp.logical_and(vol, active), jnp.where(
+                        l1hit, epoch(t) != epoch(l1_w_col),
+                        jnp.where(static_hit, epoch(t) != 0,
+                                  jnp.where(dyn_hit,
+                                            epoch(t) != epoch(wa_j),
+                                            False))))
+            else:
+                stale = jnp.zeros((K,), bool)
 
-            # LRU touch, then write-back on miss
+            # LRU touch, then write-back on miss (with the query's
+            # staleness-risk TTL when the subsystem is on)
             key = jnp.where(jnp.logical_and(dyn_hit[:, None],
                                             iota_c == j_dyn[:, None]),
                             t, key)
-            islot = jnp.argmin(key, axis=1).astype(jnp.int32)
+            if use_ttl:
+                tau_q = jnp.where(vol, ttl_v, ttl_s)
+                key_eff = jnp.where(
+                    jnp.logical_and(key < T.BIG, ~live), -T.BIG, key)
+            else:
+                tau_q = jnp.zeros((K,), jnp.int32)
+                key_eff = key
+            islot = jnp.argmin(key_eff, axis=1).astype(jnp.int32)
             i_hot = jnp.logical_and(miss[:, None],
                                     iota_c == islot[:, None])
             key = jnp.where(i_hot, t, key)
             dqi = jnp.where(i_hot, s_idx, dqi)
+            if use_ttl:
+                exp_i = jnp.where(tau_q > 0, t + tau_q, 0)
+                expw = jnp.where(i_hot, exp_i[:, None], expw)
+
+            # ---- 2b. L1 write-back on every semantic serve ----
+            if use_l1:
+                do_l1w = jnp.logical_and(
+                    jnp.logical_and(l1f, active),
+                    jnp.logical_and(~byp, ~l1hit))
+                content_t = jnp.where(static_hit, 0,
+                                      jnp.where(dyn_hit, wa_j, t))
+                exp_l1 = jnp.where(tau_q > 0, t + tau_q, _L1_NEVER)
+                l1e = l1e.at[:, kid].set(
+                    jnp.where(do_l1w, exp_l1, l1e[:, kid]))
+                l1w = l1w.at[:, kid].set(
+                    jnp.where(do_l1w, content_t, l1_w_col))
+                l1ok = l1ok.at[:, kid].set(
+                    jnp.where(do_l1w, correct, l1_ok_col))
+                l1so = l1so.at[:, kid].set(
+                    jnp.where(do_l1w, static_origin, l1_so_col))
+            byc = byc + byp.astype(jnp.int32)
 
             # ---- 3. grey-zone trigger ----
             grey = jnp.logical_and(ss >= sigma, ss < tau_s)
             want = jnp.logical_and(jnp.logical_and(grey, kr), active)
+            want = jnp.logical_and(want, ~front)
             # dedup: skip if a promoted pointer already serves this query
             want = jnp.logical_and(
                 want, ~jnp.logical_and(
@@ -568,17 +853,19 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
             ring = ring.at[:, jnp.mod(t, R)].set(can)
             drop = drop + jnp.logical_and(want, ~can).astype(jnp.int32)
 
-            return ((key, dqi, ring, budget, jc, ja, pr, drop),
-                    (served_by, correct, static_origin))
+            return ((key, dqi, expw, ring, budget, jc, ja, pr, drop,
+                     tev, byc, l1e, l1w, l1ok, l1so),
+                    (served_by, correct, static_origin, stale))
 
-        carry0 = (key0, jnp.full((K, C), -1, jnp.int32),
+        carry0 = (key0, jnp.full((K, C), -1, jnp.int32), exp0,
                   st.ring, st.budget, st.judge_calls, st.judge_approved,
-                  st.promotions, st.enq_dropped)
-        sxs = (jnp.arange(B, dtype=jnp.int32), qcb, ssb, hcb,
+                  st.promotions, st.enq_dropped, st.ttl_evicted,
+                  st.bypassed, st.l1_exp, st.l1_w, st.l1_ok, st.l1_so)
+        sxs = (jnp.arange(B, dtype=jnp.int32), qcb, ssb, hcb, volb, kidb,
                snap[:B], snap[B:], qq[:B], qq[B:],
-               p_qc, p_hc, p_hr, p_fl)
-        (key, dqi, ring, budget, jc, ja, pr, drop), ys = jax.lax.scan(
-            step, carry0, sxs)
+               p_qc, p_hc, p_hr, p_fl, p_vl)
+        ((key, dqi, expw, ring, budget, jc, ja, pr, drop, tev, byc,
+          l1e, l1w, l1ok, l1so), ys) = jax.lax.scan(step, carry0, sxs)
 
         # materialize this window's row writes into the tier
         mask = dqi >= 0
@@ -595,6 +882,8 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
         wa_a = jnp.where(mask,
                          jnp.where(dqi < B, t0 + w, t0 + w - lat0), wa0)
         valid_a = jnp.logical_or(dyn.valid, mask)
+        # the expiry carry already reflects every write this window
+        exp_a = expw if use_ttl else dyn.expires_at
         # rows neither touched nor written kept their old clock; key holds
         # the new clock for everything else (sentinels mark untouched
         # invalid rows and rows beyond this config's capacity)
@@ -602,53 +891,70 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
                          key, dyn.last_used)
         new_dyn = T.DynamicTier(emb=emb, cls=cls_a, answer_ref=ref_a,
                                 static_origin=so_a, valid=valid_a,
-                                last_used=lu_a, written_at=wa_a)
+                                last_used=lu_a, written_at=wa_a,
+                                expires_at=exp_a)
         new_state = SimState(dyn=new_dyn, ring=ring, budget=budget,
                              t=t0 + B, judge_calls=jc, judge_approved=ja,
-                             promotions=pr, enq_dropped=drop)
+                             promotions=pr, enq_dropped=drop,
+                             l1_exp=l1e, l1_w=l1w, l1_ok=l1ok,
+                             l1_so=l1so, ttl_evicted=tev, bypassed=byc)
         return new_state, ys
 
     xs = tuple(a.reshape((NB // B, B) + a.shape[1:])
-               for a in (q_emb_p, q_cls_p, ss_p, h_cls_p))
-    final, (served_by, correct, static_origin) = jax.lax.scan(
+               for a in (q_emb_p, q_cls_p, ss_p, h_cls_p, vol_p, kid_p))
+    final, (served_by, correct, static_origin, stale) = jax.lax.scan(
         block, state, xs)
     # (nb, B, K) -> (K, N)
     unblock = lambda a: a.reshape(NB, K)[:N].T
     return SimResult(unblock(served_by), unblock(correct),
-                     unblock(static_origin),
+                     unblock(static_origin), unblock(stale),
                      final.judge_calls, final.judge_approved,
-                     final.promotions, final.enq_dropped)
+                     final.promotions, final.enq_dropped,
+                     final.ttl_evicted, final.bypassed)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("C", "R", "uniform_lat"))
+                   static_argnames=("C", "R", "uniform_lat", "D", "nk",
+                                    "use_l1", "use_ttl"))
 def _run_sweep(static_emb, static_cls, q_emb, q_cls, judge_flip,
-               sweep: SweepConfig, C: int, R: int,
-               uniform_lat: bool) -> SimResult:
+               volatile, key_id, sweep: SweepConfig, C: int, R: int,
+               uniform_lat: bool, D: int, nk: int, use_l1: bool,
+               use_ttl: bool) -> SimResult:
     # the hoisted static lookup is config-independent: computed once,
     # shared across every swept config
     s_static, h_idx = _static_sims(static_emb, q_emb)
     core = _scan_core_blocked if uniform_lat else _scan_core
     return core(s_static, static_cls[h_idx], h_idx, q_emb, q_cls,
-                judge_flip, sweep.tau_static, sweep.tau_dynamic,
+                judge_flip, volatile, key_id,
+                sweep.tau_static, sweep.tau_dynamic,
                 sweep.sigma_min, sweep.judge_rate, sweep.capacity,
                 sweep.judge_latency, sweep.krites, sweep.dedup,
-                C=C, R=R)
+                sweep.l1, sweep.volatile_bypass, sweep.ttl_volatile,
+                sweep.ttl_stable,
+                C=C, R=R, D=D, nk=nk, use_l1=use_l1, use_ttl=use_ttl)
 
 
 def simulate(static_emb, static_cls, q_emb, q_cls, cfg: T.CacheConfig,
              krites: bool, capacity: int | None = None,
-             judge_flip=None) -> SimResult:
+             judge_flip=None, volatile=None, key_id=None,
+             drift_every: int = 0) -> SimResult:
     """Run the policy over a request stream.
 
     static_emb (S, d) [normalized], static_cls (S,);
     q_emb (N, d) [normalized], q_cls (N,).
     judge_flip (N,) bool (optional): requests whose VerifyAndPromote is
     *falsely approved* regardless of class (noisy-verifier study, §5).
+    volatile (N,) bool (optional): time-sensitive requests — drives the
+    staleness accounting, the bypass, and the TTL class (§16).
+    key_id (N,) i32 (required when ``cfg.l1``): exact-duplicate key of
+    each request (equal ids = canonically identical prompts).
+    drift_every: ground-truth rotation period for volatile queries; a
+    hit serving content from an earlier epoch counts as stale.
 
     Config scalars are traced, so re-invoking with different thresholds
     (e.g. a tuning loop) reuses the compiled program; only shapes
-    (trace length, capacity, ring size) retrigger compilation.
+    (trace length, capacity, ring size) and the freshness feature gates
+    retrigger compilation.
     """
     import dataclasses
     C = capacity or cfg.capacity
@@ -656,14 +962,17 @@ def simulate(static_emb, static_cls, q_emb, q_cls, cfg: T.CacheConfig,
         cfg = dataclasses.replace(cfg, capacity=capacity)
     res = simulate_sweep(static_emb, static_cls, q_emb, q_cls,
                          sweep_from_configs([cfg], krites),
-                         judge_flip=judge_flip, max_capacity=C)
+                         judge_flip=judge_flip, max_capacity=C,
+                         volatile=volatile, key_id=key_id,
+                         drift_every=drift_every)
     return slice_config(res, 0)
 
 
 def simulate_sweep(static_emb, static_cls, q_emb, q_cls,
                    sweep: SweepConfig, judge_flip=None,
                    max_capacity: int | None = None,
-                   ring: int | None = None) -> SimResult:
+                   ring: int | None = None, volatile=None, key_id=None,
+                   drift_every: int = 0) -> SimResult:
     """Evaluate K configs over one request stream in a single dispatch.
 
     Returns a :class:`SimResult` whose every field carries a leading
@@ -675,6 +984,9 @@ def simulate_sweep(static_emb, static_cls, q_emb, q_cls,
     The dynamic tier is allocated once at ``max_capacity`` (default:
     the largest swept capacity) with per-config capacity masks, and the
     pending ring at ``ring`` slots (default: the largest swept latency).
+    The L1 front allocates one column per distinct ``key_id`` — the sim
+    models an uncapped L1 (the live tier's LRU cap is a documented
+    batch-path relaxation; differential tests size it amply).
     """
     N, d = q_emb.shape
     if judge_flip is None:
@@ -687,12 +999,28 @@ def simulate_sweep(static_emb, static_cls, q_emb, q_cls,
         raise ValueError(f"swept capacity {caps.max()} > tier rows {C}")
     if lats.max() > R:
         raise ValueError(f"swept judge_latency {lats.max()} > ring {R}")
+    use_l1 = bool(np.asarray(sweep.l1).any())
+    if use_l1 and key_id is None:
+        raise ValueError("cfg.l1 requires the trace's key_id array "
+                         "(exact-duplicate key per request)")
+    use_ttl = bool(np.asarray(sweep.ttl_volatile).max(initial=0) > 0
+                   or np.asarray(sweep.ttl_stable).max(initial=0) > 0)
+    if volatile is None:
+        volatile = np.zeros((N,), bool)
+    if key_id is None:
+        key_id = np.zeros((N,), np.int32)
+    key_id = np.asarray(key_id, np.int32)
+    nk = int(key_id.max(initial=0)) + 1 if use_l1 else 1
     return _run_sweep(jnp.asarray(static_emb),
                       jnp.asarray(static_cls, jnp.int32),
                       jnp.asarray(q_emb),
                       jnp.asarray(q_cls, jnp.int32), judge_flip,
+                      jnp.asarray(volatile, bool),
+                      jnp.asarray(key_id),
                       sweep, C=C, R=R,
-                      uniform_lat=bool((lats == lats[0]).all()))
+                      uniform_lat=bool((lats == lats[0]).all()),
+                      D=int(drift_every), nk=nk, use_l1=use_l1,
+                      use_ttl=use_ttl)
 
 
 # ---------------------------------------------------------------------------
@@ -703,19 +1031,27 @@ def summarize(res: SimResult) -> dict:
     n = res.served_by.shape[0]
     sb = res.served_by
     hit = sb != MISS
+    # a hit is an error if the served answer is in the wrong equivalence
+    # class OR stale (right class, earlier drift epoch) — identical to
+    # the pre-§16 definition whenever no request is volatile
+    bad = jnp.logical_and(hit, jnp.logical_or(~res.correct, res.stale))
     out = {
         "requests": n,
         "static_hit_rate": float(jnp.mean(sb == STATIC_HIT)),
         "dyn_hit_rate": float(jnp.mean((sb == DYN_HIT_DYNAMIC)
                                        | (sb == DYN_HIT_PROMOTED))),
         "promoted_hit_rate": float(jnp.mean(sb == DYN_HIT_PROMOTED)),
+        "l1_hit_rate": float(jnp.mean(sb == L1_HIT)),
         "total_hit_rate": float(jnp.mean(hit)),
         "static_origin_rate": float(jnp.mean(res.static_origin)),
-        "error_rate": float(jnp.mean(jnp.logical_and(hit, ~res.correct))),
+        "error_rate": float(jnp.mean(bad)),
+        "stale_serve_rate": float(jnp.mean(res.stale)),
         "judge_calls": int(res.judge_calls),
         "judge_approved": int(res.judge_approved),
         "promotions": int(res.promotions),
         "enq_dropped": int(res.enq_dropped),
+        "ttl_evictions": int(res.ttl_evicted),
+        "bypassed_volatile": int(res.bypassed),
     }
     return out
 

@@ -35,6 +35,11 @@ class DynamicTier(NamedTuple):
     valid: jax.Array          # (C,) bool
     last_used: jax.Array      # (C,) int32 LRU clock
     written_at: jax.Array     # (C,) int32 timestamp (LWW guard)
+    expires_at: jax.Array     # (C,) int32 per-entry expiry; 0 = never.
+    # An entry is live while ``now <= expires_at`` (or expires_at == 0);
+    # it is a third clock, distinct from written_at (LWW) and last_used
+    # (LRU): expiry is assigned at write time (judge TTL verdict /
+    # freshness class) and never refreshed by hits.
 
 
 def make_static_tier(emb: jax.Array, cls: jax.Array,
@@ -54,7 +59,25 @@ def make_dynamic_tier(capacity: int, d: int) -> DynamicTier:
         valid=jnp.zeros((capacity,), bool),
         last_used=jnp.zeros((capacity,), jnp.int32),
         written_at=jnp.zeros((capacity,), jnp.int32),
+        expires_at=jnp.zeros((capacity,), jnp.int32),
     )
+
+
+def live_mask(tier: DynamicTier, now=None) -> jax.Array:
+    """(C,) bool: valid AND not past the per-entry expiry.
+
+    ``now=None`` skips the expiry test (clockless callers — the legacy
+    behaviour). The liveness rule is ``expires_at == 0 or
+    now <= expires_at``: an entry is servable *through* its expiry tick
+    and dead strictly after it, which keeps the legacy global-ttl
+    wrapper (``expires_at = written_at + ttl``; expired iff
+    ``now - written_at > ttl``) bit-compatible.
+    """
+    if now is None:
+        return tier.valid
+    alive = jnp.logical_or(tier.expires_at == 0,
+                           jnp.asarray(now, jnp.int32) <= tier.expires_at)
+    return jnp.logical_and(tier.valid, alive)
 
 
 # ---------------------------------------------------------------------------
@@ -68,20 +91,24 @@ def static_lookup(tier: StaticTier, q: jax.Array):
     return sims[idx], idx.astype(jnp.int32)
 
 
-def dynamic_lookup(tier: DynamicTier, q: jax.Array, index=None):
-    """q (d,) normalized -> (best similarity, best index) over valid rows.
+def dynamic_lookup(tier: DynamicTier, q: jax.Array, index=None, now=None):
+    """q (d,) normalized -> (best similarity, best index) over live rows.
 
     An injected ``index`` (``SegmentedIndex``, DESIGN.md §12) takes over
     the scan: candidates from its tail/segments are exact-reranked
     against ``tier.emb``, so the served (score, slot) pair equals this
     flat masked scan whenever the true best live slot survives into the
-    candidate set.
+    candidate set. ``now`` additionally masks rows past their per-entry
+    ``expires_at`` (DESIGN.md §16); the policies invalidate eagerly
+    before lookup instead, so they leave it ``None``. The indexed path
+    relies on the same eager invalidation (``index.invalidate``
+    tombstones) and does not take a clock.
     """
     if index is not None:
         vals, idx = index.topk(q[None], tier.emb, k=1)
         return vals[0, 0], idx[0, 0].astype(jnp.int32)
     sims = tier.emb @ q
-    sims = jnp.where(tier.valid, sims, -jnp.inf)
+    sims = jnp.where(live_mask(tier, now), sims, -jnp.inf)
     idx = jnp.argmax(sims)
     return sims[idx], idx.astype(jnp.int32)
 
@@ -170,28 +197,30 @@ def serve_lookup_batch(static_tier: StaticTier, dyn_tier: DynamicTier,
 # mutations (all functional)
 # ---------------------------------------------------------------------------
 
-def _lru_slot(tier: DynamicTier, cap=None) -> jax.Array:
-    """Insertion slot: first invalid row, else least-recently-used.
+def _lru_slot(tier: DynamicTier, cap=None, now=None) -> jax.Array:
+    """Insertion slot: first non-live row, else least-recently-used.
 
     ``cap`` (optional, traceable int) restricts the choice to rows
     ``[0, cap)`` — the capacity-sweep path runs one max-capacity tier and
     masks the tail per config (DESIGN.md §10). Rows at or beyond ``cap``
     are never written, hence never valid, so lookups need no mask.
+    ``now`` (optional) treats TTL-expired rows as free, same as invalid.
     """
-    key = jnp.where(tier.valid, tier.last_used, -BIG)
+    key = jnp.where(live_mask(tier, now), tier.last_used, -BIG)
     if cap is not None:
         key = jnp.where(jnp.arange(key.shape[0]) < cap, key, BIG)
     return jnp.argmin(key).astype(jnp.int32)
 
 
 def _write(tier: DynamicTier, slot, q, cls, answer_ref, static_origin,
-           now, last_used=None) -> DynamicTier:
+           now, last_used=None, expires=0) -> DynamicTier:
     """Write one row. ``now`` stamps ``written_at`` (the LWW guard's
     clock — for async promotions this is the *enqueue* time). The LRU
     clock defaults to the same value, but callers applying a delayed
     write (a slow judge's promotion) pass the live clock as
     ``last_used`` so the entry lands LRU-warm instead of inheriting an
-    enqueue-time coldness that the very next insert would evict."""
+    enqueue-time coldness that the very next insert would evict.
+    ``expires`` stamps the per-entry expiry clock (0 = never)."""
     return DynamicTier(
         emb=tier.emb.at[slot].set(q),
         cls=tier.cls.at[slot].set(cls.astype(jnp.int32)),
@@ -202,20 +231,23 @@ def _write(tier: DynamicTier, slot, q, cls, answer_ref, static_origin,
         last_used=tier.last_used.at[slot].set(
             now if last_used is None else last_used),
         written_at=tier.written_at.at[slot].set(now),
+        expires_at=tier.expires_at.at[slot].set(
+            jnp.asarray(expires, jnp.int32)),
     )
 
 
 def insert(tier: DynamicTier, q, cls, answer_ref, now,
-           static_origin=False, cap=None) -> DynamicTier:
+           static_origin=False, cap=None, expires=0) -> DynamicTier:
     """Baseline write-back (Alg. 1 line 11): plain LRU insert."""
     so = jnp.asarray(static_origin)
-    return _write(tier, _lru_slot(tier, cap), q, jnp.asarray(cls),
-                  jnp.asarray(answer_ref), so, now)
+    return _write(tier, _lru_slot(tier, cap, now), q, jnp.asarray(cls),
+                  jnp.asarray(answer_ref), so, now, expires=expires)
 
 
 def upsert(tier: DynamicTier, q, cls, answer_ref, now,
            static_origin=True, dedup_sim: float = 0.9999,
-           lww: bool = True, cap=None, last_used=None) -> DynamicTier:
+           lww: bool = True, cap=None, last_used=None,
+           expires=0) -> DynamicTier:
     """Auxiliary overwrite (Alg. 2 line 21): idempotent, LWW-guarded.
 
     If a near-identical key exists (sim >= dedup_sim), overwrite that slot
@@ -230,13 +262,14 @@ def upsert(tier: DynamicTier, q, cls, answer_ref, now,
     promotion stamped LRU-cold at its enqueue time would be the
     eviction victim of the very next insert.
     """
-    s, j = dynamic_lookup(tier, q)
+    s, j = dynamic_lookup(tier, q, now=last_used)
     dup = s >= dedup_sim
-    slot = jnp.where(dup, j, _lru_slot(tier, cap))
+    slot = jnp.where(dup, j, _lru_slot(tier, cap, now=last_used))
     skip = jnp.logical_and(dup, tier.written_at[j] > now) if lww \
         else jnp.asarray(False)
     new = _write(tier, slot, q, jnp.asarray(cls), jnp.asarray(answer_ref),
-                 jnp.asarray(static_origin), now, last_used=last_used)
+                 jnp.asarray(static_origin), now, last_used=last_used,
+                 expires=expires)
     return jax.tree.map(lambda a, b: jnp.where(skip, a, b), tier, new)
 
 
@@ -256,13 +289,19 @@ def touch_many(tier: DynamicTier, slots, nows) -> DynamicTier:
             jnp.asarray(nows, jnp.int32)))
 
 
-def evict_expired(tier: DynamicTier, now, ttl: int,
+def evict_expired(tier: DynamicTier, now, ttl: int | None = None,
                   index=None) -> DynamicTier:
-    """TTL sweep: invalidate entries older than ttl.
+    """TTL sweep: invalidate entries past their per-entry ``expires_at``.
 
-    ``ttl=0`` means TTL is disabled (``CacheConfig.ttl``'s documented
-    contract) and the sweep is a no-op — NOT "everything is expired",
-    which is what the naive ``age <= 0`` test would make of it.
+    With ``ttl=None`` (the per-entry path, DESIGN.md §16) an entry is
+    expired iff ``expires_at > 0 and now > expires_at`` — exactly the
+    complement of :func:`live_mask`. The legacy global-``ttl`` signature
+    is kept as a wrapper computing ``expires_at = written_at + ttl`` on
+    the fly (expired iff ``now - written_at > ttl``, bit-identical to
+    the old behaviour); ``ttl=0`` means TTL is disabled
+    (``CacheConfig.ttl``'s documented contract) and the sweep is a
+    no-op — NOT "everything is expired", which is what the naive
+    ``age <= 0`` test would make of it.
 
     Callers serving through an injected dynamic index (DESIGN.md §12)
     must pass it here: eviction without a rewrite is the one mutation
@@ -270,9 +309,14 @@ def evict_expired(tier: DynamicTier, now, ttl: int,
     live entry would let an indexed lookup serve an expired slot the
     flat masked scan rejects.
     """
-    if ttl == 0:
-        return tier
-    alive = now - tier.written_at <= ttl
+    if ttl is not None:
+        if ttl == 0:
+            return tier
+        alive = now - tier.written_at <= ttl   # == now <= written_at+ttl
+    else:
+        alive = jnp.logical_or(tier.expires_at == 0,
+                               jnp.asarray(now, jnp.int32)
+                               <= tier.expires_at)
     if index is not None:
         import numpy as np
         expired = np.nonzero(
@@ -299,3 +343,10 @@ class CacheConfig:
     # VerifyAndPromote pool as its per-submission refill unless an
     # explicit wall-clock ``judge_rate_per_s`` override is given.
     judge_rate: float = 1.0
+    # Freshness subsystem (DESIGN.md §16). All defaults keep the
+    # classic behaviour bit-identical: no L1 front tier, no volatile
+    # bypass, no per-class expiry stamps.
+    l1: bool = False            # exact-match L1 front tier (simulator)
+    volatile_bypass: bool = False  # volatile queries skip all caching
+    ttl_volatile: int = 0       # expiry assigned to volatile writes
+    ttl_stable: int = 0         # expiry assigned to non-volatile writes

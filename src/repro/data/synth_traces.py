@@ -47,6 +47,12 @@ class TraceSpec:
     confusable_delta: float = 0.30
     len_lo: int = 12
     len_hi: int = 120
+    # freshness-sensitive axis (DESIGN.md §16): a fraction of *classes*
+    # is time-sensitive ("what's the price of X now") — their ground
+    # truth rotates every drift_every requests, so any cached answer
+    # produced in an earlier drift epoch is stale for them. 0 disables.
+    volatile_frac: float = 0.0
+    drift_every: int = 0
     seed: int = 0
 
 
@@ -74,12 +80,18 @@ def _normalize(x: np.ndarray) -> np.ndarray:
 
 
 def generate_trace(spec: TraceSpec) -> Dict[str, np.ndarray]:
-    """Returns {emb (N,d) fp32 normalized, cls (N,) i32, length (N,) i32}.
+    """Returns {emb (N,d) fp32 normalized, cls (N,) i32, length (N,) i32,
+    key (N,) i32, volatile (N,) bool}.
 
     Requests are *verbatim phrasings*: each class owns a small pool of
     distinct phrasing embeddings (centroid + eps*gauss) and a request
     samples one, so exact repeats and paraphrases coexist — like real
     query logs (and like the vCache benchmarks, which contain both).
+    ``key`` is the dense exact-duplicate id (equal keys = identical
+    phrasing = identical prompt text — the L1 front's canonical key);
+    ``volatile`` marks requests whose class is time-sensitive
+    (``volatile_frac`` of classes, ground truth rotating every
+    ``drift_every`` requests).
     """
     rng = np.random.default_rng(spec.seed)
     rootd = np.sqrt(spec.d)   # noise norms are relative to the unit sphere
@@ -126,8 +138,22 @@ def generate_trace(spec: TraceSpec) -> Dict[str, np.ndarray]:
     # deterministic phrasing length: same phrasing -> same length
     length = ((cls * 2654435761 + pr * 40503 + base) %
               (spec.len_hi - spec.len_lo)) + spec.len_lo
+
+    # dense exact-duplicate key: one id per distinct (class, phrasing) —
+    # the same identity the L1 front's canonicalization induces on text
+    pair = (cls.astype(np.int64) << 20) ^ pr.astype(np.int64)
+    _, key = np.unique(pair, return_inverse=True)
+
+    # time-sensitive classes: a fixed fraction, drawn after the trace so
+    # the embedding stream is bit-identical whether or not the
+    # freshness axis is on
+    vol_cls = np.zeros(spec.n_classes, bool)
+    n_vol = int(round(spec.volatile_frac * spec.n_classes))
+    if n_vol:
+        vol_cls[rng.choice(spec.n_classes, n_vol, replace=False)] = True
     return {"emb": emb.astype(np.float32), "cls": cls.astype(np.int32),
-            "length": length.astype(np.int32)}
+            "length": length.astype(np.int32),
+            "key": key.astype(np.int32), "volatile": vol_cls[cls]}
 
 
 def _phrasing_noise(base: int, cls: np.ndarray, phr: np.ndarray,
@@ -154,6 +180,8 @@ class Benchmark:
     eval_cls: np.ndarray     # (N_eval,)
     spec: TraceSpec
     n_history: int
+    eval_key: np.ndarray | None = None       # (N_eval,) exact-dup ids
+    eval_volatile: np.ndarray | None = None  # (N_eval,) time-sensitive
 
 
 def build_benchmark(spec: TraceSpec, history_frac: float = 0.2,
@@ -195,6 +223,8 @@ def build_benchmark(spec: TraceSpec, history_frac: float = 0.2,
         eval_cls=trace["cls"][n_hist:],
         spec=spec,
         n_history=n_hist,
+        eval_key=trace["key"][n_hist:],
+        eval_volatile=trace["volatile"][n_hist:],
     )
 
 

@@ -134,7 +134,8 @@ def _owned_slots(slots, axis: str, rows_per: int):
 
 
 def sharded_dyn_write(tier, slot, q, cls, answer_ref, static_origin, now,
-                      mesh, axis: str = "model", last_used=None):
+                      mesh, axis: str = "model", last_used=None,
+                      expires=0):
     """Shard-routed twin of ``tiers._write``: one slot write (scalar
     serve-path insert / async promotion) landing only on the owning
     shard. All operands are replicated scalars except the tier itself;
@@ -144,8 +145,8 @@ def sharded_dyn_write(tier, slot, q, cls, answer_ref, static_origin, now,
     clock so a delayed promotion lands LRU-warm."""
     rows_per = tier.emb.shape[0] // mesh.shape[axis]
 
-    def local(emb, c, ar, so, va, lu, wa, slot, q, cls, answer_ref,
-              static_origin, now, lu_now):
+    def local(emb, c, ar, so, va, lu, wa, xp, slot, q, cls, answer_ref,
+              static_origin, now, lu_now, exp):
         ls = _owned_slots(slot, axis, rows_per)
         return (emb.at[ls].set(q, mode="drop"),
                 c.at[ls].set(cls.astype(jnp.int32), mode="drop"),
@@ -153,29 +154,32 @@ def sharded_dyn_write(tier, slot, q, cls, answer_ref, static_origin, now,
                 so.at[ls].set(static_origin, mode="drop"),
                 va.at[ls].set(True, mode="drop"),
                 lu.at[ls].set(lu_now, mode="drop"),
-                wa.at[ls].set(now, mode="drop"))
+                wa.at[ls].set(now, mode="drop"),
+                xp.at[ls].set(exp, mode="drop"))
 
     fn = shard_map(
         local, mesh=mesh,
         in_specs=(P(axis, None), P(axis), P(axis), P(axis), P(axis),
-                  P(axis), P(axis), P(), P(None), P(), P(), P(), P(),
-                  P()),
+                  P(axis), P(axis), P(axis), P(), P(None), P(), P(),
+                  P(), P(), P(), P()),
         out_specs=(P(axis, None), P(axis), P(axis), P(axis), P(axis),
-                   P(axis), P(axis)),
+                   P(axis), P(axis), P(axis)),
         check_vma=False)
-    emb, c, ar, so, va, lu, wa = fn(
+    emb, c, ar, so, va, lu, wa, xp = fn(
         tier.emb, tier.cls, tier.answer_ref, tier.static_origin,
-        tier.valid, tier.last_used, tier.written_at,
+        tier.valid, tier.last_used, tier.written_at, tier.expires_at,
         jnp.asarray(slot, jnp.int32), q, jnp.asarray(cls),
         jnp.asarray(answer_ref), jnp.asarray(static_origin),
         jnp.asarray(now, jnp.int32),
-        jnp.asarray(now if last_used is None else last_used, jnp.int32))
+        jnp.asarray(now if last_used is None else last_used, jnp.int32),
+        jnp.asarray(expires, jnp.int32))
     return tier._replace(emb=emb, cls=c, answer_ref=ar, static_origin=so,
-                         valid=va, last_used=lu, written_at=wa)
+                         valid=va, last_used=lu, written_at=wa,
+                         expires_at=xp)
 
 
 def sharded_bulk_insert(tier, V, slots, rows, ts, cls, mesh,
-                        axis: str = "model"):
+                        axis: str = "model", exps=None):
     """Shard-routed twin of the policy's batched ``_bulk_insert``: a
     whole micro-batch of backend inserts scattered in one fused update
     per field, each landing only on the owning shard (``last_used`` is
@@ -185,30 +189,34 @@ def sharded_bulk_insert(tier, V, slots, rows, ts, cls, mesh,
     benign)."""
     rows_per = tier.emb.shape[0] // mesh.shape[axis]
 
-    def local(emb, c, ar, so, va, wa, V, slots, rows, ts, cls):
+    def local(emb, c, ar, so, va, wa, xp, V, slots, rows, ts, cls, exps):
         ls = _owned_slots(slots, axis, rows_per)
         return (emb.at[ls].set(V[rows], mode="drop"),
                 c.at[ls].set(cls, mode="drop"),
                 ar.at[ls].set(jnp.int32(-1), mode="drop"),
                 so.at[ls].set(False, mode="drop"),
                 va.at[ls].set(True, mode="drop"),
-                wa.at[ls].set(ts, mode="drop"))
+                wa.at[ls].set(ts, mode="drop"),
+                xp.at[ls].set(exps, mode="drop"))
 
     fn = shard_map(
         local, mesh=mesh,
         in_specs=(P(axis, None), P(axis), P(axis), P(axis), P(axis),
-                  P(axis), P(None, None), P(None), P(None), P(None),
-                  P(None)),
+                  P(axis), P(axis), P(None, None), P(None), P(None),
+                  P(None), P(None), P(None)),
         out_specs=(P(axis, None), P(axis), P(axis), P(axis), P(axis),
-                   P(axis)),
+                   P(axis), P(axis)),
         check_vma=False)
-    emb, c, ar, so, va, wa = fn(
+    if exps is None:
+        exps = np.zeros(np.asarray(slots).shape[0], np.int32)
+    emb, c, ar, so, va, wa, xp = fn(
         tier.emb, tier.cls, tier.answer_ref, tier.static_origin,
-        tier.valid, tier.written_at, V,
+        tier.valid, tier.written_at, tier.expires_at, V,
         jnp.asarray(slots, jnp.int32), jnp.asarray(rows, jnp.int32),
-        jnp.asarray(ts, jnp.int32), jnp.asarray(cls, jnp.int32))
+        jnp.asarray(ts, jnp.int32), jnp.asarray(cls, jnp.int32),
+        jnp.asarray(exps, jnp.int32))
     return tier._replace(emb=emb, cls=c, answer_ref=ar, static_origin=so,
-                         valid=va, written_at=wa)
+                         valid=va, written_at=wa, expires_at=xp)
 
 
 def sharded_touch_many(tier, slots, nows, mesh, axis: str = "model"):

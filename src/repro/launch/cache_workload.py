@@ -79,7 +79,9 @@ def run_live(n_requests: int = 800, n_clients: int = 8,
              tau: float = 0.92, index: str = "flat",
              static_rows: int = 0, nprobe: int = 8,
              dyn_index: str = "flat", seg_rows: int = 4096,
-             compact_every: int = 4, shards: int = 1) -> dict:
+             compact_every: int = 4, shards: int = 1,
+             l1_capacity: int = 0, volatile_bypass: bool = False,
+             ttl_volatile: int = 0, ttl_stable: int = 0) -> dict:
     """Live router-fronted serving demo: the batched serving path under
     concurrent client load, with per-tier hit and latency telemetry.
     ``index='ivf'`` swaps the static lookup for the quantized ANN index
@@ -116,13 +118,24 @@ def run_live(n_requests: int = 800, n_clients: int = 8,
         static_rows=static_rows, index=index, nprobe=nprobe,
         mesh=mesh, texts=intents)
 
-    cfg = CacheConfig(tau, tau, sigma_min=0.3, capacity=1024)
+    freshness = None
+    if volatile_bypass or ttl_volatile or ttl_stable:
+        from repro.core.freshness import FreshnessPolicy
+        freshness = FreshnessPolicy(volatile_bypass=volatile_bypass,
+                                    ttl_volatile=ttl_volatile,
+                                    ttl_stable=ttl_stable,
+                                    ttl_unknown=ttl_stable)
+    cfg = CacheConfig(tau, tau, sigma_min=0.3, capacity=1024,
+                      l1=bool(l1_capacity),
+                      volatile_bypass=volatile_bypass,
+                      ttl_volatile=ttl_volatile, ttl_stable=ttl_stable)
     policy = KritesPolicy(
         cfg, tier, answers,
         embed, backend_fn=lambda p: f"generated({p})",
-        judge_fn=OracleJudge(), d=64,
+        judge_fn=OracleJudge(freshness=freshness), d=64,
         backend_batch_fn=lambda ps: [f"generated({p})" for p in ps],
         index=idx_obj, static_texts=texts, mesh=mesh,
+        l1=l1_capacity or None, freshness=freshness,
         dyn_index=build_dyn_index(dyn_index, cfg.capacity, 64,
                                   seg_rows=seg_rows,
                                   compact_every=compact_every))
@@ -189,13 +202,28 @@ if __name__ == "__main__":
                     help="serve --live through the row-sharded mesh "
                          "path over this many host devices "
                          "(DESIGN.md §13); 1 = single-device")
+    ap.add_argument("--l1-capacity", type=int, default=0,
+                    help="L1 exact-match front tier size for --live "
+                         "(DESIGN.md §16); 0 = off")
+    ap.add_argument("--volatile-bypass", action="store_true",
+                    help="serve freshness-volatile prompts cache-free "
+                         "in --live (DESIGN.md §16)")
+    ap.add_argument("--ttl-volatile", type=int, default=0,
+                    help="per-entry cache lifetime for volatile "
+                         "content in --live (ticks; 0 = never)")
+    ap.add_argument("--ttl-stable", type=int, default=0,
+                    help="per-entry cache lifetime for stable/unknown "
+                         "content in --live (ticks; 0 = never)")
     a = ap.parse_args()
     if a.live:
         run_live(n_requests=a.requests, n_clients=a.clients,
                  max_batch=a.max_batch, index=a.index,
                  static_rows=a.static_rows, nprobe=a.nprobe,
                  dyn_index=a.dyn_index, seg_rows=a.seg_rows,
-                 compact_every=a.compact_every, shards=a.shards)
+                 compact_every=a.compact_every, shards=a.shards,
+                 l1_capacity=a.l1_capacity,
+                 volatile_bypass=a.volatile_bypass,
+                 ttl_volatile=a.ttl_volatile, ttl_stable=a.ttl_stable)
     else:
         run(multi_pod=False)
         run(multi_pod=True)

@@ -160,6 +160,8 @@ def _serve_stdio(policy, snap_dir, wal) -> None:
                   "served_by": r.served_by,
                   "static_origin": bool(r.static_origin),
                   "similarity": float(r.similarity),
+                  "stale": bool(r.meta.get("stale", False)),
+                  "bypass": r.meta.get("bypass"),
                   "answer": None if r.answer is None else str(r.answer)})
 
     emit({"ok": True, "ready": True, "pid": os.getpid(),
@@ -270,6 +272,23 @@ def main() -> None:
                          "segments whenever this many have accumulated")
     ap.add_argument("--capacity", type=int, default=512,
                     help="dynamic-tier capacity")
+    ap.add_argument("--l1-capacity", type=int, default=0,
+                    help="L1 exact-match front tier size (DESIGN.md "
+                         "§16): canonically identical repeat prompts "
+                         "are answered from a hashed lookup with no "
+                         "embed and no semantic search. 0 = off")
+    ap.add_argument("--volatile-bypass", action="store_true",
+                    help="route freshness-volatile prompts (keyword "
+                         "classifier, DESIGN.md §16) straight to the "
+                         "backend with no cache read or write — "
+                         "guarantees zero stale serves on that class")
+    ap.add_argument("--ttl-volatile", type=int, default=0,
+                    help="cache-entry lifetime (request ticks) the "
+                         "judge assigns to volatile-class content; "
+                         "0 = never expires")
+    ap.add_argument("--ttl-stable", type=int, default=0,
+                    help="cache-entry lifetime for stable/unknown-"
+                         "class content; 0 = never expires")
     ap.add_argument("--snapshot-dir", default=None,
                     help="crash-safe persistence (DESIGN.md §14): "
                          "restore the newest snapshot on start, replay "
@@ -377,14 +396,37 @@ def main() -> None:
         from repro.core.promo_wal import PromotionWAL
         wal = PromotionWAL(wal_path, fsync_every=args.wal_fsync_every)
 
+    # freshness subsystem (DESIGN.md §16): keyword staleness-risk
+    # classifier feeding the bypass, the judge's TTL verdicts, and the
+    # baseline write-back expiry
+    freshness = None
+    if args.volatile_bypass or args.ttl_volatile or args.ttl_stable:
+        from repro.core.freshness import FreshnessPolicy
+        freshness = FreshnessPolicy(volatile_bypass=args.volatile_bypass,
+                                    ttl_volatile=args.ttl_volatile,
+                                    ttl_stable=args.ttl_stable,
+                                    ttl_unknown=args.ttl_stable)
+        print(f"freshness: bypass={args.volatile_bypass} "
+              f"ttl_volatile={args.ttl_volatile} "
+              f"ttl_stable={args.ttl_stable}")
+    if args.l1_capacity:
+        print(f"l1 front tier: {args.l1_capacity} entries")
+
     cfg = CacheConfig(args.tau, args.tau, sigma_min=0.3,
-                      capacity=args.capacity)
+                      capacity=args.capacity,
+                      l1=bool(args.l1_capacity),
+                      volatile_bypass=args.volatile_bypass,
+                      ttl_volatile=args.ttl_volatile,
+                      ttl_stable=args.ttl_stable)
     policy = KritesPolicy(cfg, tier, answers, embed,
                           backend_fn=frontend.submit,
-                          judge_fn=OracleJudge(), d=64,
+                          judge_fn=OracleJudge(freshness=freshness),
+                          d=64,
                           backend_batch_fn=frontend.submit_many,
                           index=index, static_texts=texts,
                           mesh=mesh, wal=wal, fused=fused,
+                          l1=args.l1_capacity or None,
+                          freshness=freshness,
                           dyn_index=build_dyn_index(
                               dyn_index, cfg.capacity, 64,
                               seg_rows=args.seg_rows,
@@ -396,7 +438,8 @@ def main() -> None:
     if snap is not None:
         rep = persist.restore_policy(policy, snap, rebuild="background")
         print(f"restored: t={rep['t']} dyn_live={rep['dyn_live']} "
-              f"index={rep['index']}")
+              f"index={rep['index']} l1={rep['l1_restored']} "
+              f"ttl_dropped={rep['ttl_dropped']}")
     if wal_path and os.path.exists(wal_path):
         from repro.core.promo_wal import replay_into
         r = replay_into(policy, wal_path,

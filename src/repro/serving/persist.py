@@ -9,10 +9,16 @@ of ``distributed/checkpoint.py`` (tmp dir + ``os.replace`` publish,
 per-leaf blake2s hashes verified on load) and restores it into a
 freshly constructed policy:
 
-- **dynamic tier** — all seven device arrays, the four host decision
-  mirrors, the answer list and the logical clock ``t``, restored
-  field-identically (sharded onto the policy's mesh when serving
-  multi-device);
+- **dynamic tier** — all eight device arrays (``expires_at``
+  included), the five host decision mirrors, the answer list and the
+  logical clock ``t``, restored field-identically (sharded onto the
+  policy's mesh when serving multi-device); entries already past their
+  expiry at the captured clock are swept on restore — expired state
+  never resurrects;
+- **L1 front tier** — the exact-match cache rides in the manifest
+  (``extra["l1"]``, LRU order preserved) and is reinstalled through
+  ``ExactTier.load_state``, which drops entries expired at the
+  restored clock;
 - **static ANN index** — the packed IVF layout (centroids, int8 codes,
   scales, row ids) is saved *without* its corpus (the corpus IS the
   static tier embedding matrix, stored once) and re-wired to the live
@@ -48,7 +54,8 @@ import numpy as np
 
 from repro.distributed import checkpoint as ckpt
 
-SNAP_FORMAT = 1
+SNAP_FORMAT = 2            # 2: + expires_at mirror, L1 front-tier state
+SNAP_FORMATS = (1, 2)      # formats the loader understands
 SNAP_KIND = "krites-snapshot"
 
 
@@ -105,9 +112,12 @@ def save_snapshot(snap_dir: str | Path, policy, *, step: Optional[int] = None,
             "last_used": policy._last_used_np.copy(),
             "static_origin": policy._static_origin_np.copy(),
             "written_at": policy._written_at_np.copy(),
+            "expires_at": policy._expires_np.copy(),
         }
         t = policy.t
         dyn_answers = [_jsonable(a) for a in policy.dyn_answers]
+        l1 = getattr(policy, "l1", None)
+        l1_state = l1.to_state() if l1 is not None else None
 
     tree: dict = {"dyn": dyn, "mirrors": mirrors}
     extra: dict = {
@@ -119,6 +129,7 @@ def save_snapshot(snap_dir: str | Path, policy, *, step: Optional[int] = None,
         "capacity": int(policy.cfg.capacity),
         "d": int(dyn["emb"].shape[1]),
         "dyn_answers": dyn_answers,
+        "l1": l1_state,
         "dyn_index": policy.describe_dyn_index()
         if policy.dyn_index is not None else None,
         "ivf": None,
@@ -201,9 +212,10 @@ def load_snapshot(snap_dir: str | Path, step: Optional[int] = None,
     src = snap_dir / f"step_{step:08d}"
     manifest = json.loads((src / "manifest.json").read_text())
     extra = manifest.get("extra", {})
-    if extra.get("format") != SNAP_FORMAT or extra.get("kind") != SNAP_KIND:
+    if extra.get("format") not in SNAP_FORMATS \
+            or extra.get("kind") != SNAP_KIND:
         raise ValueError(
-            f"{src}: not a format-{SNAP_FORMAT} {SNAP_KIND} manifest "
+            f"{src}: not a format-{SNAP_FORMATS} {SNAP_KIND} manifest "
             f"(got format={extra.get('format')!r} "
             f"kind={extra.get('kind')!r})")
 
@@ -303,6 +315,10 @@ def restore_policy(policy, snap: "Snapshot | str | Path", *,
     if int(snap.extra["t"]) < 0:
         raise ValueError("negative clock in snapshot")
 
+    # format-1 snapshots predate per-entry expiry: default to "never"
+    if "expires_at" not in dyn_np:
+        dyn_np = dict(dyn_np,
+                      expires_at=np.zeros(cap, np.int32))
     dyn = T.DynamicTier(**{f: jnp.asarray(dyn_np[f])
                            for f in T.DynamicTier._fields})
     with policy.dyn_lock:
@@ -315,6 +331,9 @@ def restore_policy(policy, snap: "Snapshot | str | Path", *,
         policy._last_used_np[:] = m["last_used"]
         policy._static_origin_np[:] = m["static_origin"]
         policy._written_at_np[:] = m["written_at"]
+        policy._expires_np[:] = m.get("expires_at",
+                                      np.zeros(cap, np.int64))
+        policy._ttl_active = bool((policy._expires_np > 0).any())
         policy.t = int(snap.extra["t"])
         answers = snap.extra.get("dyn_answers") or [None] * cap
         policy.dyn_answers = list(answers)
@@ -328,11 +347,22 @@ def restore_policy(policy, snap: "Snapshot | str | Path", *,
             if len(live):
                 policy.dyn_index.bulk_load(live.astype(np.int32),
                                            dyn_np["emb"][live])
+        # entries already past their expiry at the captured clock must
+        # not resurrect (DESIGN.md §16) — the policy's own eager sweep
+        # kills them in the tier, the mirrors, and the dynamic index
+        ttl_dropped = policy._sweep_expired_locked(policy.t)
+
+    l1_restored = 0
+    l1_state = snap.extra.get("l1")
+    if getattr(policy, "l1", None) is not None and l1_state:
+        l1_restored = policy.l1.load_state(l1_state, now=policy.t)
 
     report = {
         "step": snap.step, "t": policy.t,
         "wal_seq": int(snap.extra.get("wal_seq", 0)),
-        "dyn_live": int(snap.tree["mirrors"]["valid"].sum()),
+        "dyn_live": int(policy._valid_np.sum()),
+        "ttl_dropped": int(ttl_dropped),
+        "l1_restored": int(l1_restored),
         "index": "none", "rebuild_thread": None,
     }
 

@@ -101,8 +101,12 @@ class CacheRouter:
                  max_wait_ms: float = 2.0, latency_window: int = 100_000):
         self.policy = policy
         self._lock = threading.Lock()
-        self._tier_counts = {"static": 0, "dynamic": 0, "backend": 0}
+        self._tier_counts = {"l1": 0, "static": 0, "dynamic": 0,
+                             "backend": 0}
         self._static_origin = 0
+        self._promoted = 0          # dynamic hits serving promoted content
+        self._stale = 0             # hits flagged stale by the drift clock
+        self._bypassed = 0          # volatile requests routed cache-free
         self._requests = 0
         # latency percentiles come from a bounded window so a long-lived
         # router neither leaks memory nor sorts its whole history
@@ -159,6 +163,10 @@ class CacheRouter:
                 self._tier_counts[r.served_by] = \
                     self._tier_counts.get(r.served_by, 0) + 1
                 self._static_origin += bool(r.static_origin)
+                self._promoted += (r.served_by == "dynamic"
+                                   and bool(r.static_origin))
+                self._stale += bool(r.meta.get("stale"))
+                self._bypassed += r.meta.get("bypass") == "volatile"
 
     # -- telemetry ---------------------------------------------------------
     def stats(self) -> dict:
@@ -181,12 +189,31 @@ class CacheRouter:
                 else "unknown",
                 "mean_batch_size": round(
                     self._batched_requests / max(self._batches, 1), 2),
+                # hit-source mix (DESIGN.md §16): the L1 exact front,
+                # the two semantic tiers (dynamic split by content
+                # origin), and the backend — plus the freshness flags
+                "l1_hit_rate": self._tier_counts["l1"] / n,
                 "static_hit_rate": self._tier_counts["static"] / n,
                 "dynamic_hit_rate": self._tier_counts["dynamic"] / n,
+                "promoted_hit_rate": self._promoted / n,
                 "backend_rate": self._tier_counts["backend"] / n,
                 "static_origin_rate": self._static_origin / n,
+                "stale_serve_rate": self._stale / n,
+                "bypassed_volatile": self._bypassed,
                 "errors": self._errors,
             }
+            # freshness-layer counters owned by the policy (L1 probes,
+            # volatile bypasses, TTL deaths) — surfaced when present
+            for name, attr in (("l1_hits", "_l1_hits"),
+                               ("l1_bypass_volatile", "_l1_bypass"),
+                               ("stale_serves", "_stale_serves"),
+                               ("ttl_evictions", "_ttl_evictions")):
+                v = getattr(self.policy, attr, None)
+                if v is not None:
+                    out[name] = int(v)
+            l1 = getattr(self.policy, "l1", None)
+            if l1 is not None:
+                out["l1_entries"] = l1.stats()["l1_entries"]
             shard_stats = getattr(self.policy, "shard_stats", None)
             shard_stats = shard_stats() if shard_stats else None
             if shard_stats is not None:

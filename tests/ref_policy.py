@@ -7,7 +7,7 @@ paper's Algorithms 1/2 written out imperatively, one request at a time.
 ``tests/test_ref_differential.py`` enforces that ``simulate`` and
 ``simulate_sweep`` match it decision-for-decision.
 
-Semantics mirrored (see DESIGN.md §3-4, §10):
+Semantics mirrored (see DESIGN.md §3-4, §10, §16):
 - serving: static threshold, then dynamic threshold over valid rows,
   else miss + LRU write-back; LRU touch on dynamic hit;
 - grey-zone trigger (Krites only): sigma_min <= s_static < tau_static,
@@ -20,7 +20,16 @@ Semantics mirrored (see DESIGN.md §3-4, §10):
   slot; last-writer-wins guard comparing the duplicate's ``written_at``
   against the task's *enqueue* time, and the clock split of the live
   policy: the promoted row's ``written_at`` records the enqueue time
-  (LWW) while ``last_used`` records the apply time (LRU-warm).
+  (LWW) while ``last_used`` records the apply time (LRU-warm);
+- freshness (§16): per-entry ``expires_at`` masks expired rows out of
+  every lookup lazily (the eviction count lands once, at the first
+  expired step); a promotion's expiry anchors at its *enqueue* time and
+  a verdict that outlived its own TTL is dropped; the L1 exact-match
+  front (one cell per exact-duplicate key) is probed after the volatile
+  bypass and before any tier traffic, and every semantic serve writes
+  back under its key with the content clock the staleness rule judges
+  against (epoch(now) vs epoch(content); static content is epoch 0,
+  backend answers are current by definition).
 """
 from __future__ import annotations
 
@@ -28,8 +37,10 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-MISS, STATIC_HIT, DYN_HIT_DYNAMIC, DYN_HIT_PROMOTED = 0, 1, 2, 3
+MISS, STATIC_HIT, DYN_HIT_DYNAMIC, DYN_HIT_PROMOTED, L1_HIT = \
+    0, 1, 2, 3, 4
 DEDUP_SIM = 0.9999
+L1_NEVER = 1 << 30      # sim's unbounded-L1 sentinel (0 = empty cell)
 
 
 class _RefSegIndex:
@@ -70,15 +81,18 @@ class _RefSegIndex:
                 seg.discard(slot)
                 self.tombstones += 1
 
-    def lookup(self, dyn: "_Dyn", q: np.ndarray):
+    def lookup(self, dyn: "_Dyn", q: np.ndarray, now=None):
         """Exact rerank of the live set against the tier matrix: the
         same sims vector the flat scan computes, masked to the index's
-        live slots (tail + segments, tombstones excluded)."""
+        live slots (tail + segments, tombstones excluded) and — when a
+        clock is given — to unexpired rows."""
         sims = (dyn.emb @ q).astype(np.float32)
         live = np.zeros(len(sims), bool)
         for store in [self.tail, *self.segments]:
             for slot in store:
                 live[slot] = True
+        if now is not None:
+            live &= (dyn.expires == 0) | (now <= dyn.expires)
         sims[~live] = -np.inf
         j = int(np.argmax(sims))
         return float(sims[j]), j
@@ -94,6 +108,7 @@ class _Dyn:
     valid: np.ndarray
     last_used: np.ndarray
     written_at: np.ndarray
+    expires: np.ndarray = None
     index: object = None          # optional _RefSegIndex twin
 
     @classmethod
@@ -106,28 +121,39 @@ class _Dyn:
             valid=np.zeros(capacity, bool),
             last_used=np.zeros(capacity, np.int32),
             written_at=np.zeros(capacity, np.int32),
+            expires=np.zeros(capacity, np.int32),
             index=index,
         )
 
-    def lookup(self, q: np.ndarray):
-        """Best (similarity, index) over valid rows; (-inf, 0) if none."""
+    def live(self, now=None) -> np.ndarray:
+        """Valid AND unexpired (expiry is lazy: ``valid`` stays set, the
+        mask does the killing — exactly the simulator's rule). With no
+        clock, plain validity (the pre-§16 semantics; identical anyway
+        whenever no entry carries an expiry)."""
+        if now is None:
+            return self.valid
+        return self.valid & ((self.expires == 0) | (now <= self.expires))
+
+    def lookup(self, q: np.ndarray, now=None):
+        """Best (similarity, index) over live rows; (-inf, 0) if none."""
         if self.index is not None:
-            return self.index.lookup(self, q)
+            return self.index.lookup(self, q, now)
         sims = (self.emb @ q).astype(np.float32)
-        sims[~self.valid] = -np.inf
+        sims[~self.live(now)] = -np.inf
         j = int(np.argmax(sims))
         return float(sims[j]), j
 
-    def lru_slot(self) -> int:
-        """First invalid row, else least-recently-used."""
-        key = np.where(self.valid, self.last_used.astype(np.int64),
+    def lru_slot(self, now=None) -> int:
+        """First dead (invalid or expired) row, else least-recently-used."""
+        key = np.where(self.live(now), self.last_used.astype(np.int64),
                        -2**40)
         return int(np.argmin(key))
 
-    def write(self, slot, q, cls, ref, so, now, written_at=None):
+    def write(self, slot, q, cls, ref, so, now, written_at=None, exp=0):
         """``now`` stamps the LRU clock; ``written_at`` (default
         ``now``) stamps the LWW clock — promotions pass their enqueue
-        time, mirroring ``tiers._write``."""
+        time, mirroring ``tiers._write``. ``exp`` is the entry's
+        ``expires_at`` (0 = never)."""
         self.emb[slot] = q
         self.cls[slot] = cls
         self.answer_ref[slot] = ref
@@ -135,10 +161,11 @@ class _Dyn:
         self.valid[slot] = True
         self.last_used[slot] = now
         self.written_at[slot] = now if written_at is None else written_at
+        self.expires[slot] = exp
         if self.index is not None:
             self.index.record_write(slot)
 
-    def upsert(self, q, cls, ref, now, enq=None, so=True):
+    def upsert(self, q, cls, ref, now, enq=None, so=True, exp=0):
         """Idempotent, LWW-guarded promotion write (Alg. 2 line 21).
 
         ``enq`` is the promotion's enqueue time (default ``now``): the
@@ -147,12 +174,12 @@ class _Dyn:
         LRU clock, so a delayed promotion lands LRU-warm (the live
         ``KritesPolicy._promote`` clock split)."""
         enq = now if enq is None else enq
-        s, j = self.lookup(q)
+        s, j = self.lookup(q, now)
         dup = s >= DEDUP_SIM
         if dup and self.written_at[j] > enq:
             return                     # stale judgment: newer entry wins
-        self.write(j if dup else self.lru_slot(), q, cls, ref, so, now,
-                   written_at=enq)
+        self.write(j if dup else self.lru_slot(now), q, cls, ref, so,
+                   now, written_at=enq, exp=exp)
 
 
 @dataclass
@@ -163,12 +190,14 @@ class _Task:
     hcls: int
     href: int
     flip: bool
+    vol: bool = False
 
 
 def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
                  capacity=None, judge_flip=None, dyn_index=None,
                  drain=False, crash_after=None,
-                 extra_replays=0) -> dict:
+                 extra_replays=0, volatile=None, key_id=None,
+                 drift_every=0) -> dict:
     """Reference run; returns plain-numpy analogues of ``SimResult``.
 
     ``cfg`` is any object with the :class:`repro.core.tiers.CacheConfig`
@@ -194,6 +223,15 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
     tier arrays) and ``journal_len`` are added to the result only when
     ``drain=True``, so the existing simulator differentials — which
     have no drain phase — are untouched.
+
+    **Freshness semantics** (the numpy oracle for DESIGN.md §16),
+    driven by the ``cfg`` fields ``l1`` / ``volatile_bypass`` /
+    ``ttl_volatile`` / ``ttl_stable`` (read with safe defaults so
+    pre-§16 config objects keep working) plus the per-request
+    ``volatile`` (bool) and ``key_id`` (exact-duplicate id) arrays and
+    the ``drift_every`` ground-truth rotation period. All freshness
+    logic is inert when those fields are off, so legacy calls stay
+    bit-identical.
     """
     static_emb = np.asarray(static_emb, np.float32)
     static_cls = np.asarray(static_cls, np.int32)
@@ -202,13 +240,23 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
     N, d = q_emb.shape
     if judge_flip is None:
         judge_flip = np.zeros(N, bool)
+    if volatile is None:
+        volatile = np.zeros(N, bool)
+    if key_id is None:
+        key_id = np.zeros(N, np.int64)
 
     C = capacity or cfg.capacity
     lat = max(1, cfg.judge_latency)
+    l1f = bool(getattr(cfg, "l1", False))
+    vbp = bool(getattr(cfg, "volatile_bypass", False))
+    ttl_v = int(getattr(cfg, "ttl_volatile", 0))
+    ttl_s = int(getattr(cfg, "ttl_stable", 0))
+    D = int(drift_every)
     dyn = _Dyn.make(C, d, index=_RefSegIndex()
                     if dyn_index == "segmented" else None)
     pending: list[_Task] = []
     budget = np.float32(1.0)
+    l1: dict = {}          # key_id -> (expires, content_t, ok, so)
 
     # hoisted static lookup, like the simulator
     sims = q_emb @ static_emb.T
@@ -219,11 +267,22 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
     served_by = np.zeros(N, np.int8)
     correct = np.zeros(N, bool)
     static_origin = np.zeros(N, bool)
+    stale = np.zeros(N, bool)
     judge_calls = judge_approved = promotions = enq_dropped = 0
+    ttl_evicted = bypassed = 0
+
+    def epoch(x):
+        return x // D
 
     for t in range(N):
         q, qc = q_emb[t], int(q_cls[t])
         ss, hc, hr = float(s_static[t]), int(h_cls[t]), int(h_idx[t])
+        vol, kid = bool(volatile[t]), int(key_id[t])
+
+        # ---- 0. per-entry expiry: lazy death, counted exactly once at
+        # the first expired step — before any write can reuse the slot
+        ttl_evicted += int(np.sum(dyn.valid & (dyn.expires > 0)
+                                  & (t == dyn.expires + 1)))
 
         # ---- 1. async completion due now (earliest first, one per step)
         due_i = min((i for i, p in enumerate(pending) if p.due <= t),
@@ -233,18 +292,39 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
             judge_calls += 1
             if task.qcls == task.hcls or task.flip:
                 judge_approved += 1
-                promotions += 1
-                dyn.upsert(task.emb, task.hcls, task.href, now=t,
-                           enq=task.due - lat)
+                promotions += 1       # counts the approval, like the sim
+                # TTL verdict: expiry anchors at the *enqueue* time (what
+                # the promotion WAL records); a verdict that outlived its
+                # own TTL is dropped, like the live _promote
+                tau_p = ttl_v if task.vol else ttl_s
+                enq = task.due - lat
+                exp_p = enq + tau_p if tau_p > 0 else 0
+                if not (exp_p > 0 and exp_p < t):
+                    dyn.upsert(task.emb, task.hcls, task.href, now=t,
+                               enq=enq, exp=exp_p)
+
+        # ---- 1b. freshness front: volatile bypass, then the L1 exact-
+        # match probe — both before any tier traffic
+        byp = vbp and vol
+        le, l1_w, l1_ok, l1_so = l1.get(kid, (0, 0, False, False))
+        l1hit = l1f and not byp and le > 0 and t <= le
+        front = byp or l1hit
+        if byp:
+            bypassed += 1
 
         # ---- 2. serving path ----
-        static_hit = ss >= cfg.tau_static
-        s_dyn, j_dyn = dyn.lookup(q)
-        dyn_hit = (not static_hit) and s_dyn >= cfg.tau_dynamic
-        miss = not (static_hit or dyn_hit)
+        static_hit_sem = ss >= cfg.tau_static
+        s_dyn, j_dyn = dyn.lookup(q, t)
+        dyn_hit_sem = (not static_hit_sem) and s_dyn >= cfg.tau_dynamic
+        static_hit = static_hit_sem and not front
+        dyn_hit = dyn_hit_sem and not front
+        miss = not front and not (static_hit_sem or dyn_hit_sem)
+        wa_j = int(dyn.written_at[j_dyn])
 
         is_promoted = dyn_hit and bool(dyn.static_origin[j_dyn])
-        if static_hit:
+        if l1hit:
+            served_by[t], served_cls = L1_HIT, qc
+        elif static_hit:
             served_by[t], served_cls = STATIC_HIT, hc
         elif is_promoted:
             served_by[t], served_cls = DYN_HIT_PROMOTED, int(dyn.cls[j_dyn])
@@ -252,32 +332,55 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
             served_by[t], served_cls = DYN_HIT_DYNAMIC, int(dyn.cls[j_dyn])
         else:
             served_by[t], served_cls = MISS, qc
-        correct[t] = served_cls == qc
-        static_origin[t] = static_hit or is_promoted
+        correct[t] = l1_ok if l1hit else served_cls == qc
+        static_origin[t] = l1_so if l1hit else (static_hit or is_promoted)
+
+        # drift staleness: a volatile query served content produced in
+        # an earlier drift epoch (static is epoch 0; backend is current)
+        if D > 0 and vol:
+            if l1hit:
+                stale[t] = epoch(t) != epoch(l1_w)
+            elif static_hit:
+                stale[t] = epoch(t) != 0
+            elif dyn_hit:
+                stale[t] = epoch(t) != epoch(wa_j)
 
         if dyn_hit:
             dyn.last_used[j_dyn] = t          # LRU touch
+        tau_q = ttl_v if vol else ttl_s
+        exp_q = t + tau_q if tau_q > 0 else 0
         if miss:
-            dyn.write(dyn.lru_slot(), q, qc, -1, False, t)
+            dyn.write(dyn.lru_slot(t), q, qc, -1, False, t, exp=exp_q)
 
-        # ---- 3. grey-zone trigger (off-path) ----
+        # ---- 2b. L1 write-back: every semantic serve lands under the
+        # query's exact key (never refreshed by later hits — the stored
+        # content clock is what staleness is judged against)
+        if l1f and not front:
+            content_t = 0 if static_hit else (wa_j if dyn_hit else t)
+            l1[kid] = (exp_q if tau_q > 0 else L1_NEVER, content_t,
+                       bool(correct[t]), bool(static_origin[t]))
+
+        # ---- 3. grey-zone trigger (off-path); front-resolved requests
+        # never embed, so they can never trigger
         grey = cfg.sigma_min <= ss < cfg.tau_static
-        want = grey and bool(krites)
+        want = grey and bool(krites) and not front
         if cfg.dedup and is_promoted and s_dyn >= cfg.tau_dynamic:
             want = False
         budget = np.float32(min(budget + np.float32(cfg.judge_rate), 1e9))
         if want and budget >= 1.0:
             budget = np.float32(budget - np.float32(1.0))
             pending.append(_Task(t + lat, q.copy(), qc, hc, hr,
-                                 bool(judge_flip[t])))
+                                 bool(judge_flip[t]), vol))
         elif want:
             enq_dropped += 1
 
     out = {
         "served_by": served_by, "correct": correct,
-        "static_origin": static_origin, "judge_calls": judge_calls,
+        "static_origin": static_origin, "stale": stale,
+        "judge_calls": judge_calls,
         "judge_approved": judge_approved, "promotions": promotions,
         "enq_dropped": enq_dropped,
+        "ttl_evicted": ttl_evicted, "bypassed": bypassed,
     }
     if not drain:
         return out
@@ -312,6 +415,7 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
             "valid": dyn.valid.copy(),
             "last_used": dyn.last_used.copy(),
             "written_at": dyn.written_at.copy(),
+            "expires": dyn.expires.copy(),
         },
     })
     return out

@@ -176,6 +176,106 @@ def test_drain_does_not_change_trace_decisions(trace):
     assert drained["judge_calls"] >= plain["judge_calls"]
 
 
+# ---------------------------------------------------------------------------
+# freshness subsystem (DESIGN.md §16): L1 front, volatile bypass, TTLs,
+# drift staleness — the simulator must track the reference through all
+# of it, field-identically (including the new stale / ttl_evicted /
+# bypassed outputs)
+# ---------------------------------------------------------------------------
+
+DRIFT = 128
+
+FRESH_CONFIGS = [
+    # L1 alone: pure exact-match front, no expiry anywhere
+    (CacheConfig(0.90, 0.90, sigma_min=0.0, capacity=128,
+                 judge_latency=8, l1=True), True),
+    # the full subsystem: L1 + volatile bypass + split TTLs (the stable
+    # TTL short enough that entries expire before LRU churn reclaims
+    # them — with the bypass on the tier sees only stable writes)
+    (CacheConfig(0.90, 0.90, sigma_min=0.5, capacity=256,
+                 judge_latency=8, l1=True, volatile_bypass=True,
+                 ttl_volatile=40, ttl_stable=90), True),
+    # TTLs without the L1 (expiry + promotion-verdict TTL only)
+    (CacheConfig(0.86, 0.90, sigma_min=0.5, capacity=64,
+                 judge_latency=32, judge_rate=0.25,
+                 ttl_volatile=64), True),
+    # baseline policy with L1 + TTLs (no promotions at all)
+    (CacheConfig(0.90, 0.90, sigma_min=0.0, capacity=128,
+                 judge_latency=8, l1=True, ttl_volatile=48,
+                 ttl_stable=200), False),
+]
+
+
+@pytest.fixture(scope="module")
+def fresh_trace():
+    spec = dataclasses.replace(LMARENA_LIKE, n_requests=N_REQ + 500,
+                               n_classes=400, n_topics=16,
+                               volatile_frac=0.3)
+    b = build_benchmark(spec)
+    return (b.static_emb, b.static_cls, b.eval_emb[:N_REQ],
+            b.eval_cls[:N_REQ], b.eval_key[:N_REQ],
+            b.eval_volatile[:N_REQ])
+
+
+@pytest.mark.parametrize("idx", range(len(FRESH_CONFIGS)))
+def test_freshness_simulate_matches_reference(fresh_trace, idx):
+    """Blocked core (uniform latency) with every freshness feature the
+    config turns on, against the reference — per-request fields plus
+    the stale/ttl_evicted/bypassed accounting."""
+    s_emb, s_cls, q_emb, q_cls, key, vol = fresh_trace
+    cfg, krites = FRESH_CONFIGS[idx]
+    res = simulate(jnp.asarray(s_emb), jnp.asarray(s_cls),
+                   jnp.asarray(q_emb), jnp.asarray(q_cls), cfg,
+                   krites=krites, volatile=vol, key_id=key,
+                   drift_every=DRIFT)
+    ref = ref_simulate(s_emb, s_cls, q_emb, q_cls, cfg, krites,
+                       volatile=vol, key_id=key, drift_every=DRIFT)
+    _assert_matches(res, ref, f"fresh cfg{idx}")
+    if cfg.l1:      # the config must actually exercise the front
+        assert (ref["served_by"] == 4).sum() > 0, "no L1 hits produced"
+    if cfg.ttl_volatile or cfg.ttl_stable:
+        assert ref["ttl_evicted"] > 0, "no TTL evictions produced"
+    if cfg.volatile_bypass:
+        assert ref["bypassed"] > 0
+        # with the bypass on, volatile queries never touch a cache, so
+        # no serve can be stale — the subsystem's headline guarantee
+        assert ref["stale"].sum() == 0
+    else:
+        assert ref["stale"].sum() > 0, "trace produced no stale serves"
+
+
+def test_freshness_sweep_stepwise_matches_reference(fresh_trace):
+    """Mixed-latency sweep (stepwise core) over the freshness configs:
+    every config's slice must equal the reference run."""
+    s_emb, s_cls, q_emb, q_cls, key, vol = fresh_trace
+    sweep = sweep_from_configs([c for c, _ in FRESH_CONFIGS],
+                               [k for _, k in FRESH_CONFIGS])
+    res = simulate_sweep(jnp.asarray(s_emb), jnp.asarray(s_cls),
+                         jnp.asarray(q_emb), jnp.asarray(q_cls), sweep,
+                         volatile=vol, key_id=key, drift_every=DRIFT)
+    for i, (cfg, krites) in enumerate(FRESH_CONFIGS):
+        ref = ref_simulate(s_emb, s_cls, q_emb, q_cls, cfg, krites,
+                           volatile=vol, key_id=key, drift_every=DRIFT)
+        _assert_matches(slice_config(res, i), ref, f"fresh sweep cfg{i}")
+
+
+def test_freshness_off_is_bit_identical_to_plain(fresh_trace):
+    """Passing the volatile/key arrays with every freshness feature off
+    must reproduce the plain run bit-for-bit (the feature-off gate)."""
+    s_emb, s_cls, q_emb, q_cls, key, vol = fresh_trace
+    cfg, krites = CONFIGS[0]
+    plain = simulate(jnp.asarray(s_emb), jnp.asarray(s_cls),
+                     jnp.asarray(q_emb), jnp.asarray(q_cls), cfg,
+                     krites=krites)
+    off = simulate(jnp.asarray(s_emb), jnp.asarray(s_cls),
+                   jnp.asarray(q_emb), jnp.asarray(q_cls), cfg,
+                   krites=krites, volatile=vol, key_id=key)
+    for name in ("served_by", "correct", "static_origin", "stale"):
+        assert np.array_equal(np.asarray(getattr(off, name)),
+                              np.asarray(getattr(plain, name))), name
+    assert int(off.ttl_evicted) == 0 and int(off.bypassed) == 0
+
+
 def test_noisy_judge_flips_match_reference(trace):
     """judge_flip (noisy-verifier false approvals) follows the same
     delayed-payload path — must match the reference end to end."""

@@ -17,17 +17,23 @@ from repro.data.synth_traces import (LMARENA_LIKE, SEARCH_LIKE,
                                      build_benchmark, tune_threshold)
 
 
-def _mk_result(served_by, correct, static_origin, **counters):
-    c = dict(judge_calls=0, judge_approved=0, promotions=0, enq_dropped=0)
+def _mk_result(served_by, correct, static_origin, stale=None, **counters):
+    c = dict(judge_calls=0, judge_approved=0, promotions=0,
+             enq_dropped=0, ttl_evicted=0, bypassed=0)
     c.update(counters)
+    if stale is None:
+        stale = [False] * len(served_by)
     return SimResult(
         served_by=jnp.asarray(served_by, jnp.int8),
         correct=jnp.asarray(correct, bool),
         static_origin=jnp.asarray(static_origin, bool),
+        stale=jnp.asarray(stale, bool),
         judge_calls=jnp.int32(c["judge_calls"]),
         judge_approved=jnp.int32(c["judge_approved"]),
         promotions=jnp.int32(c["promotions"]),
         enq_dropped=jnp.int32(c["enq_dropped"]),
+        ttl_evicted=jnp.int32(c["ttl_evicted"]),
+        bypassed=jnp.int32(c["bypassed"]),
     )
 
 
