@@ -6,7 +6,7 @@ Registered modules (see each module's docstring for what it reproduces):
 ``table1``, ``fig2``, ``greyzone_roi``, ``latency_async``,
 ``verifier_fidelity``, ``kernels``, ``serve_batched``, ``sweep``,
 ``ann_index``, ``dyn_index``, ``sharded_serve``, ``load_service``,
-``fused_serve``, ``l1_freshness``.
+``fused_serve``, ``l1_freshness``, ``adaptive_thresholds``.
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = remaining fields
 as compact JSON) and writes results/benchmarks.json.
@@ -28,11 +28,11 @@ def main() -> None:
                     help="comma-separated module names")
     args = ap.parse_args()
 
-    from benchmarks import (ann_index, dyn_index, fig2, fused_serve,
-                            greyzone_roi, kernels_bench, l1_freshness,
-                            latency_async, load_service, serve_batched,
-                            sharded_serve, sweep, table1,
-                            verifier_fidelity)
+    from benchmarks import (adaptive_thresholds, ann_index, dyn_index,
+                            fig2, fused_serve, greyzone_roi,
+                            kernels_bench, l1_freshness, latency_async,
+                            load_service, serve_batched, sharded_serve,
+                            sweep, table1, verifier_fidelity)
     modules = {
         "table1": table1, "fig2": fig2, "greyzone_roi": greyzone_roi,
         "latency_async": latency_async,
@@ -46,6 +46,7 @@ def main() -> None:
         "load_service": load_service,
         "fused_serve": fused_serve,
         "l1_freshness": l1_freshness,
+        "adaptive_thresholds": adaptive_thresholds,
     }
     if args.only:
         keep = set(args.only.split(","))

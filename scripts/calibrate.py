@@ -3,7 +3,12 @@ analogue; with ``--sweep``, trace the hit-rate/error Pareto frontier over
 a dense tau_static x tau_dynamic grid in one ``simulate_sweep`` dispatch.
 
     PYTHONPATH=src python scripts/calibrate.py [workloads...] [--fixed]
-    PYTHONPATH=src python scripts/calibrate.py --sweep [workloads...]
+    PYTHONPATH=src python scripts/calibrate.py --sweep [--baseline] [workloads...]
+
+``--sweep`` centers its grid on the workload's known operating point,
+or tunes one via ``tune_threshold`` for workloads not in the table;
+``--baseline`` sweeps Algorithm 1 instead of Krites (written to
+``results/sweep_<wl>_baseline.json``).
 
 Outputs land in results/table1_full.json / results/sweep_<wl>.json (see
 EXPERIMENTS.md for the measured operating points).
@@ -57,14 +62,28 @@ def pareto(rows):
     return front
 
 
+GRID_CENTERS = {"lmarena_like": 0.88, "search_like": 0.86}
+
+
 def run_sweep(name, capacity=8192, judge_latency=64, side=8,
-              krites=True, sample=20000):
+              krites=True, sample=20000, center=None):
     """Dense threshold grid -> per-config metrics + Pareto frontier,
     one device dispatch for the whole grid (DESIGN.md §10). Like
-    tune_threshold, runs on a prefix sample of the eval stream."""
+    tune_threshold, runs on a prefix sample of the eval stream.
+
+    The grid centers on the workload's known operating point
+    (``GRID_CENTERS``); an unknown workload gets its center from
+    ``tune_threshold`` on the same sample instead of a blind default.
+    ``krites=False`` sweeps the baseline policy (Alg. 1) — no grey
+    zone, no promotions — so the two frontiers can be compared."""
     spec = WORKLOADS[name]
     b = build_benchmark(spec)
-    t = {"lmarena_like": 0.88, "search_like": 0.86}.get(name, 0.88)
+    t = center if center is not None else GRID_CENTERS.get(name)
+    if t is None:
+        t0 = time.time()
+        t = float(tune_threshold(b, sample=sample, capacity=capacity))
+        print(f"[{name}] grid center from tune_threshold: t*={t:.2f} "
+              f"({time.time()-t0:.0f}s)")
     taus = np.round(np.linspace(t - 0.08, t + 0.08, side), 4)
     base = CacheConfig(tau_static=t, tau_dynamic=t, capacity=capacity,
                        judge_latency=judge_latency)
@@ -81,7 +100,8 @@ def run_sweep(name, capacity=8192, judge_latency=64, side=8,
     for (ts, td), r in zip(grid, rows):
         r["tau_static"], r["tau_dynamic"] = ts, td
     front = pareto(rows)
-    print(f"[{name}] swept {len(rows)} configs in {wall:.1f}s "
+    print(f"[{name}] swept {len(rows)} configs "
+          f"({'krites' if krites else 'baseline'}) in {wall:.1f}s "
           f"({1e3*wall/len(rows):.0f} ms/config incl. compile)")
     for i in front:
         r = rows[i]
@@ -90,18 +110,33 @@ def run_sweep(name, capacity=8192, judge_latency=64, side=8,
               f"err={r['error_rate']:.4f} "
               f"static_origin={r['static_origin_rate']:.4f}")
     return {"workload": name, "capacity": capacity, "wall_s": wall,
-            "configs": rows, "pareto": front}
+            "krites": bool(krites), "grid_center": float(t),
+            "configs": rows, "pareto": front,
+            # the frontier with its resolved operating points inline, so
+            # downstream consumers (and the adaptive controller's docs)
+            # never have to re-join indices against the configs list
+            "pareto_points": [
+                {"tau_static": rows[i]["tau_static"],
+                 "tau_dynamic": rows[i]["tau_dynamic"],
+                 "total_hit_rate": rows[i]["total_hit_rate"],
+                 "error_rate": rows[i]["error_rate"],
+                 "static_origin_rate": rows[i]["static_origin_rate"]}
+                for i in front]}
 
 
 if __name__ == "__main__":
     args = sys.argv[1:]
-    fixed = {"lmarena_like": 0.88, "search_like": 0.86}
+    fixed = dict(GRID_CENTERS)
     names = [a for a in args if not a.startswith("--")] or list(fixed)
     pathlib.Path("results").mkdir(exist_ok=True)
     if "--sweep" in args:
+        # --baseline sweeps Alg. 1 instead of Krites; the output file
+        # records which policy produced the frontier
+        krites = "--baseline" not in args
         for n in names:
-            out = run_sweep(n)
-            p = pathlib.Path(f"results/sweep_{n}.json")
+            out = run_sweep(n, krites=krites)
+            suffix = "" if krites else "_baseline"
+            p = pathlib.Path(f"results/sweep_{n}{suffix}.json")
             p.write_text(json.dumps(out, indent=1))
             print(f"wrote {p}")
     else:

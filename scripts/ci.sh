@@ -58,4 +58,12 @@ echo "== L1 + freshness smoke (bypass -> zero stale, agreement 1.0) =="
 # costing zero embedder calls (DESIGN.md §16)
 python -m benchmarks.l1_freshness --smoke
 
+echo "== adaptive thresholds smoke (drift recovery + frozen identity) =="
+# the controller differentials (tests/test_adaptive.py) run in tier-1
+# above; this smoke drives the full Krites pipeline through a traffic
+# drift and gates: adaptive post-drift hit rate >= pinned at
+# equal-or-lower error, and a frozen controller changing zero
+# critical-path decisions (DESIGN.md §17)
+python -m benchmarks.adaptive_thresholds --smoke
+
 echo "== CI OK =="

@@ -56,6 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import adaptive as A
 from repro.core import tiers as T
 from repro.core.async_queue import VerifyAndPromotePool
 from repro.core.exact_tier import ExactTier, canonicalize
@@ -140,9 +141,16 @@ class BaselinePolicy:
                  backend_batch_fn: Optional[Callable] = None,
                  index=None, dyn_index=None, static_texts=None,
                  mesh=None, shard_axis: str = "model", fused=None,
-                 l1=None, freshness=None):
+                 l1=None, freshness=None, adaptive=None):
         self.cfg = cfg
         self.static = static_tier
+        # online threshold controller (core/adaptive.py, DESIGN.md §17):
+        # when set, every serving path reads its live per-segment
+        # (tau_static, tau_dynamic) under dyn_lock instead of the pinned
+        # cfg values, and served requests are recorded into its bounded
+        # window. None (or a frozen controller) keeps serving
+        # bit-identical to the pinned-threshold policy.
+        self.adaptive = adaptive
         # L1 exact-match front tier (DESIGN.md §16): an ExactTier, an
         # int capacity, or None (off). Probed on the canonical prompt
         # BEFORE the embedder — an L1 hit skips embed + both semantic
@@ -287,8 +295,63 @@ class BaselinePolicy:
         key = np.where(self._valid_np, self._last_used_np, -_BIG)
         return int(key.argmin())
 
+    # ------------------------------------------------------------------
+    # adaptive thresholds (core/adaptive.py, DESIGN.md §17)
+    # ------------------------------------------------------------------
+
+    def _live_taus(self, prompt: str, *, locked: bool = False):
+        """The (tau_static, tau_dynamic, segment) this request serves
+        under: the controller's live per-segment operating point, or
+        the pinned cfg values (segment −1) without a controller.
+        Segment classification is pure text work and runs outside any
+        lock; the threshold pair is read under ``dyn_lock`` — the one
+        source of truth every serving path (scalar, batch, fused, mesh)
+        shares with the controller's adaptation writes."""
+        if self.adaptive is None:
+            return self.cfg.tau_static, self.cfg.tau_dynamic, -1
+        seg = A.segment_of(prompt)
+        if locked:
+            return (self.adaptive.tau_static[seg],
+                    self.adaptive.tau_dynamic[seg], seg)
+        with self.dyn_lock:
+            return (self.adaptive.tau_static[seg],
+                    self.adaptive.tau_dynamic[seg], seg)
+
+    def _adapt_record(self, v_np, meta, h_idx, seg, res,
+                      *, locked: bool = False) -> None:
+        """Append a served semantic request to the controller window.
+        The outcome label starts as the caller-declared class
+        (``meta['cls']``), falling back to the static neighbor's class;
+        judge verdicts / error feedback rewrite it later via the seq
+        stamped into ``res.meta['adapt_seq']``."""
+        if self.adaptive is None or seg < 0:
+            return
+        label = int((meta or {}).get("cls", -1))
+        if label < 0:
+            label = int(self._static_cls_np[h_idx])
+        if locked:
+            seq = self.adaptive.record(v_np, label, seg)
+        else:
+            with self.dyn_lock:
+                seq = self.adaptive.record(v_np, label, seg)
+        res.meta["adapt_seq"] = seq
+        res.meta["segment"] = seg
+
+    def _maybe_adapt(self) -> None:
+        """Serve-call-boundary adaptation check. Must be called with
+        ``dyn_lock`` released — the controller snapshots and installs
+        under the lock itself and runs the shadow sweep outside it. The
+        scalar path checks after every request (the reference twin's
+        cadence); the batched path checks once per batch, so a batch
+        may overshoot ``adapt_every`` by up to B−1 records — the same
+        deliberate batching relaxation as the L1 write-back order."""
+        if self.adaptive is not None:
+            self.adaptive.maybe_adapt(self.dyn_lock, self.static.emb,
+                                      self.static.cls)
+
     # -- hooks for Krites (no-ops in the baseline) -------------------------
-    def _after_static_miss(self, prompt, v, h_idx, s_static, res, meta):
+    def _after_static_miss(self, prompt, v, h_idx, s_static, res, meta,
+                           tau_s=None):
         return
 
     def _after_static_miss_batch(self, rows) -> None:
@@ -320,6 +383,7 @@ class BaselinePolicy:
                               time.monotonic() - t0,
                               meta={"bypass": "volatile"})
             self.events.append((res.served_by, res.static_origin))
+            self._maybe_adapt()
             return res
         key = None
         if self.l1 is not None:
@@ -331,6 +395,7 @@ class BaselinePolicy:
                                   time.monotonic() - t0)
                 self._mark_stale(res, volatile, e.content_t, self.t)
                 self.events.append((res.served_by, res.static_origin))
+                self._maybe_adapt()
                 return res
         res, content_t = self._serve_semantic(prompt, meta, t0)
         self._mark_stale(res, volatile, content_t, self.t)
@@ -340,6 +405,7 @@ class BaselinePolicy:
                         content_t=content_t,
                         expires_at=self._entry_expiry(prompt, self.t),
                         now=self.t)
+        self._maybe_adapt()
         return res
 
     def _serve_semantic(self, prompt: str, meta: Optional[dict],
@@ -361,6 +427,7 @@ class BaselinePolicy:
                               time.monotonic() - t0)
             self.events.append((res.served_by, res.static_origin))
             return res, self.t
+        tau_s, tau_d, seg = self._live_taus(prompt)
         content_t = self.t        # backend answers are generated now
         if self.fused is not None:
             # fused fast path (DESIGN.md §15): BOTH tier lookups in one
@@ -374,17 +441,17 @@ class BaselinePolicy:
                 s_s, h_idx = float(ssb[0]), int(hib[0])
                 s_d, j = float(sdb[0]), int(jdb[0])
                 res = None
-                if s_s < self.cfg.tau_static \
-                        and s_d >= self.cfg.tau_dynamic:
+                if s_s < tau_s and s_d >= tau_d:
                     self.dyn = T.touch(self.dyn, j, self.t)
                     self._last_used_np[j] = self.t
                     content_t = int(self._written_at_np[j])
                     res = ServeResult(self.dyn_answers[j], "dynamic",
                                       bool(self._static_origin_np[j]),
                                       s_d, time.monotonic() - t0)
-            if s_s >= self.cfg.tau_static:
+            if s_s >= tau_s:
                 res = ServeResult(self._serve_static(h_idx), "static",
                                   True, s_s, time.monotonic() - t0)
+                self._adapt_record(np.asarray(v), meta, h_idx, seg, res)
                 self.events.append((res.served_by, res.static_origin))
                 return res, 0
         else:
@@ -398,9 +465,10 @@ class BaselinePolicy:
             else:
                 s_s, h_idx = T.static_lookup(self.static, v)
             s_s, h_idx = float(s_s), int(h_idx)
-            if s_s >= self.cfg.tau_static:
+            if s_s >= tau_s:
                 res = ServeResult(self._serve_static(h_idx), "static",
                                   True, s_s, time.monotonic() - t0)
+                self._adapt_record(np.asarray(v), meta, h_idx, seg, res)
                 self.events.append((res.served_by, res.static_origin))
                 return res, 0
 
@@ -408,7 +476,7 @@ class BaselinePolicy:
                 self._sweep_expired_locked(self.t)
                 sd, jd = self._dyn_topk(self.dyn, v[None])
                 s_d, j = float(sd[0]), int(jd[0])
-                if s_d >= self.cfg.tau_dynamic:
+                if s_d >= tau_d:
                     if self.mesh is None:
                         self.dyn = T.touch(self.dyn, j, self.t)
                     else:   # owner-local scatter, batch-shaped
@@ -442,10 +510,14 @@ class BaselinePolicy:
             res = ServeResult(answer, "backend", False, s_d,
                               time.monotonic() - t0)
 
+        self._adapt_record(np.asarray(v), meta, h_idx, seg, res)
         self.events.append((res.served_by, res.static_origin))
         # Alg. 2 line 13: grey-zone test on EVERY static miss (dyn hit or
         # backend call alike); non-blocking, off the critical path.
-        self._after_static_miss(prompt, v, h_idx, s_s, res, meta)
+        # The gate uses the SAME live tau_static that made this serving
+        # decision — a concurrent adaptation must not widen/narrow the
+        # grey zone out from under a decision already taken.
+        self._after_static_miss(prompt, v, h_idx, s_s, res, meta, tau_s)
         return res, content_t
 
     def _mirror_write(self, slot: int, now: int, static_origin: bool,
@@ -722,10 +794,14 @@ class BaselinePolicy:
                     self.events.append(("backend", False))
                     continue
                 ss_i, h_i = float(s_sb[pos]), int(h_idxb[pos])
-                if ss_i >= self.cfg.tau_static:
+                tau_si, tau_di, seg_i = self._live_taus(prompts[i],
+                                                        locked=True)
+                if ss_i >= tau_si:
                     results[i] = ServeResult(self._serve_static(h_i),
                                              "static", True, ss_i, 0.0)
                     content_of[i] = 0
+                    self._adapt_record(V_np[pos], metas[i], h_i, seg_i,
+                                       results[i], locked=True)
                     self._mark_stale(results[i], vol[i], 0, ti)
                     self.events.append(("static", True))
                     continue
@@ -761,7 +837,7 @@ class BaselinePolicy:
                     if sw > s_d or (sw == s_d and slot < j):
                         s_d, j = sw, slot
 
-                if s_d >= self.cfg.tau_dynamic:
+                if s_d >= tau_di:
                     self._last_used_np[j] = ti
                     touched.add(j)
                     if j in written:  # answer arrives with the batch call
@@ -802,8 +878,10 @@ class BaselinePolicy:
                                              0.0)
                     content_of[i] = ti
                     self.events.append(("backend", False))
+                self._adapt_record(V_np[pos], metas[i], h_i, seg_i,
+                                   results[i], locked=True)
                 grey_rows.append((prompts[i], V_np[pos], h_i, ss_i,
-                                  results[i], metas[i], ti))
+                                  results[i], metas[i], ti, tau_si))
 
             # backend first: a failed batch must not commit its inserts
             # (the scalar path likewise only inserts after the backend
@@ -856,6 +934,7 @@ class BaselinePolicy:
         for r in results:
             r.latency_s = lat
         self._after_static_miss_batch(grey_rows)
+        self._maybe_adapt()
         return results  # type: ignore[return-value]
 
     def _apply_batch_writes(self, V: jax.Array, w_meta: dict,
@@ -963,7 +1042,23 @@ class BaselinePolicy:
             "stale_serves": self._stale_serves,
             "ttl_evictions": self._ttl_evictions,
         })
+        if self.adaptive is not None:
+            out.update(self.adaptive.stats())
         return out
+
+    def feedback(self, seq: int, ok: bool) -> bool:
+        """Operator error feedback on a served answer: ``seq`` is the
+        ``adapt_seq`` stamped into the ServeResult meta. A wrong-answer
+        report poisons the controller window row's label so the next
+        shadow sweep counts serving that query as an error. Returns
+        False when no controller is attached or the row has already
+        rotated out of the window."""
+        if self.adaptive is None:
+            return False
+        with self.dyn_lock:
+            before = self.adaptive.feedbacks
+            self.adaptive.record_feedback(seq, ok)
+            return self.adaptive.feedbacks > before
 
 
 class KritesPolicy(BaselinePolicy):
@@ -977,13 +1072,13 @@ class KritesPolicy(BaselinePolicy):
                  backend_batch_fn: Optional[Callable] = None,
                  index=None, dyn_index=None, static_texts=None,
                  mesh=None, shard_axis: str = "model", wal=None,
-                 fused=None, l1=None, freshness=None):
+                 fused=None, l1=None, freshness=None, adaptive=None):
         super().__init__(cfg, static_tier, static_answers, embed_fn,
                          backend_fn, d, embed_batch_fn=embed_batch_fn,
                          backend_batch_fn=backend_batch_fn, index=index,
                          dyn_index=dyn_index, static_texts=static_texts,
                          mesh=mesh, shard_axis=shard_axis, fused=fused,
-                         l1=l1, freshness=freshness)
+                         l1=l1, freshness=freshness, adaptive=adaptive)
         # write-ahead promotion journal (core/promo_wal.py, DESIGN.md
         # §14): each approved verdict is appended — inside dyn_lock, so
         # journal order equals apply order — before its upsert, and
@@ -1011,6 +1106,13 @@ class KritesPolicy(BaselinePolicy):
         ok = bool(self._judge_fn(**ja))
         if ok:
             payload["ttl"] = self._assign_ttl(ja)
+        # verdict evidence for the threshold controller (DESIGN.md §17):
+        # rewrite the window row's outcome label so shadow sweeps score
+        # candidate thresholds against what the judge actually decided
+        seq = payload.get("adapt_seq", 0)
+        if self.adaptive is not None and seq:
+            with self.dyn_lock:
+                self.adaptive.record_verdict(seq, ok, ja["h_cls"])
         return ok
 
     def _assign_ttl(self, ja: dict) -> int:
@@ -1028,7 +1130,7 @@ class KritesPolicy(BaselinePolicy):
         return int(self.cfg.ttl)
 
     def _grey_submission(self, prompt, v, h_idx, s_static, res, meta,
-                         enq_t):
+                         enq_t, tau_s=None):
         """Alg. 2 grey-zone gate -> (key, payload) for the pool, or None.
 
         The payload's ``judge_args`` carry the full verification triple
@@ -1036,8 +1138,15 @@ class KritesPolicy(BaselinePolicy):
         neighbor's prompt text (``static_texts``; the curated answer
         text is the fallback proxy when none were provided) and the
         curated answer itself — class ids alone are only the oracle
-        shortcut."""
-        if not (self.cfg.sigma_min <= s_static < self.cfg.tau_static):
+        shortcut.
+
+        ``tau_s`` is the live tau_static the serving decision used
+        (adaptive thresholds, DESIGN.md §17); the grey zone's upper
+        edge must be that same value, not whatever the controller has
+        moved it to since."""
+        if tau_s is None:
+            tau_s = self.cfg.tau_static
+        if not (self.cfg.sigma_min <= s_static < tau_s):
             return None
         if self.cfg.dedup and res.served_by == "dynamic" \
                 and res.static_origin:
@@ -1051,6 +1160,7 @@ class KritesPolicy(BaselinePolicy):
             "v": va,
             "h_idx": h_idx,
             "enq_t": enq_t,
+            "adapt_seq": res.meta.get("adapt_seq", 0),
             "judge_args": {
                 "q_cls": (meta or {}).get("cls", -1),
                 "h_cls": int(self._static_cls_np[h_idx]),
@@ -1060,17 +1170,18 @@ class KritesPolicy(BaselinePolicy):
             },
         })
 
-    def _after_static_miss(self, prompt, v, h_idx, s_static, res, meta):
+    def _after_static_miss(self, prompt, v, h_idx, s_static, res, meta,
+                           tau_s=None):
         sub = self._grey_submission(prompt, v, h_idx, s_static, res, meta,
-                                    self.t)
+                                    self.t, tau_s)
         if sub is not None:
             self.pool.submit(*sub)
 
     def _after_static_miss_batch(self, rows) -> None:
         items = []
-        for prompt, v, h_idx, s_static, res, meta, enq_t in rows:
+        for prompt, v, h_idx, s_static, res, meta, enq_t, tau_s in rows:
             sub = self._grey_submission(prompt, v, h_idx, s_static, res,
-                                        meta, enq_t)
+                                        meta, enq_t, tau_s)
             if sub is not None:
                 items.append(sub)
         if items:
@@ -1113,13 +1224,6 @@ class KritesPolicy(BaselinePolicy):
             self._sweep_expired_locked(apply_t)
             if exp and exp < apply_t:
                 return  # verdict outlived its own TTL; nothing to apply
-            if journal and self.wal is not None:
-                from repro.core.promo_wal import encode_record
-                ja = payload.get("judge_args", {})
-                self.wal.append(encode_record(
-                    payload["v"], h_idx, enq_t, ttl=ttl,
-                    q_text=ja.get("q_text", ""),
-                    h_text=ja.get("h_text", "")))
             # the async promotion path rides the same index: dedup
             # lookup through the segmented tail/segments (§12) or the
             # row-sharded masked scan (§13), fresh write into the tier
@@ -1130,9 +1234,21 @@ class KritesPolicy(BaselinePolicy):
                 s_d, j = T.dynamic_lookup(self.dyn, v,
                                           index=self.dyn_index)
                 s_d, j = float(s_d), int(j)
-            dup = s_d >= 0.9999
+            dup = s_d >= self.cfg.dup_threshold
             if dup and self._written_at_np[j] > enq_t:
                 return       # LWW: a newer write owns this key
+            # journal only promotions that will actually apply — the
+            # append still precedes the upsert (write-ahead contract),
+            # but a stale promotion the LWW guard skips must not land
+            # in the WAL, or replay/compaction re-applies a write the
+            # live tier rightly refused, forever
+            if journal and self.wal is not None:
+                from repro.core.promo_wal import encode_record
+                ja = payload.get("judge_args", {})
+                self.wal.append(encode_record(
+                    payload["v"], h_idx, enq_t, ttl=ttl,
+                    q_text=ja.get("q_text", ""),
+                    h_text=ja.get("h_text", "")))
             slot = j if dup else self._host_lru_slot()
             self.dyn = self._write_fn(
                 self.dyn, slot, v,

@@ -117,6 +117,7 @@ class SweepConfig(NamedTuple):
     volatile_bypass: jax.Array  # (K,) bool — volatile queries skip cache
     ttl_volatile: jax.Array  # (K,) i32 entry lifetime, volatile queries
     ttl_stable: jax.Array    # (K,) i32 entry lifetime, everything else
+    dup_threshold: jax.Array  # (K,) f32 promotion near-dup overwrite gate
 
     @property
     def n(self) -> int:
@@ -145,6 +146,9 @@ def sweep_from_configs(cfgs: Sequence[T.CacheConfig],
         ttl_volatile=jnp.asarray([c.ttl_volatile for c in cfgs],
                                  jnp.int32),
         ttl_stable=jnp.asarray([c.ttl_stable for c in cfgs], jnp.int32),
+        dup_threshold=jnp.asarray(
+            [getattr(c, "dup_threshold", 0.9999) for c in cfgs],
+            jnp.float32),
     )
 
 
@@ -243,7 +247,7 @@ def _row_write(dyn: T.DynamicTier, ks, slot, cond, q, cls, ref, so,
 def _scan_core(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
                volatile, key_id,
                tau_s, tau_d, sigma, rate, cap, lat, kr, dd,
-               l1f, vbp, ttl_v, ttl_s,
+               l1f, vbp, ttl_v, ttl_s, dupt,
                C: int, R: int, D: int, nk: int,
                use_l1: bool, use_ttl: bool) -> SimResult:
     """All K configs' full-trace scan, in explicit batched form — the
@@ -339,7 +343,7 @@ def _scan_core(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
         s_promo = jnp.where(live, s_promo_raw, -jnp.inf)
         j_dup = jnp.argmax(s_promo, axis=1)
         dup = jnp.take_along_axis(s_promo, j_dup[:, None], 1)[:, 0] \
-            >= 0.9999
+            >= dupt
         pslot = jnp.where(dup, j_dup, _lru_slots(live,
                                                  dyn.last_used, cap))
         # LWW guard against the task's *enqueue* time (idx_due), and the
@@ -524,7 +528,7 @@ _BLOCK = 64  # blocked-core window; per-block sims buffer = 2*B*K*C fp32
 def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
                        volatile, key_id,
                        tau_s, tau_d, sigma, rate, cap, lat, kr, dd,
-                       l1f, vbp, ttl_v, ttl_s,
+                       l1f, vbp, ttl_v, ttl_s, dupt,
                        C: int, R: int, D: int, nk: int,
                        use_l1: bool, use_ttl: bool) -> SimResult:
     """Blocked variant of :func:`_scan_core` for the common case where
@@ -702,7 +706,7 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
             jj = jnp.argmax(both, axis=2).astype(jnp.int32)   # (K, 2)
             j_dup = jj[:, 0]
             dup = jnp.take_along_axis(s_promo, j_dup[:, None], 1)[:, 0] \
-                >= 0.9999
+                >= dupt
             pslot = jnp.where(dup, j_dup, jj[:, 1])
             stale_w = jnp.logical_and(
                 dup, wa_of(dqi[ks, j_dup], wa0[ks, j_dup]) > idx_due)
@@ -930,7 +934,7 @@ def _run_sweep(static_emb, static_cls, q_emb, q_cls, judge_flip,
                 sweep.sigma_min, sweep.judge_rate, sweep.capacity,
                 sweep.judge_latency, sweep.krites, sweep.dedup,
                 sweep.l1, sweep.volatile_bypass, sweep.ttl_volatile,
-                sweep.ttl_stable,
+                sweep.ttl_stable, sweep.dup_threshold,
                 C=C, R=R, D=D, nk=nk, use_l1=use_l1, use_ttl=use_ttl)
 
 

@@ -350,3 +350,24 @@ class CacheConfig:
     volatile_bypass: bool = False  # volatile queries skip all caching
     ttl_volatile: int = 0       # expiry assigned to volatile writes
     ttl_stable: int = 0         # expiry assigned to non-volatile writes
+    # Near-duplicate gate for promotion upserts: a promotion whose best
+    # live neighbor scores >= dup_threshold overwrites that row in
+    # place (idempotent re-promotion) instead of taking an LRU slot.
+    # Must sit at or above tau_dynamic — below it, a key the tier
+    # already *serves* for would still spawn a second row, and the LWW
+    # staleness guard (which only applies on the dedup path) would
+    # never fire for it.
+    dup_threshold: float = 0.9999
+
+    def __post_init__(self):
+        if not (0.0 < self.dup_threshold <= 1.0):
+            raise ValueError(
+                f"dup_threshold={self.dup_threshold} outside (0, 1]")
+        # tau_dynamic > 1 is the "dynamic tier unreachable" sentinel
+        # (no cosine ever clears it), so the duplicate-row hazard this
+        # guard exists for cannot arise there
+        if self.dup_threshold < self.tau_dynamic <= 1.0:
+            raise ValueError(
+                f"dup_threshold={self.dup_threshold} < "
+                f"tau_dynamic={self.tau_dynamic}: promotions for keys "
+                "the tier already serves would duplicate rows")

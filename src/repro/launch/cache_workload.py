@@ -81,7 +81,9 @@ def run_live(n_requests: int = 800, n_clients: int = 8,
              dyn_index: str = "flat", seg_rows: int = 4096,
              compact_every: int = 4, shards: int = 1,
              l1_capacity: int = 0, volatile_bypass: bool = False,
-             ttl_volatile: int = 0, ttl_stable: int = 0) -> dict:
+             ttl_volatile: int = 0, ttl_stable: int = 0,
+             adaptive: bool = False, adapt_every: int = 256,
+             adapt_window: int = 1024) -> dict:
     """Live router-fronted serving demo: the batched serving path under
     concurrent client load, with per-tier hit and latency telemetry.
     ``index='ivf'`` swaps the static lookup for the quantized ANN index
@@ -129,6 +131,13 @@ def run_live(n_requests: int = 800, n_clients: int = 8,
                       l1=bool(l1_capacity),
                       volatile_bypass=volatile_bypass,
                       ttl_volatile=ttl_volatile, ttl_stable=ttl_stable)
+    adaptive_ctl = None
+    if adaptive:
+        from repro.core.adaptive import (AdaptiveController,
+                                         AdaptiveParams)
+        adaptive_ctl = AdaptiveController(
+            cfg, d=64, params=AdaptiveParams(window=adapt_window,
+                                             adapt_every=adapt_every))
     policy = KritesPolicy(
         cfg, tier, answers,
         embed, backend_fn=lambda p: f"generated({p})",
@@ -136,6 +145,7 @@ def run_live(n_requests: int = 800, n_clients: int = 8,
         backend_batch_fn=lambda ps: [f"generated({p})" for p in ps],
         index=idx_obj, static_texts=texts, mesh=mesh,
         l1=l1_capacity or None, freshness=freshness,
+        adaptive=adaptive_ctl,
         dyn_index=build_dyn_index(dyn_index, cfg.capacity, 64,
                                   seg_rows=seg_rows,
                                   compact_every=compact_every))
@@ -214,6 +224,13 @@ if __name__ == "__main__":
     ap.add_argument("--ttl-stable", type=int, default=0,
                     help="per-entry cache lifetime for stable/unknown "
                          "content in --live (ticks; 0 = never)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="attach the online threshold controller to "
+                         "--live serving (DESIGN.md §17)")
+    ap.add_argument("--adapt-every", type=int, default=256,
+                    help="recorded requests between shadow sweeps")
+    ap.add_argument("--adapt-window", type=int, default=1024,
+                    help="controller request-window ring size")
     a = ap.parse_args()
     if a.live:
         run_live(n_requests=a.requests, n_clients=a.clients,
@@ -223,7 +240,9 @@ if __name__ == "__main__":
                  compact_every=a.compact_every, shards=a.shards,
                  l1_capacity=a.l1_capacity,
                  volatile_bypass=a.volatile_bypass,
-                 ttl_volatile=a.ttl_volatile, ttl_stable=a.ttl_stable)
+                 ttl_volatile=a.ttl_volatile, ttl_stable=a.ttl_stable,
+                 adaptive=a.adaptive, adapt_every=a.adapt_every,
+                 adapt_window=a.adapt_window)
     else:
         run(multi_pod=False)
         run(multi_pod=True)

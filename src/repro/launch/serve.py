@@ -305,6 +305,21 @@ def main() -> None:
                     help="save a snapshot every N served requests "
                          "(0 = only at shutdown / on the stdio "
                          "'snapshot' op)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="online threshold controller (DESIGN.md §17): "
+                         "per-segment tau_static/tau_dynamic operating "
+                         "points tuned live by shadow sweeps over the "
+                         "recent request window")
+    ap.add_argument("--adapt-every", type=int, default=256,
+                    help="recorded requests between shadow sweeps")
+    ap.add_argument("--adapt-window", type=int, default=1024,
+                    help="request-window ring size the shadow sweep "
+                         "re-scores (the first sweep waits for a full "
+                         "window)")
+    ap.add_argument("--adapt-frozen", action="store_true",
+                    help="attach the controller (stats, window, "
+                         "persistence) but never move thresholds — "
+                         "serving stays bit-identical to pinned")
     ap.add_argument("--serve-stdio", action="store_true",
                     help="run as a long-lived JSON-lines service on "
                          "stdin/stdout instead of the demo loop (the "
@@ -418,6 +433,17 @@ def main() -> None:
                       volatile_bypass=args.volatile_bypass,
                       ttl_volatile=args.ttl_volatile,
                       ttl_stable=args.ttl_stable)
+    adaptive = None
+    if args.adaptive:
+        from repro.core.adaptive import (AdaptiveController,
+                                         AdaptiveParams)
+        adaptive = AdaptiveController(
+            cfg, d=64,
+            params=AdaptiveParams(window=args.adapt_window,
+                                  adapt_every=args.adapt_every),
+            frozen=args.adapt_frozen)
+        print(f"adaptive thresholds: window={args.adapt_window} "
+              f"every={args.adapt_every} frozen={args.adapt_frozen}")
     policy = KritesPolicy(cfg, tier, answers, embed,
                           backend_fn=frontend.submit,
                           judge_fn=OracleJudge(freshness=freshness),
@@ -426,7 +452,7 @@ def main() -> None:
                           index=index, static_texts=texts,
                           mesh=mesh, wal=wal, fused=fused,
                           l1=args.l1_capacity or None,
-                          freshness=freshness,
+                          freshness=freshness, adaptive=adaptive,
                           dyn_index=build_dyn_index(
                               dyn_index, cfg.capacity, 64,
                               seg_rows=args.seg_rows,

@@ -54,8 +54,8 @@ import numpy as np
 
 from repro.distributed import checkpoint as ckpt
 
-SNAP_FORMAT = 2            # 2: + expires_at mirror, L1 front-tier state
-SNAP_FORMATS = (1, 2)      # formats the loader understands
+SNAP_FORMAT = 3            # 3: + adaptive threshold controller state
+SNAP_FORMATS = (1, 2, 3)   # formats the loader understands
 SNAP_KIND = "krites-snapshot"
 
 
@@ -118,8 +118,17 @@ def save_snapshot(snap_dir: str | Path, policy, *, step: Optional[int] = None,
         dyn_answers = [_jsonable(a) for a in policy.dyn_answers]
         l1 = getattr(policy, "l1", None)
         l1_state = l1.to_state() if l1 is not None else None
+        # adaptive threshold controller (DESIGN.md §17): window arrays
+        # ride the hashed leaf tree, counters/rng/taus the manifest —
+        # captured in the same consistent cut as the tier they tuned
+        adaptive = getattr(policy, "adaptive", None)
+        adaptive_arrays = adaptive_scalars = None
+        if adaptive is not None:
+            adaptive_arrays, adaptive_scalars = adaptive.to_state()
 
     tree: dict = {"dyn": dyn, "mirrors": mirrors}
+    if adaptive_arrays is not None:
+        tree["adaptive"] = adaptive_arrays
     extra: dict = {
         "format": SNAP_FORMAT,
         "kind": SNAP_KIND,
@@ -132,6 +141,7 @@ def save_snapshot(snap_dir: str | Path, policy, *, step: Optional[int] = None,
         "l1": l1_state,
         "dyn_index": policy.describe_dyn_index()
         if policy.dyn_index is not None else None,
+        "adaptive": adaptive_scalars,
         "ivf": None,
         "static_hash": None,
     }
@@ -357,8 +367,21 @@ def restore_policy(policy, snap: "Snapshot | str | Path", *,
     if getattr(policy, "l1", None) is not None and l1_state:
         l1_restored = policy.l1.load_state(l1_state, now=policy.t)
 
+    # adaptive controller state (DESIGN.md §17): live per-segment
+    # thresholds, the evidence window, and the regret counters pick up
+    # exactly where the crashed process left them — a restart must not
+    # reset the operating point back to the pinned config
+    adaptive_restored = False
+    ad_scalars = snap.extra.get("adaptive")
+    if getattr(policy, "adaptive", None) is not None \
+            and ad_scalars and "adaptive" in snap.tree:
+        with policy.dyn_lock:
+            policy.adaptive.load_state(snap.tree["adaptive"], ad_scalars)
+        adaptive_restored = True
+
     report = {
         "step": snap.step, "t": policy.t,
+        "adaptive_restored": adaptive_restored,
         "wal_seq": int(snap.extra.get("wal_seq", 0)),
         "dyn_live": int(policy._valid_np.sum()),
         "ttl_dropped": int(ttl_dropped),

@@ -142,6 +142,23 @@ class CacheRouter:
             p.done.wait(timeout_s)
         return [p.result for p in pending]
 
+    def feedback(self, result, ok: bool) -> bool:
+        """Operator error feedback on a served answer (DESIGN.md §17):
+        pass the ``ServeResult`` (or its ``meta['adapt_seq']`` int) and
+        whether the answer was right. A wrong-answer report rewrites
+        the threshold controller's window-row label, so the next shadow
+        sweep scores serving that query as an error. No-op (False)
+        without an adaptive controller or once the row has rotated out
+        of the bounded window."""
+        fb = getattr(self.policy, "feedback", None)
+        if fb is None:
+            return False
+        seq = result if isinstance(result, int) \
+            else (getattr(result, "meta", None) or {}).get("adapt_seq", 0)
+        if not seq:
+            return False
+        return bool(fb(seq, ok))
+
     # -- collector callback ------------------------------------------------
     def _serve(self, batch: List[_PendingRequest]):
         try:
@@ -244,6 +261,13 @@ class CacheRouter:
             wal = getattr(self.policy, "wal", None)
             if wal is not None:
                 out["wal_seq"] = wal.stats()["seq"]
+            adaptive = getattr(self.policy, "adaptive", None)
+            if adaptive is not None:
+                # online threshold controller (DESIGN.md §17): live
+                # per-segment operating points, window fill, and the
+                # regret-style counters (shadow hits the pinned point
+                # left on the table vs the measured frontier)
+                out.update(adaptive.stats())
             if self._last_error:
                 out["last_error"] = self._last_error
             if lat.size:

@@ -165,17 +165,19 @@ class _Dyn:
         if self.index is not None:
             self.index.record_write(slot)
 
-    def upsert(self, q, cls, ref, now, enq=None, so=True, exp=0):
+    def upsert(self, q, cls, ref, now, enq=None, so=True, exp=0,
+               dup_sim=DEDUP_SIM):
         """Idempotent, LWW-guarded promotion write (Alg. 2 line 21).
 
         ``enq`` is the promotion's enqueue time (default ``now``): the
         LWW guard compares against it and it becomes the row's
         ``written_at``, while ``now`` — the apply time — becomes the
         LRU clock, so a delayed promotion lands LRU-warm (the live
-        ``KritesPolicy._promote`` clock split)."""
+        ``KritesPolicy._promote`` clock split). ``dup_sim`` is the
+        near-duplicate overwrite gate (``CacheConfig.dup_threshold``)."""
         enq = now if enq is None else enq
         s, j = self.lookup(q, now)
-        dup = s >= DEDUP_SIM
+        dup = s >= dup_sim
         if dup and self.written_at[j] > enq:
             return                     # stale judgment: newer entry wins
         self.write(j if dup else self.lru_slot(now), q, cls, ref, so,
@@ -247,6 +249,7 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
 
     C = capacity or cfg.capacity
     lat = max(1, cfg.judge_latency)
+    dup_sim = float(getattr(cfg, "dup_threshold", DEDUP_SIM))
     l1f = bool(getattr(cfg, "l1", False))
     vbp = bool(getattr(cfg, "volatile_bypass", False))
     ttl_v = int(getattr(cfg, "ttl_volatile", 0))
@@ -301,7 +304,7 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
                 exp_p = enq + tau_p if tau_p > 0 else 0
                 if not (exp_p > 0 and exp_p < t):
                     dyn.upsert(task.emb, task.hcls, task.href, now=t,
-                               enq=enq, exp=exp_p)
+                               enq=enq, exp=exp_p, dup_sim=dup_sim)
 
         # ---- 1b. freshness front: volatile bypass, then the L1 exact-
         # match probe — both before any tier traffic
@@ -397,12 +400,12 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
     applied = len(journal) if crash_after is None \
         else min(crash_after, len(journal))
     for rec in journal[:applied]:       # upserts that landed pre-crash
-        dyn.upsert(*rec)
+        dyn.upsert(*rec, dup_sim=dup_sim)
     if crash_after is not None or extra_replays:
         for _ in range(max(1 if crash_after is not None else 0,
                            extra_replays)):
             for rec in journal:         # full-journal replay, in order
-                dyn.upsert(*rec)
+                dyn.upsert(*rec, dup_sim=dup_sim)
 
     out.update({
         "judge_calls": judge_calls, "judge_approved": judge_approved,
@@ -419,3 +422,156 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
         },
     })
     return out
+
+
+def ref_adaptive(static_emb, static_cls, q_emb, q_label, q_seg, cfg,
+                 params=None, feedback=None) -> dict:
+    """Numpy twin of ``BaselinePolicy`` + ``AdaptiveController`` on the
+    scalar serving path (the oracle for DESIGN.md §17).
+
+    One imperative loop per request: serve under the *live per-segment*
+    thresholds, record (embedding, label, segment) into the bounded
+    window, and at the controller's cadence run the shadow sweep — here
+    evaluated candidate-by-candidate through :func:`ref_simulate`
+    (krites=False), the independent numpy evaluator, instead of the
+    live controller's one batched ``simulate_sweep`` dispatch. The
+    *selection* arithmetic (grid construction, feasibility, hysteresis,
+    bounded step, LCG exploration) is deliberately the shared pure code
+    from ``core/adaptive.py``: the oracle's independence lives in the
+    decision streams, and the existing simulator differentials already
+    pin ``ref_simulate`` against ``simulate_sweep``. Every adaptive
+    decision — tau trajectory, move/explore/regret counters, and the
+    serving stream they produce — must match the live policy
+    field-identically.
+
+    ``q_label`` is the caller-declared class per request (−1 = none:
+    the static neighbor's class is recorded instead, like the live
+    ``_adapt_record``). ``q_seg`` is the per-request traffic segment.
+    ``feedback``, when given, marks requests whose served answer gets
+    an immediate wrong-answer report: the window row's label is
+    poisoned with the live path's unique ``−2−seq`` sentinel right
+    after serving, before the next request.
+    """
+    from repro.core.adaptive import (N_SEGMENTS, AdaptiveParams,
+                                     candidate_grid, choose_candidate,
+                                     lcg_next)
+    from repro.core.tiers import CacheConfig
+
+    p = params or AdaptiveParams()
+    static_emb = np.asarray(static_emb, np.float32)
+    static_cls = np.asarray(static_cls, np.int32)
+    q_emb = np.asarray(q_emb, np.float32)
+    q_label = np.asarray(q_label, np.int64)
+    q_seg = np.asarray(q_seg, np.int64)
+    N, d = q_emb.shape
+    if feedback is None:
+        feedback = np.zeros(N, bool)
+
+    tau_s = [float(cfg.tau_static)] * N_SEGMENTS
+    tau_d = [float(cfg.tau_dynamic)] * N_SEGMENTS
+    w_emb = np.zeros((p.window, d), np.float32)
+    w_label = np.zeros(p.window, np.int32)
+    w_seg = np.zeros(p.window, np.int8)
+    count = since = 0
+    rng = lcg_next(p.seed & ((1 << 64) - 1))
+    dyn = _Dyn.make(cfg.capacity, d)
+    adaptations = moves = explores = 0
+    regret = [0] * N_SEGMENTS
+
+    sims = q_emb @ static_emb.T
+    h_idx = np.argmax(sims, axis=1)
+    s_static = sims[np.arange(N), h_idx].astype(np.float32)
+    h_cls = static_cls[h_idx]
+
+    served_by = np.zeros(N, np.int8)
+    tau_trail = []          # (request idx, tau_s copy, tau_d copy)
+
+    def shadow_cfg(ts, td):
+        # must construct the SAME candidate config the live
+        # AdaptiveController._shadow_cfg builds
+        return CacheConfig(tau_static=ts, tau_dynamic=td, sigma_min=0.0,
+                           capacity=p.shadow_capacity, judge_latency=1,
+                           dup_threshold=1.0)
+
+    for t in range(N):
+        q, seg = q_emb[t], int(q_seg[t])
+        ss = float(s_static[t])
+        if ss >= tau_s[seg]:
+            served_by[t] = STATIC_HIT
+        else:
+            s_dyn, j = dyn.lookup(q, t)
+            if s_dyn >= tau_d[seg]:
+                served_by[t] = DYN_HIT_PROMOTED \
+                    if dyn.static_origin[j] else DYN_HIT_DYNAMIC
+                dyn.last_used[j] = t
+            else:
+                served_by[t] = MISS
+                dyn.write(dyn.lru_slot(t), q, int(q_label[t]), -1,
+                          False, t)
+        # window record (every semantic serve) + optional feedback
+        label = int(q_label[t]) if q_label[t] >= 0 else int(h_cls[t])
+        i = count % p.window
+        w_emb[i], w_seg[i] = q, seg
+        count += 1
+        since += 1
+        w_label[i] = (-2 - count) if feedback[t] else label
+
+        # serve-call-boundary adaptation check (scalar cadence)
+        if since < p.adapt_every or count < p.window:
+            continue
+        since = 0
+        pos = count % p.window
+        order = np.concatenate([np.arange(pos, p.window),
+                                np.arange(0, pos)])
+        emb, lab, sg = w_emb[order], w_label[order], w_seg[order]
+        rng = lcg_next(rng)
+        adaptations += 1
+
+        active = [s for s in range(N_SEGMENTS)
+                  if int((sg == s).sum()) >= p.min_segment]
+        if not active:
+            continue
+        spans, cfgs = {}, []
+        for s in active:
+            cands, ci = candidate_grid(tau_s[s], tau_d[s], p)
+            spans[s] = (len(cfgs), cands, ci)
+            cfgs.extend(shadow_cfg(ts, td) for ts, td in cands)
+        sb = np.stack([ref_simulate(static_emb, static_cls, emb, lab,
+                                    c, krites=False)["served_by"]
+                       for c in cfgs])
+        cr = np.stack([ref_simulate(static_emb, static_cls, emb, lab,
+                                    c, krites=False)["correct"]
+                       for c in cfgs])
+        hit = sb != MISS
+        bad = hit & ~cr
+        explore = (rng >> 17) % 1_000_000 < int(p.epsilon * 1_000_000)
+        for s in active:
+            start, cands, ci = spans[s]
+            mask = sg == s
+            n_seg = int(mask.sum())
+            hits = [int((hit[start + k] & mask).sum())
+                    for k in range(len(cands))]
+            errs = [int((bad[start + k] & mask).sum())
+                    for k in range(len(cands))]
+            pick = (lcg_next(rng + s) >> 11) if explore else None
+            k, reason = choose_candidate(hits, errs, n_seg, ci, p, pick)
+            g, _ = choose_candidate(hits, errs, n_seg, ci, p, None)
+            regret[s] += max(0, hits[g] - hits[ci])
+            if reason == "explore":
+                explores += 1
+            cs, cd = tau_s[s], tau_d[s]
+            ts = cs + min(max(cands[k][0] - cs, -p.max_step), p.max_step)
+            td = cd + min(max(cands[k][1] - cd, -p.max_step), p.max_step)
+            ts = min(max(ts, p.tau_lo), p.tau_hi)
+            td = min(max(td, p.tau_lo), p.tau_hi)
+            if (ts, td) != (tau_s[s], tau_d[s]):
+                moves += 1
+                tau_s[s], tau_d[s] = ts, td
+        tau_trail.append((t, list(tau_s), list(tau_d)))
+
+    return {
+        "served_by": served_by, "tau_static": tau_s, "tau_dynamic": tau_d,
+        "tau_trail": tau_trail, "adaptations": adaptations,
+        "moves": moves, "explores": explores, "regret": regret,
+        "count": count,
+    }

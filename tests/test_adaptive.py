@@ -1,0 +1,480 @@
+"""Online per-segment threshold adaptation (DESIGN.md §17).
+
+Contracts pinned here:
+
+1. Pure selection arithmetic — candidate grids keep the live point at
+   their center, and ``choose_candidate`` walks the measured frontier
+   with feasibility / hysteresis / repair / explore exactly as
+   documented.
+2. Direction — a window whose frontier says "lower tau wins within the
+   error budget" moves the live point down by exactly the bounded step;
+   a frozen controller never sweeps.
+3. Adaptive-off differential — a policy with a frozen (or absent)
+   controller is BIT-IDENTICAL to the pinned-threshold policy on the
+   scalar and batched serving paths: same events, same answers, same
+   host mirrors, agreement 1.0.
+4. Oracle differential — the live controller loop (window recording,
+   judge/feedback label rewrites, shadow sweep, epsilon-greedy
+   selection, bounded nudges) matches the pure-numpy twin
+   ``ref_policy.ref_adaptive`` field-identically: served stream, tau
+   trajectories, adaptation/move/explore/regret counters.
+5. Persistence — controller state (window ring, live thresholds,
+   counters, LCG) survives a snapshot + SIGKILL + restore, and the
+   recovered service's subsequent decisions are identical to a twin
+   that never crashed.
+6. Telemetry — live per-segment operating points and regret counters
+   surface through ``CacheRouter.stats()``; ``CacheRouter.feedback``
+   reaches the window.
+
+All embeddings are L2-normalize fixpoints over one-hot mixtures, so
+device and numpy matmuls agree bit-for-bit and every threshold sits
+>= 3e-3 away from any similarity the trace can produce.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from ref_policy import (DYN_HIT_DYNAMIC, DYN_HIT_PROMOTED, MISS,
+                        STATIC_HIT, ref_adaptive)
+
+from repro.core.adaptive import (AdaptiveController, AdaptiveParams,
+                                 N_SEGMENTS, candidate_grid,
+                                 choose_candidate, segment_of)
+from repro.core.judge import OracleJudge
+from repro.core.policy import BaselinePolicy, KritesPolicy
+from repro.core.tiers import CacheConfig, make_static_tier
+from repro.index.flat import l2_normalize
+
+D = 32
+N_CLASSES = 8
+# similarity levels sit 5e-3 off the 0.01 grid every reachable
+# threshold lives on (taus move in max_step=0.02 hops from 0.95 and
+# candidates sit grid_radius=0.04 away), so no decision is ever within
+# an ulp of a boundary
+SIM_LEVELS = (0.915, 0.925, 0.935, 0.945)
+SEG_PREFIX = {0: "how to", 1: "latest", 2: "definition of"}
+
+CODE_NAME = {MISS: "backend", STATIC_HIT: "static",
+             DYN_HIT_DYNAMIC: "dynamic", DYN_HIT_PROMOTED: "dynamic"}
+
+
+def _unit_fix(V):
+    """L2-normalize to a fixpoint: the returned rows renormalize to
+    themselves bit-for-bit, so the live policy's ``l2_normalize`` of an
+    embed output is the identity and oracle inputs match exactly."""
+    Vj = jnp.asarray(V, jnp.float32)
+    for _ in range(8):
+        V2 = l2_normalize(Vj)
+        if bool(jnp.array_equal(V2, Vj)):
+            return np.asarray(Vj)
+        Vj = V2
+    raise AssertionError("l2_normalize fixpoint not reached")
+
+
+def _static(d=D, n=N_CLASSES):
+    emb = np.eye(d, dtype=np.float32)[:n]
+    tier = make_static_tier(jnp.asarray(emb), jnp.arange(n))
+    return tier, [f"curated-{i}" for i in range(n)], emb
+
+
+def _workload(n, seed=0, d=D, no_meta_every=7):
+    """Deterministic mixed-segment trace: request i is a paraphrase of
+    static class ``cls[i]`` at one of SIM_LEVELS, perturbed along a
+    private orthogonal direction, phrased with its segment's keyword.
+    Every ``no_meta_every``-th request declares no class (meta None /
+    q_label −1): the window label must fall back to the static
+    neighbor's class."""
+    rng = np.random.default_rng(seed)
+    base = np.eye(d, dtype=np.float32)
+    cls = rng.integers(0, N_CLASSES, n)
+    dirs = N_CLASSES + (np.arange(n) % (d - N_CLASSES))
+    lvl = np.asarray(SIM_LEVELS, np.float64)[
+        rng.integers(0, len(SIM_LEVELS), n)]
+    V = (lvl[:, None] * base[cls]
+         + np.sqrt(1.0 - lvl ** 2)[:, None] * base[dirs])
+    V = _unit_fix(V.astype(np.float32))
+    segs = (np.arange(n) % 3).astype(np.int64)
+    prompts = [f"{SEG_PREFIX[int(s)]} q{i}" for i, s in enumerate(segs)]
+    for i, s in enumerate(segs):          # the keying the policies use
+        assert segment_of(prompts[i]) == int(s)
+    labels = cls.astype(np.int64).copy()
+    metas = []
+    for i in range(n):
+        if no_meta_every and i % no_meta_every == no_meta_every - 1:
+            labels[i] = -1
+            metas.append(None)
+        else:
+            metas.append({"cls": int(cls[i])})
+    embed = {p: V[i] for i, p in enumerate(prompts)}
+    return V, cls, labels, segs, prompts, metas, embed.__getitem__
+
+
+def _params(**kw):
+    base = dict(window=96, adapt_every=32, min_segment=16,
+                shadow_capacity=64, error_budget=0.06)
+    base.update(kw)
+    return AdaptiveParams(**base)
+
+
+# ---------------------------------------------------------------------------
+# 1. pure selection arithmetic
+# ---------------------------------------------------------------------------
+
+def test_candidate_grid_center_survives_clipping():
+    p = AdaptiveParams()
+    cands, ci = candidate_grid(0.99, 0.99, p)     # center at tau_hi
+    assert len(cands) == p.grid_points ** 2
+    assert cands[ci] == (0.99, 0.99)
+    assert all(p.tau_lo <= ts <= p.tau_hi
+               and p.tau_lo <= td <= p.tau_hi for ts, td in cands)
+    cands, ci = candidate_grid(0.9, 0.88, p)
+    assert cands[ci] == (0.9, 0.88)
+    # odd grid: one candidate strictly below and one strictly above
+    # the center on each axis
+    assert min(ts for ts, _ in cands) < 0.9 < max(ts for ts, _ in cands)
+
+
+def test_choose_candidate_reasons():
+    p = AdaptiveParams(hysteresis=0.01, error_budget=0.02)
+    n = 100       # budget = 2 errors
+    # greedy: a feasible candidate beats the center by > hysteresis
+    k, why = choose_candidate([5, 40, 10], [0, 1, 0], n, 2, p, None)
+    assert (k, why) == (1, "greedy")
+    # hold: gain below the hysteresis band
+    k, why = choose_candidate([39, 40, 10], [0, 1, 0], n, 0, p, None)
+    assert (k, why) == (0, "hold")
+    # infeasible candidates are ignored even when they dominate on hits
+    k, why = choose_candidate([5, 90, 10], [0, 50, 0], n, 0, p, None)
+    assert (k, why) == (2, "greedy")
+    # repair: nothing within budget -> minimum error wins
+    k, why = choose_candidate([50, 40, 30], [9, 7, 3], n, 0, p, None)
+    assert (k, why) == (2, "repair")
+    # explore indexes uniformly into the feasible set only
+    k, why = choose_candidate([5, 90, 10], [0, 50, 0], n, 0, p, 3)
+    assert why == "explore" and k in (0, 2)
+
+
+# ---------------------------------------------------------------------------
+# 2. direction + cadence on a synthetic window
+# ---------------------------------------------------------------------------
+
+def _synthetic_controller(frozen=False, d=40):
+    """Window full of sim-0.92 paraphrases of class 0: every candidate
+    below 0.92 serves all of them correctly, the 0.95 center serves
+    none — the frontier says 'move down'."""
+    base = np.eye(d, dtype=np.float32)
+    p = AdaptiveParams(window=32, adapt_every=32, min_segment=8,
+                       shadow_capacity=64)
+    cfg = CacheConfig(0.95, 0.95, capacity=64)
+    ctl = AdaptiveController(cfg, d=d, params=p, frozen=frozen)
+    V = _unit_fix(0.92 * base[0]
+                  + np.sqrt(1 - 0.92 ** 2) * base[4:36])
+    for i in range(p.window):
+        ctl.record(V[i], 0, 0)
+    return ctl, base[:4], np.arange(4, dtype=np.int32)
+
+
+def test_controller_moves_down_bounded():
+    ctl, s_emb, s_cls = _synthetic_controller()
+    lock = threading.Lock()
+    assert ctl.maybe_adapt(lock, s_emb, s_cls)
+    p = ctl.params
+    assert ctl.adaptations == 1 and ctl.moves == 1
+    # the frontier winner is 0.04 below, the move is clamped to 0.02
+    assert ctl.tau_static[0] == pytest.approx(0.95 - p.max_step)
+    assert ctl.tau_dynamic[0] == pytest.approx(0.95 - p.max_step)
+    assert ctl.regret[0] == 32        # hits the pinned point left behind
+    # inactive segments never move
+    assert ctl.tau_static[1] == 0.95 and ctl.tau_static[2] == 0.95
+    # cadence: the counter reset means an immediate re-check is a no-op
+    assert not ctl.maybe_adapt(lock, s_emb, s_cls)
+
+
+def test_frozen_controller_never_sweeps():
+    ctl, s_emb, s_cls = _synthetic_controller(frozen=True)
+    assert not ctl.maybe_adapt(threading.Lock(), s_emb, s_cls)
+    assert ctl.adaptations == 0 and ctl.moves == 0
+    assert ctl.tau_static == [0.95] * N_SEGMENTS
+    s = ctl.stats()
+    assert s["adaptive_frozen"] and s["adaptive_window_fill"] == 32
+
+
+# ---------------------------------------------------------------------------
+# 3. adaptive-off differential: frozen == pinned, bit for bit
+# ---------------------------------------------------------------------------
+
+def _mirror_state(pol):
+    return (pol._valid_np.copy(), pol._last_used_np.copy(),
+            pol._written_at_np.copy(), pol._static_origin_np.copy(),
+            np.asarray(pol.dyn.emb).copy(), list(pol.dyn_answers))
+
+
+def _assert_twin_state(a, b):
+    for x, y in zip(_mirror_state(a), _mirror_state(b)):
+        if isinstance(x, list):
+            assert x == y
+        else:
+            assert np.array_equal(x, y)
+
+
+def test_frozen_is_bit_identical_to_pinned_scalar():
+    tier, answers, _ = _static()
+    _, _, _, _, prompts, metas, embed = _workload(120, seed=1)
+    cfg = CacheConfig(0.93, 0.9, sigma_min=0.3, capacity=64)
+
+    def build(adaptive):
+        return KritesPolicy(cfg, tier, answers, embed,
+                            lambda p: f"gen({p})", OracleJudge(), d=D,
+                            n_workers=1, adaptive=adaptive)
+
+    pinned = build(None)
+    frozen = build(AdaptiveController(cfg, d=D, params=_params(),
+                                      frozen=True))
+    for p, m in zip(prompts, metas):
+        ra = pinned.serve(p, meta=m)
+        rb = frozen.serve(p, meta=m)
+        assert (ra.answer, ra.served_by, ra.static_origin) == \
+               (rb.answer, rb.served_by, rb.static_origin)
+        # drain so async promotions land at the same request boundary
+        # in both twins — determinism, not a serving requirement
+        pinned.pool.drain()
+        frozen.pool.drain()
+    agreement = np.mean([ea == eb for ea, eb in
+                         zip(pinned.events, frozen.events)])
+    assert agreement == 1.0
+    _assert_twin_state(pinned, frozen)
+    s = frozen.stats()
+    assert s["adaptive_adaptations"] == 0 and s["adaptive_moves"] == 0
+    assert s["tau_static_unknown"] == cfg.tau_static
+    pinned.pool.stop()
+    frozen.pool.stop()
+
+
+def test_frozen_is_bit_identical_to_pinned_batch():
+    tier, answers, _ = _static()
+    _, _, _, _, prompts, metas, embed = _workload(128, seed=2)
+    cfg = CacheConfig(0.93, 0.9, capacity=64)
+
+    def build(adaptive):
+        return BaselinePolicy(
+            cfg, tier, answers, embed, lambda p: f"gen({p})", d=D,
+            backend_batch_fn=lambda ps: [f"gen({p})" for p in ps],
+            adaptive=adaptive)
+
+    pinned = build(None)
+    frozen = build(AdaptiveController(cfg, d=D, params=_params(),
+                                      frozen=True))
+    B = 16
+    for i in range(0, len(prompts), B):
+        ra = pinned.serve_batch(prompts[i:i + B], metas[i:i + B])
+        rb = frozen.serve_batch(prompts[i:i + B], metas[i:i + B])
+        assert [(r.answer, r.served_by) for r in ra] == \
+               [(r.answer, r.served_by) for r in rb]
+    assert pinned.events == frozen.events
+    _assert_twin_state(pinned, frozen)
+
+
+# ---------------------------------------------------------------------------
+# 4. oracle differential: live controller == numpy twin
+# ---------------------------------------------------------------------------
+
+def _run_live_adaptive(n, seed, params, feedback=None):
+    tier, answers, _ = _static()
+    _, _, labels, segs, prompts, metas, embed = _workload(n, seed=seed)
+    cfg = CacheConfig(0.95, 0.95, capacity=64)
+    ctl = AdaptiveController(cfg, d=D, params=params)
+    pol = BaselinePolicy(cfg, tier, answers, embed,
+                         lambda p: f"gen({p})", d=D, adaptive=ctl)
+    events = []
+    for t, (p, m) in enumerate(zip(prompts, metas)):
+        res = pol.serve(p, meta=m)
+        events.append(res.served_by)
+        if feedback is not None and feedback[t]:
+            assert pol.feedback(res.meta["adapt_seq"], False)
+    return pol, ctl, events, labels, segs
+
+
+@pytest.mark.parametrize("epsilon", [0.0, 0.6])
+def test_adaptive_matches_numpy_oracle(epsilon):
+    n, seed = 224, 3
+    params = _params(epsilon=epsilon)
+    feedback = np.zeros(n, bool)
+    feedback[28::29] = True               # sparse wrong-answer reports
+    pol, ctl, events, labels, segs = _run_live_adaptive(
+        n, seed, params, feedback)
+    V, _, _, _, _, _, _ = _workload(n, seed=seed)
+    tier, _, _ = _static()
+    ref = ref_adaptive(np.asarray(tier.emb), np.asarray(tier.cls),
+                       V, labels, segs, CacheConfig(0.95, 0.95,
+                                                    capacity=64),
+                       params=params, feedback=feedback)
+    # the serving stream, decision for decision
+    assert events == [CODE_NAME[int(c)] for c in ref["served_by"]]
+    # the tau trajectories and every controller counter, field-identical
+    assert ctl.tau_static == ref["tau_static"]
+    assert ctl.tau_dynamic == ref["tau_dynamic"]
+    assert ctl.adaptations == ref["adaptations"] > 0
+    assert ctl.moves == ref["moves"]
+    assert ctl.explores == ref["explores"]
+    assert ctl.regret == ref["regret"]
+    assert ctl._count == ref["count"] == n
+    if epsilon == 0.0:
+        # the workload's frontier sits below the pinned 0.95: the
+        # controller must actually have walked down
+        assert ref["moves"] > 0
+        assert min(ctl.tau_static) < 0.95
+    else:
+        assert ref["explores"] > 0
+    assert ctl.feedbacks == int(feedback.sum())
+
+
+# ---------------------------------------------------------------------------
+# 5. persistence: snapshot + SIGKILL + restore
+# ---------------------------------------------------------------------------
+
+CRASH_N1, CRASH_N2 = 160, 48
+
+
+def _crash_build():
+    """One deterministic adaptive serving stack, shared (via import)
+    by the test process, the SIGKILL child and the never-crashed twin."""
+    tier, answers, _ = _static()
+    _, _, _, _, prompts, metas, embed = _workload(CRASH_N1 + CRASH_N2,
+                                                  seed=5)
+    cfg = CacheConfig(0.95, 0.95, capacity=64)
+    ctl = AdaptiveController(cfg, d=D, params=_params())
+    pol = BaselinePolicy(cfg, tier, answers, embed,
+                         lambda p: f"gen({p})", d=D, adaptive=ctl)
+    return pol, prompts, metas
+
+
+_CHILD = """
+import sys, time
+sys.path.insert(0, {tests!r})
+from test_adaptive import _crash_build, CRASH_N1
+from repro.serving.persist import save_snapshot
+
+pol, prompts, metas = _crash_build()
+for p, m in zip(prompts[:CRASH_N1], metas[:CRASH_N1]):
+    pol.serve(p, meta=m)
+save_snapshot(sys.argv[1], pol, step=0)
+print("SNAP", flush=True)
+time.sleep(300)      # parent SIGKILLs here: no clean shutdown ever runs
+"""
+
+
+def test_adaptive_state_survives_sigkill_restore(tmp_path):
+    from repro.serving.persist import restore_policy, save_snapshot
+
+    here = str(Path(__file__).resolve().parent)
+    env = {"PYTHONPATH": str(Path(here).parent / "src"),
+           "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+           "JAX_PLATFORMS": "cpu", "PYTHONUNBUFFERED": "1",
+           "HOME": os.environ.get("HOME", "/tmp")}
+    proc = subprocess.Popen(
+        [sys.executable, "-c", _CHILD.format(tests=here),
+         str(tmp_path / "snap")],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        env=env)
+    try:
+        deadline = time.monotonic() + 300
+        for line in proc.stdout:
+            assert time.monotonic() < deadline, "child wedged"
+            if line.strip() == "SNAP":
+                os.kill(proc.pid, signal.SIGKILL)
+                break
+        else:
+            pytest.fail(f"child died early: {proc.stderr.read()}")
+        proc.wait(timeout=60)
+    finally:
+        proc.stderr.close()
+        proc.stdout.close()
+        if proc.poll() is None:
+            proc.kill()
+
+    # the twin that never crashed
+    twin, prompts, metas = _crash_build()
+    for p, m in zip(prompts[:CRASH_N1], metas[:CRASH_N1]):
+        twin.serve(p, meta=m)
+    assert twin.adaptive.moves > 0      # the prefix really adapted
+
+    # recover the killed service into a fresh stack
+    rec, _, _ = _crash_build()
+    report = restore_policy(rec, tmp_path / "snap")
+    assert report["adaptive_restored"]
+
+    ra, rs = rec.adaptive.to_state()
+    ta, ts = twin.adaptive.to_state()
+    assert rs == ts
+    for k in ra:
+        assert np.array_equal(ra[k], ta[k]), f"adaptive array {k}"
+    assert rec.adaptive.tau_static == twin.adaptive.tau_static
+    assert rec.adaptive.tau_dynamic == twin.adaptive.tau_dynamic
+
+    # and the recovered service keeps making the twin's decisions,
+    # including the next adaptation
+    for p, m in zip(prompts[CRASH_N1:], metas[CRASH_N1:]):
+        rr = rec.serve(p, meta=m)
+        rt = twin.serve(p, meta=m)
+        assert (rr.answer, rr.served_by) == (rt.answer, rt.served_by)
+    assert rec.adaptive.adaptations == twin.adaptive.adaptations
+    assert rec.adaptive.tau_static == twin.adaptive.tau_static
+
+    # geometry guard: a resized window must refuse the snapshot
+    bad = AdaptiveController(CacheConfig(0.95, 0.95, capacity=64), d=D,
+                             params=_params(window=48))
+    with pytest.raises(ValueError):
+        bad.load_state(ra, rs)
+
+    # round-trip idempotence on the recovered stack
+    save_snapshot(tmp_path / "snap2", rec, step=0)
+    rec2, _, _ = _crash_build()
+    restore_policy(rec2, tmp_path / "snap2")
+    a2, s2 = rec2.adaptive.to_state()
+    ra, rs = rec.adaptive.to_state()
+    assert s2 == rs and all(np.array_equal(a2[k], ra[k]) for k in a2)
+
+
+# ---------------------------------------------------------------------------
+# 6. router telemetry + feedback plumbing
+# ---------------------------------------------------------------------------
+
+def test_router_stats_and_feedback():
+    from repro.serving.router import CacheRouter
+
+    tier, answers, _ = _static()
+    _, _, _, _, prompts, metas, embed = _workload(24, seed=7)
+    cfg = CacheConfig(0.93, 0.93, capacity=64)
+    ctl = AdaptiveController(cfg, d=D, params=_params())
+    pol = BaselinePolicy(cfg, tier, answers, embed,
+                         lambda p: f"gen({p})", d=D,
+                         backend_batch_fn=lambda ps:
+                             [f"gen({p})" for p in ps],
+                         adaptive=ctl)
+    router = CacheRouter(pol, max_batch=8, max_wait_ms=1.0)
+    try:
+        results = [router.submit(p, meta=m)
+                   for p, m in zip(prompts, metas)]
+        assert all(r is not None for r in results)
+        # wrong-answer report lands in the controller window
+        assert router.feedback(results[0], False)
+        assert ctl.feedbacks == 1
+        # a rotated-out / absent seq is a no-op
+        assert not router.feedback(0, False)
+        s = router.stats()
+        for name in ("unknown", "volatile", "stable"):
+            assert s[f"tau_static_{name}"] == cfg.tau_static
+            assert f"adaptive_regret_{name}" in s
+        assert s["adaptive_window_fill"] == len(prompts)
+    finally:
+        router.stop()

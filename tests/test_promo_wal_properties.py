@@ -20,7 +20,9 @@ The properties pinned here are the ones crash recovery rests on:
    (``ref_policy._Dyn.upsert``);
 5. **compaction** — dropping the seq-prefix a snapshot covers keeps
    every snapshot ``wal_seq`` cursor valid and appends continuing the
-   original seq numbering.
+   original seq numbering. The journal is the ADMITTED subsequence of
+   the promotion stream (LWW-skipped promotions never journal), so the
+   cursor arithmetic runs through the same admission rule.
 
 Property tests manage their own per-example temp dirs (the shim's
 fallback runner hides the wrapped signature, so pytest fixtures cannot
@@ -79,6 +81,24 @@ def _policy(wal=None) -> KritesPolicy:
 def _payloads(ops):
     """(key_id, h_idx, enq_t) triples -> _promote payloads over POOL."""
     return [{"v": POOL[k], "h_idx": h, "enq_t": t} for k, h, t in ops]
+
+
+def _admitted(ops):
+    """Indices of the ops the WAL admits. ``_promote`` journals only
+    promotions that actually apply: a record whose key already holds a
+    strictly newer ``enq_t`` is LWW-skipped — no tier write, no WAL
+    record — so the journal is a subsequence of the op stream. POOL
+    keys are orthonormal (dedup is exact-match) and CAP covers every
+    distinct key, so per-key max-enq_t bookkeeping models admission
+    exactly."""
+    latest: dict = {}
+    out = []
+    for i, (k, h, t) in enumerate(ops):
+        if k in latest and latest[k] > t:
+            continue
+        latest[k] = t
+        out.append(i)
+    return out
 
 
 def _state(pol: KritesPolicy) -> tuple:
@@ -286,14 +306,20 @@ def test_compact_preserves_cursor_and_seq(ops, keep_frac):
             live._promote(p)
         live.wal.close()
         want = _state(live)
-        cursor = int(len(ops) * keep_frac)     # a snapshot's wal_seq
+        adm = _admitted(ops)         # journal = admitted subsequence
+        cursor = int(len(adm) * keep_frac)     # a snapshot's wal_seq
 
         # state-at-cursor + replay-of-tail must still reach `want`
         # whether or not the prefix has been compacted away
         kept = compact(path, keep_from_seq=cursor)
-        assert kept == len(ops) - cursor
+        assert kept == len(adm) - cursor
         recovered = _policy()
-        for p in _payloads(ops[:cursor]):      # what the snapshot held
+        # the snapshot at wal_seq=cursor held the state after the op
+        # that produced journal record `cursor`; LWW-skipped ops in
+        # between are state no-ops, so replaying the op prefix through
+        # that point reconstructs it exactly
+        n_at_cursor = adm[cursor - 1] + 1 if cursor else 0
+        for p in _payloads(ops[:n_at_cursor]):
             recovered._promote(p, journal=False)
         rep = replay_into(recovered, path, skip=cursor)
         assert rep["skipped"] == 0 and rep["replayed"] == kept
@@ -301,6 +327,6 @@ def test_compact_preserves_cursor_and_seq(ops, keep_frac):
 
         # appends after compaction continue the original numbering
         with PromotionWAL(path, fsync_every=1) as wal:
-            assert wal.seq == len(ops)
+            assert wal.seq == len(adm)
             assert wal.append(encode_record(POOL[0], 0, 50)) \
-                == len(ops) + 1
+                == len(adm) + 1

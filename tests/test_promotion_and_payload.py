@@ -176,6 +176,102 @@ def test_fresh_promotion_still_overwrites_its_own_insert():
 
 
 # ---------------------------------------------------------------------------
+# WAL append ordering: skipped promotions must not be journaled
+# ---------------------------------------------------------------------------
+
+def test_stale_promotion_not_journaled(tmp_path):
+    """Regression: ``_promote`` used to append the WAL record BEFORE
+    the dup/LWW decision, so a promotion skipped as stale still landed
+    in the journal — and was re-replayed (and survived compaction)
+    forever. The journal must hold exactly the promotions that applied.
+    Fails on the old code (2 records instead of 1)."""
+    from repro.core.promo_wal import PromotionWAL, read_wal
+
+    tier, answers, texts = _static()
+    path = str(tmp_path / "promo.wal")
+    pol = KritesPolicy(CacheConfig(0.99, 0.99, capacity=4), tier,
+                       answers, lambda p: _para(), lambda p: f"gen({p})",
+                       OracleJudge(), d=D, static_texts=texts,
+                       wal=PromotionWAL(path, fsync_every=1))
+    v = _para()
+    pol._promote({"v": v, "h_idx": 1, "enq_t": 10})     # applies
+    pol._promote({"v": v, "h_idx": 0, "enq_t": 5})      # stale: skipped
+    slot = int(np.argmax(pol._valid_np))
+    assert pol.dyn_answers[slot] == "curated-1"          # LWW held
+    recs, clean = read_wal(path)
+    assert clean
+    assert len(recs) == 1, \
+        "a skipped-as-stale promotion landed in the WAL"
+    assert int(recs[0]["h_idx"]) == 1
+    # a genuinely newer promotion still journals (append-before-apply)
+    pol._promote({"v": v, "h_idx": 0, "enq_t": 11})
+    recs, clean = read_wal(path)
+    assert clean and len(recs) == 2
+    pol.wal.close()
+    pol.pool.stop()
+
+
+# ---------------------------------------------------------------------------
+# configurable near-duplicate gate (CacheConfig.dup_threshold)
+# ---------------------------------------------------------------------------
+
+def test_dup_threshold_validation():
+    with pytest.raises(ValueError):
+        CacheConfig(0.9, 0.95, dup_threshold=0.93)   # < tau_dynamic
+    with pytest.raises(ValueError):
+        CacheConfig(0.9, 0.85, dup_threshold=1.5)    # outside (0, 1]
+    CacheConfig(0.9, 0.95, dup_threshold=0.95)       # boundary is fine
+
+
+def test_dup_threshold_non_default_matches_oracle():
+    """Pin the lifted gate at a NON-default value: two promotion keys
+    with similarity ~0.993 (above 0.98, below the old hardcoded 0.9999)
+    must overwrite in place under ``dup_threshold=0.98`` and take two
+    slots under the default — and the numpy oracle's ``_Dyn.upsert``
+    must land field-identical state at the same gate."""
+    import sys
+    sys.path.insert(0, "tests")
+    from ref_policy import _Dyn
+
+    tier, answers, texts = _static()
+    v1 = _para(0, 1, 0.3)
+    v2 = v1 + 0.12 * np.eye(D, dtype=np.float32)[3]
+    v2 = (v2 / np.linalg.norm(v2)).astype(np.float32)
+    sim = float(v1 @ v2)
+    assert 0.98 < sim < 0.9999
+
+    def promote_pair(cfg):
+        pol = KritesPolicy(cfg, tier, answers, lambda p: _para(),
+                           lambda p: f"gen({p})", OracleJudge(), d=D,
+                           static_texts=texts)
+        pol._promote({"v": v1, "h_idx": 0, "enq_t": 1})
+        pol._promote({"v": v2, "h_idx": 1, "enq_t": 2})
+        pol.pool.stop()
+        return pol
+
+    pol = promote_pair(CacheConfig(0.99, 0.95, capacity=4,
+                                   dup_threshold=0.98))
+    assert int(pol._valid_np.sum()) == 1, \
+        "sim above dup_threshold must overwrite in place"
+    pol_def = promote_pair(CacheConfig(0.99, 0.95, capacity=4))
+    assert int(pol_def._valid_np.sum()) == 2, \
+        "sim below the default 0.9999 gate must take a fresh slot"
+
+    # numpy-oracle field identity at the non-default gate
+    ref = _Dyn.make(4, D)
+    ref.upsert(v1, 0, 0, now=0, enq=1, dup_sim=0.98)
+    ref.upsert(v2, 1, 1, now=0, enq=2, dup_sim=0.98)
+    assert np.array_equal(ref.valid, pol._valid_np)
+    assert np.array_equal(ref.emb, np.asarray(pol.dyn.emb))
+    assert np.array_equal(ref.cls, np.asarray(pol.dyn.cls))
+    assert np.array_equal(ref.answer_ref, np.asarray(pol.dyn.answer_ref))
+    assert np.array_equal(ref.static_origin,
+                          np.asarray(pol.dyn.static_origin))
+    assert np.array_equal(ref.written_at, np.asarray(pol.dyn.written_at))
+    assert np.array_equal(ref.last_used, np.asarray(pol.dyn.last_used))
+
+
+# ---------------------------------------------------------------------------
 # judge payload fidelity
 # ---------------------------------------------------------------------------
 
