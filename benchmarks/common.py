@@ -47,11 +47,13 @@ def run_policies(bench, cfg: CacheConfig, policies=("baseline", "krites")):
     return out
 
 
-def run_policy_sweep(bench, cfgs, krites):
+def run_policy_sweep(bench, cfgs, krites, rewritable=None):
     """Evaluate many (CacheConfig, krites) variants over one trace in a
     single ``simulate_sweep`` dispatch (DESIGN.md §10).
 
-    ``krites`` is a bool or a per-config list. Returns (per-config
+    ``krites`` is a bool or a per-config list; ``rewritable`` is the
+    optional per-request rewrite channel (consulted only by configs
+    with ``rewrite=True``, DESIGN.md §18). Returns (per-config
     summaries, shared wall seconds, us per simulated request summed over
     all configs)."""
     t0 = time.time()
@@ -59,7 +61,8 @@ def run_policy_sweep(bench, cfgs, krites):
                          jnp.asarray(bench.static_cls),
                          jnp.asarray(bench.eval_emb),
                          jnp.asarray(bench.eval_cls),
-                         sweep_from_configs(cfgs, krites))
+                         sweep_from_configs(cfgs, krites),
+                         rewritable=rewritable)
     rows = summarize_sweep(res)
     wall = time.time() - t0
     us = 1e6 * wall / (len(cfgs) * bench.eval_emb.shape[0])

@@ -1,25 +1,44 @@
 """§3.4 / §5.1: grey-zone ROI — sweep sigma_min, measure judge volume vs
-recovered static-origin traffic; plus judge rate-limit throttling.
+recovered static-origin traffic; plus judge rate-limit throttling and
+the TweakLLM-style rewrite coverage/cost frontier (DESIGN.md §18).
 
 Reproduces: the paper's §3.4 grey-zone-width analysis (judge calls per
-request vs recovered curated traffic as sigma_min sweeps the zone shut)
-and the §5.1(iii) rate-limited-judge ablation.
+request vs recovered curated traffic as sigma_min sweeps the zone shut),
+the §5.1(iii) rate-limited-judge ablation, and — new with the
+multi-outcome verdict pipeline — the rewrite frontier: the same config
+with ``rewrite`` off vs on at several rewriter budgets, reporting the
+measured coverage (static-or-verified serve fraction) gain against the
+no-rewrite baseline *in the same table*, at the shared error budget.
 
-The entire grid — 1 baseline + 6 sigma_min points + 3 judge rates — runs
-as a single ``simulate_sweep`` dispatch (DESIGN.md §10).
+The entire grid — 1 baseline + 6 sigma_min points + 3 judge rates +
+1 no-rewrite twin + 3 rewrite budgets — runs as two ``simulate_sweep``
+dispatches (DESIGN.md §10).
 
 Invocation:
 
     PYTHONPATH=src python -m benchmarks.run --only greyzone_roi
+
+``--smoke`` runs the rewrite critical-path gates on a constructed
+orthonormal workload instead (wired into scripts/ci.sh):
+
+  (i)  decision agreement 1.0 on first-seen prompts between the
+       rewrite-on run and its rewrite-off twin — rewriting must never
+       change what the triggering request is served;
+  (ii) rewritten entries are served only to *later* repeats (every
+       REWRITTEN_HIT lands on a repeat index, and at least one does).
 """
 from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from benchmarks.common import default_cfg, get_benchmark, run_policy_sweep
 
 SIGMAS = (0.0, 0.3, 0.5, 0.6, 0.7, 0.8)
 RATES = (1.0, 0.2, 0.05)
+REWRITE_RATES = (1.0, 0.25, 0.05)   # rewriter token-bucket budgets
+REWRITABLE_FRAC = 0.5               # of would-reject grey pairs
 
 
 def run(scale: str = "small", wl: str = "lmarena_like"):
@@ -55,4 +74,129 @@ def run(scale: str = "small", wl: str = "lmarena_like"):
             "enq_dropped": k["enq_dropped"],
             "static_origin_rate": round(k["static_origin_rate"], 4),
         })
+
+    # rewrite coverage/cost frontier (§18): one no-rewrite twin + the
+    # same config at several rewriter budgets, same trace + same
+    # rewritable channel, one dispatch — coverage gain at the budget
+    rng = np.random.default_rng(7)
+    rewritable = rng.random(bench.eval_emb.shape[0]) < REWRITABLE_FRAC
+    rw_base = dataclasses.replace(base_cfg, sigma_min=0.5)
+    rw_cfgs = [rw_base] + [dataclasses.replace(rw_base, rewrite=True,
+                                               rewrite_rate=r)
+                           for r in REWRITE_RATES]
+    rw_sums, _, us2 = run_policy_sweep(bench, rw_cfgs, True,
+                                       rewritable=rewritable)
+    off = rw_sums[0]
+    rows.append({
+        "name": f"greyzone_roi/{wl}/rewrite=off",
+        "us_per_call": round(us2, 2),
+        "judge_calls": off["judge_calls"],
+        "coverage": round(off["static_origin_rate"], 4),
+        "error_rate": round(off["error_rate"], 4),
+    })
+    for r, k in zip(REWRITE_RATES, rw_sums[1:]):
+        rows.append({
+            "name": f"greyzone_roi/{wl}/rewrite={r}",
+            "us_per_call": round(us2, 2),
+            "judge_calls": k["judge_calls"],
+            "rewrites": k["rewrites"],
+            "rewrite_dropped": k["rewrite_dropped"],
+            "rewritten_hit_rate": round(k["rewritten_hit_rate"], 4),
+            "coverage": round(k["static_origin_rate"], 4),
+            "coverage_gain_vs_off": round(
+                k["static_origin_rate"] - off["static_origin_rate"], 4),
+            "error_rate": round(k["error_rate"], 4),
+        })
     return rows
+
+
+# ---------------------------------------------------------------------------
+# --smoke: rewrite critical-path gates (scripts/ci.sh)
+# ---------------------------------------------------------------------------
+
+def _smoke_world(n_unique: int = 40, d: int = 96):
+    """Constructed workload with fully controlled similarities.
+
+    Static tier: 8 orthonormal rows (classes 0..7). Grey query i is
+    0.8 * P[s] + 0.6 * P[16 + i] — exactly 0.8 to its static neighbor
+    (inside the grey zone at tau=0.9, sigma=0.5), 0.64 to any other
+    query sharing the neighbor (below tau_dynamic=0.88), and 1.0 to its
+    own exact repeat. Every query's class differs from its neighbor's
+    (the judge would reject) and every request is rewritable, so with
+    ``rewrite`` on each judged task promotes a rewritten entry. Phase 1
+    (t < n_unique) is all first-seen prompts; phase 2 repeats them.
+    """
+    assert 16 + n_unique <= d
+    P = np.eye(d, dtype=np.float32)
+    static_emb = P[:8]
+    static_cls = np.arange(8, dtype=np.int32)
+    s_of = np.arange(n_unique) % 8
+    uniq = (0.8 * P[s_of] + 0.6 * P[16 + np.arange(n_unique)]
+            ).astype(np.float32)
+    q_emb = np.concatenate([uniq, uniq])          # phase 2 = repeats
+    # class 100+i: never equal to the neighbor's class (would-reject)
+    q_cls = np.concatenate([100 + s_of, 100 + s_of]).astype(np.int32)
+    return static_emb, static_cls, q_emb, q_cls, n_unique
+
+
+def smoke() -> dict:
+    import jax.numpy as jnp
+
+    from repro.core.simulate import REWRITTEN_HIT, simulate
+    from repro.core.tiers import CacheConfig
+
+    s_emb, s_cls, q_emb, q_cls, n1 = _smoke_world()
+    n = q_emb.shape[0]
+    rewritable = np.ones(n, bool)
+    mk = lambda rw: CacheConfig(
+        tau_static=0.9, tau_dynamic=0.88, sigma_min=0.5, capacity=128,
+        judge_latency=2, rewrite=rw)
+    runs = {}
+    for rw in (False, True):
+        res = simulate(jnp.asarray(s_emb), jnp.asarray(s_cls),
+                       jnp.asarray(q_emb), jnp.asarray(q_cls), mk(rw),
+                       krites=True, rewritable=jnp.asarray(rewritable))
+        runs[rw] = res
+    sb_off = np.asarray(runs[False].served_by)
+    sb_on = np.asarray(runs[True].served_by)
+
+    # gate (i): first-seen prompts decided identically with rewrite on —
+    # serving decisions never depend on the triggering request's verdict
+    first = slice(0, n1)
+    agreement = float(np.mean(sb_off[first] == sb_on[first]))
+    assert agreement == 1.0, (
+        f"rewrite changed {np.sum(sb_off[first] != sb_on[first])} "
+        f"first-seen decisions (agreement {agreement})")
+
+    # gate (ii): rewritten entries served only to later repeats
+    rw_hits = np.flatnonzero(sb_on == REWRITTEN_HIT)
+    assert rw_hits.size > 0, "smoke produced no rewritten serves"
+    assert (rw_hits >= n1).all(), (
+        f"rewritten serve on a first-seen prompt at t={rw_hits.min()}")
+    rewrites = int(runs[True].rewrites)
+    assert rewrites > 0
+    out = {"first_seen_agreement": agreement,
+           "rewrites": rewrites,
+           "rewritten_serves": int(rw_hits.size),
+           "rewritten_serves_on_repeats": int((rw_hits >= n1).sum())}
+    print("[OK] greyzone_roi --smoke: "
+          f"first-seen agreement {agreement} (gate 1.0), "
+          f"{rewrites} rewrites, {rw_hits.size} rewritten serves, "
+          f"all on repeat indices")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the rewrite critical-path gates "
+                         "(first-seen agreement 1.0; rewritten serves "
+                         "only on later repeats)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        for row in run():
+            print(row)

@@ -198,7 +198,8 @@ def run_load(client: ServeClient, qps: float, duration_s: float, *,
     # windowed aggregation off the scheduled (open-loop) timeline
     n_win = max(1, int(np.ceil(duration_s / window_s)))
     wins = [{"lat": [], "stale": 0, "promoted": 0,
-             "by": {"l1": 0, "static": 0, "dynamic": 0, "backend": 0}}
+             "by": {"l1": 0, "static": 0, "dynamic": 0,
+                    "rewritten": 0, "backend": 0}}
             for _ in range(n_win)]
     lost = 0
     for k, p in enumerate(pend):
@@ -213,7 +214,7 @@ def run_load(client: ServeClient, qps: float, duration_s: float, *,
         # dynamic hits serving promoted (static-origin) content — the
         # per-window hit-source attribution splits the dynamic tier by
         # content origin (DESIGN.md §16)
-        w["promoted"] += (by == "dynamic"
+        w["promoted"] += (by in ("dynamic", "rewritten")
                           and bool(p.reply.get("static_origin")))
     windows = []
     for i, w in enumerate(wins):
@@ -229,6 +230,8 @@ def run_load(client: ServeClient, qps: float, duration_s: float, *,
             "l1_rate": round(w["by"]["l1"] / m, 3) if m else None,
             "static_rate": round(w["by"]["static"] / m, 3) if m else None,
             "dynamic_rate": round(w["by"]["dynamic"] / m, 3)
+            if m else None,
+            "rewritten_rate": round(w["by"]["rewritten"] / m, 3)
             if m else None,
             "promoted_rate": round(w["promoted"] / m, 3) if m else None,
             "backend_rate": round(w["by"]["backend"] / m, 3)
@@ -257,7 +260,7 @@ def _drift(windows):
     a, b = full[0], full[-1]
     return {k: round(b[k] - a[k], 3)
             for k in ("l1_rate", "static_rate", "dynamic_rate",
-                      "backend_rate")}
+                      "rewritten_rate", "backend_rate")}
 
 
 # ---------------------------------------------------------------------------

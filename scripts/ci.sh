@@ -58,6 +58,16 @@ echo "== L1 + freshness smoke (bypass -> zero stale, agreement 1.0) =="
 # costing zero embedder calls (DESIGN.md §16)
 python -m benchmarks.l1_freshness --smoke
 
+echo "== rewrite verdict smoke (first-seen agreement 1.0, repeats-only) =="
+# the three-outcome differentials (tests/test_ref_differential.py,
+# tests/test_rewrite_durability.py) run in tier-1 above; this smoke
+# gates the rewrite critical-path invariant on a constructed workload:
+# (i) first-seen prompt decisions bit-identical to the rewrite-off
+# twin (agreement 1.0 — rewriting never changes what the triggering
+# request is served), and (ii) rewritten entries served only to later
+# repeats (DESIGN.md §18)
+python -m benchmarks.greyzone_roi --smoke
+
 echo "== adaptive thresholds smoke (drift recovery + frozen identity) =="
 # the controller differentials (tests/test_adaptive.py) run in tier-1
 # above; this smoke drives the full Krites pipeline through a traffic

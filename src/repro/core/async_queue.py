@@ -6,6 +6,14 @@ exponential backoff, and straggler mitigation (a task past its deadline is
 re-dispatched to another worker; first completion wins, idempotent upsert
 makes the duplicate harmless).
 
+The judge emits a structured ``Verdict`` (plain bools are auto-wrapped)
+and the pool dispatches per outcome through an extensible action
+registry: APPROVE and REWRITE both run the promote action by default
+(the payload carries the outcome tag and the rewritten text, so the
+policy's upsert knows which variant it is landing), REJECT runs none.
+Retry/backoff and first-completion-wins apply identically to every
+outcome — the action, not the verdict, is what retries.
+
 Everything is off the serving path: ``submit`` never blocks and serving
 never waits on this pool. Queue depth only delays promotions (§3.1).
 """
@@ -17,7 +25,9 @@ import queue
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Dict, Optional
+
+from repro.core.judge import APPROVE, REJECT, REWRITE, as_verdict
 
 
 @dataclass
@@ -40,13 +50,23 @@ class PoolStats:
     redispatched: int = 0
     duplicate_completions: int = 0
     failed: int = 0
+    # per-outcome counters (winning completions only — the same
+    # accounting discipline `approved` always had)
+    rejected: int = 0
+    rewritten: int = 0
+    # rewrite-path degradations: the judge said REWRITE but no tailored
+    # text landed (rewriter missing/failed/empty -> rewrite_failed;
+    # rewrite token bucket empty -> rewrite_rate_limited). Both
+    # downgrade the verdict to REJECT and are also counted there.
+    rewrite_failed: int = 0
+    rewrite_rate_limited: int = 0
 
 
 class VerifyAndPromotePool:
-    """Background pool running judge -> (approved) -> upsert callbacks."""
+    """Background pool running judge -> verdict -> per-outcome actions."""
 
     def __init__(self,
-                 judge_fn: Callable[[dict], bool],
+                 judge_fn: Callable[[dict], object],
                  promote_fn: Callable[[dict], None],
                  n_workers: int = 2,
                  max_depth: int = 1024,
@@ -54,14 +74,29 @@ class VerifyAndPromotePool:
                  rate_per_req: float = 0.0,
                  max_attempts: int = 3,
                  backoff_s: float = 0.05,
-                 straggler_deadline_s: float = 5.0):
+                 straggler_deadline_s: float = 5.0,
+                 actions: Optional[Dict[str, Callable]] = None):
         """``rate_per_s`` refills the token bucket by wall-clock time;
         ``rate_per_req`` additionally refills it per submission attempt
         — the live analogue of the simulator's per-request
         ``CacheConfig.judge_rate`` budget (core/simulate.py), which
-        ``KritesPolicy`` threads through here by default."""
+        ``KritesPolicy`` threads through here by default.
+
+        ``judge_fn`` may return a ``Verdict`` or a plain bool (wrapped
+        via ``as_verdict``). ``actions`` maps verdict outcomes to the
+        callable run for winning completions of that outcome; the
+        default registry promotes APPROVE and REWRITE payloads (the
+        promote callback reads the payload's outcome tag) and does
+        nothing on REJECT. Extra outcomes just need a registry entry."""
         self.judge_fn = judge_fn
         self.promote_fn = promote_fn
+        self.actions: Dict[str, Optional[Callable]] = {
+            APPROVE: promote_fn,
+            REWRITE: promote_fn,
+            REJECT: None,
+        }
+        if actions:
+            self.actions.update(actions)
         self.q: "queue.Queue[VerifyTask]" = queue.Queue(max_depth)
         self.stats = PoolStats()
         self._inflight: dict = {}
@@ -184,27 +219,38 @@ class VerifyAndPromotePool:
             except queue.Empty:
                 continue
             try:
-                approved = self.judge_fn(task.payload)
+                verdict = as_verdict(self.judge_fn(task.payload))
+                action = self.actions.get(verdict.outcome)
                 with self._lock:
                     self.stats.judged += 1
                     # first completion wins: a re-dispatched duplicate
                     # arriving after the winner popped the key skips
-                    # the promote (which is idempotent anyway)
+                    # the action (which is idempotent anyway)
                     live = task.key in self._inflight
-                if live and approved:
+                if live and action is not None:
                     # idempotent upsert — safe under duplicate dispatch.
-                    # The key stays inflight until the promote lands,
-                    # so a transient promote failure hits the retry
-                    # path below instead of being dropped, and drain()
-                    # keeps waiting through the backoff.
-                    self.promote_fn(task.payload)
+                    # The key stays inflight until the action lands,
+                    # so a transient failure hits the retry path below
+                    # instead of being dropped, and drain() keeps
+                    # waiting through the backoff.
+                    action(task.payload)
                 with self._lock:
                     won = live and self._inflight.pop(task.key,
                                                       None) is not None
-                    if won and approved:
-                        self.stats.approved += 1
-                    elif not won:  # another copy won first
+                    if not won:  # another copy won first
                         self.stats.duplicate_completions += 1
+                    elif verdict.outcome == APPROVE:
+                        self.stats.approved += 1
+                    elif verdict.outcome == REWRITE:
+                        self.stats.rewritten += 1
+                    else:
+                        self.stats.rejected += 1
+                        # rewrite-path degradation flags stamped by the
+                        # judge wrapper (policy._judge_payload)
+                        if task.payload.get("rewrite_failed"):
+                            self.stats.rewrite_failed += 1
+                        if task.payload.get("rewrite_rate_limited"):
+                            self.stats.rewrite_rate_limited += 1
             except Exception:  # noqa: BLE001 — transient failure: retry
                 task.attempts += 1
                 if task.attempts < self._max_attempts:

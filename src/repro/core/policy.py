@@ -60,6 +60,7 @@ from repro.core import adaptive as A
 from repro.core import tiers as T
 from repro.core.async_queue import VerifyAndPromotePool
 from repro.core.exact_tier import ExactTier, canonicalize
+from repro.core.judge import APPROVE, REJECT, REWRITE, Verdict, as_verdict
 from repro.index.flat import l2_normalize, masked_cosine_topk
 
 _BIG = np.int64(2**30)   # host twin of tiers.BIG (LRU key for invalid rows)
@@ -119,7 +120,7 @@ def _usable_rows(V_np: np.ndarray) -> np.ndarray:
 @dataclass
 class ServeResult:
     answer: object
-    served_by: str              # 'l1' | 'static' | 'dynamic' | 'backend'
+    served_by: str   # 'l1' | 'static' | 'dynamic' | 'rewritten' | 'backend'
     static_origin: bool
     similarity: float
     latency_s: float
@@ -218,6 +219,11 @@ class BaselinePolicy:
         self._static_origin_np = np.zeros(cfg.capacity, bool)
         self._written_at_np = np.zeros(cfg.capacity, np.int64)
         self._expires_np = np.zeros(cfg.capacity, np.int64)
+        # rewrite provenance (DESIGN.md §18): True for entries whose
+        # answer is a REWRITE-verdict tailored variant, not the curated
+        # static text. Device twin: ``answer_ref == -2`` sentinel — that
+        # column is what snapshots/restores derive this mirror from.
+        self._rewritten_np = np.zeros(cfg.capacity, bool)
         if mesh is None:
             self._touch_many = jax.jit(T.touch_many)
             self._bulk_insert_fn = _bulk_insert
@@ -445,7 +451,9 @@ class BaselinePolicy:
                     self.dyn = T.touch(self.dyn, j, self.t)
                     self._last_used_np[j] = self.t
                     content_t = int(self._written_at_np[j])
-                    res = ServeResult(self.dyn_answers[j], "dynamic",
+                    by = "rewritten" if self._rewritten_np[j] \
+                        else "dynamic"
+                    res = ServeResult(self.dyn_answers[j], by,
                                       bool(self._static_origin_np[j]),
                                       s_d, time.monotonic() - t0)
             if s_s >= tau_s:
@@ -485,7 +493,9 @@ class BaselinePolicy:
                             np.asarray([self.t]))
                     self._last_used_np[j] = self.t
                     content_t = int(self._written_at_np[j])
-                    res = ServeResult(self.dyn_answers[j], "dynamic",
+                    by = "rewritten" if self._rewritten_np[j] \
+                        else "dynamic"
+                    res = ServeResult(self.dyn_answers[j], by,
                                       bool(self._static_origin_np[j]),
                                       s_d, time.monotonic() - t0)
                 else:
@@ -522,18 +532,20 @@ class BaselinePolicy:
 
     def _mirror_write(self, slot: int, now: int, static_origin: bool,
                       written_at: Optional[int] = None,
-                      expires: int = 0):
+                      expires: int = 0, rewritten: bool = False):
         """Host twin of a tier row write. ``now`` is the LRU clock;
         ``written_at`` (the LWW clock) defaults to it, but async
         promotions pass their enqueue time — same split as
         ``tiers._write``. ``expires`` stamps the per-entry expiry
-        mirror (0 = never)."""
+        mirror (0 = never); ``rewritten`` marks a REWRITE-verdict
+        tailored variant (DESIGN.md §18)."""
         self._valid_np[slot] = True
         self._last_used_np[slot] = now
         self._static_origin_np[slot] = static_origin
         self._written_at_np[slot] = now if written_at is None \
             else written_at
         self._expires_np[slot] = expires
+        self._rewritten_np[slot] = rewritten
         if expires > 0:
             self._ttl_active = True
 
@@ -557,6 +569,7 @@ class BaselinePolicy:
             return 0
         self._valid_np[dead] = False
         self._expires_np[dead] = 0
+        self._rewritten_np[dead] = False
         idx = jnp.asarray(dead)
         self.dyn = self.dyn._replace(
             valid=self.dyn.valid.at[idx].set(False),
@@ -817,6 +830,7 @@ class BaselinePolicy:
                         s = int(s)
                         self._valid_np[s] = False
                         self._expires_np[s] = 0
+                        self._rewritten_np[s] = False
                         if self.dyn_index is not None:
                             self.dyn_index.invalidate(s)
                         self.dyn_answers[s] = None
@@ -841,19 +855,20 @@ class BaselinePolicy:
                     self._last_used_np[j] = ti
                     touched.add(j)
                     if j in written:  # answer arrives with the batch call
-                        origin = False
+                        origin, by = False, "dynamic"
                         results[i] = ServeResult(None, "dynamic", False,
                                                  s_d, 0.0)
                         deferred.append((i, written[j][0]))
                     else:
                         origin = bool(self._static_origin_np[j])
+                        by = "rewritten" if self._rewritten_np[j] \
+                            else "dynamic"
                         results[i] = ServeResult(self.dyn_answers[j],
-                                                 "dynamic", origin, s_d,
-                                                 0.0)
+                                                 by, origin, s_d, 0.0)
                     content_of[i] = int(self._written_at_np[j])
                     self._mark_stale(results[i], vol[i], content_of[i],
                                      ti)
-                    self.events.append(("dynamic", origin))
+                    self.events.append((by, origin))
                 else:
                     slot = self._host_lru_slot()
                     if slot not in saved:
@@ -862,6 +877,7 @@ class BaselinePolicy:
                                        bool(self._static_origin_np[slot]),
                                        int(self._written_at_np[slot]),
                                        int(self._expires_np[slot]),
+                                       bool(self._rewritten_np[slot]),
                                        self.dyn_answers[slot])
                     exp = self._entry_expiry(prompts[i], ti)
                     self._mirror_write(slot, ti, static_origin=False,
@@ -899,6 +915,7 @@ class BaselinePolicy:
                          self._static_origin_np[slot],
                          self._written_at_np[slot],
                          self._expires_np[slot],
+                         self._rewritten_np[slot],
                          self.dyn_answers[slot]) = st
                     del self.events[ev0:]
                     self._apply_batch_writes(V, {}, touched, Bp,
@@ -1031,6 +1048,10 @@ class BaselinePolicy:
             "requests": len(self.events),
             "static_hit_rate": by.count("static") / n,
             "dynamic_hit_rate": by.count("dynamic") / n,
+            # TweakLLM rewrite variants served from the dynamic tier
+            # (DESIGN.md §18) — a distinct hit source so coverage
+            # dashboards can attribute the rewrite frontier
+            "rewritten_hit_rate": by.count("rewritten") / n,
             "backend_rate": by.count("backend") / n,
             "l1_hit_rate": by.count("l1") / n,
             "static_origin_rate":
@@ -1072,7 +1093,8 @@ class KritesPolicy(BaselinePolicy):
                  backend_batch_fn: Optional[Callable] = None,
                  index=None, dyn_index=None, static_texts=None,
                  mesh=None, shard_axis: str = "model", wal=None,
-                 fused=None, l1=None, freshness=None, adaptive=None):
+                 fused=None, l1=None, freshness=None, adaptive=None,
+                 rewriter=None):
         super().__init__(cfg, static_tier, static_answers, embed_fn,
                          backend_fn, d, embed_batch_fn=embed_batch_fn,
                          backend_batch_fn=backend_batch_fn, index=index,
@@ -1092,28 +1114,87 @@ class KritesPolicy(BaselinePolicy):
         else:
             rate_kw = dict(rate_per_s=judge_rate_per_s)
         self._judge_fn = judge_fn
+        # TweakLLM rewriter (DESIGN.md §18): a ``RewriterFn`` producing
+        # the tailored answer for REWRITE verdicts, run on the pool
+        # worker threads — strictly off the serving path. Budgeted like
+        # the judge: ``cfg.rewrite_rate`` tokens accrue per judged
+        # task (the live twin of the simulator's per-step refill);
+        # an empty bucket downgrades the verdict to REJECT.
+        self._rewriter = rewriter
+        self._rw_rate = float(cfg.rewrite_rate)
+        self._rw_budget = 0.0
+        self._rw_lock = threading.Lock()
         self.pool = VerifyAndPromotePool(
             judge_fn=self._judge_payload,
             promote_fn=self._promote,
             n_workers=n_workers, **rate_kw)
 
-    def _judge_payload(self, payload: dict) -> bool:
+    def _judge_payload(self, payload: dict) -> Verdict:
         """Pool adapter: run the judge over the payload's verification
-        triple and, on approval, stamp the TTL verdict onto the payload
-        — it rides the same object into ``_promote`` (and the WAL), so
-        the entry's lifetime is decided at verification time."""
+        triple and, for promoting outcomes, stamp the TTL verdict onto
+        the payload — it rides the same object into ``_promote`` (and
+        the WAL), so the entry's lifetime is decided at verification
+        time. A REWRITE verdict additionally runs the rewriter here
+        (worker thread, never the serving path); its tailored text and
+        outcome tag ride the payload too. Legacy ``bool``-returning
+        judges are auto-wrapped via ``as_verdict``."""
         ja = payload["judge_args"]
-        ok = bool(self._judge_fn(**ja))
-        if ok:
-            payload["ttl"] = self._assign_ttl(ja)
+        # the rewrite token bucket refills per judged task whether or
+        # not this verdict rewrites — same discipline as the simulator's
+        # per-step refill at the completion-processing point
+        if self._rewriter is not None:
+            with self._rw_lock:
+                self._rw_budget = min(self._rw_budget + self._rw_rate,
+                                      1e9)
+        verdict = as_verdict(self._judge_fn(**ja))
+        if verdict.outcome == REWRITE:
+            verdict = self._try_rewrite(verdict, payload, ja)
+        if verdict.outcome != REJECT:
+            payload["ttl"] = int(verdict.ttl) if verdict.ttl is not None \
+                else self._assign_ttl(ja)
+        payload["outcome"] = verdict.outcome
         # verdict evidence for the threshold controller (DESIGN.md §17):
         # rewrite the window row's outcome label so shadow sweeps score
-        # candidate thresholds against what the judge actually decided
+        # candidate thresholds against what the judge actually decided.
+        # REWRITE counts as not-approved: the judge ruled the static
+        # neighbor NOT equivalent, so serving it as-is would be an error
+        # — exactly what the window's static-serve scoring models.
         seq = payload.get("adapt_seq", 0)
         if self.adaptive is not None and seq:
             with self.dyn_lock:
-                self.adaptive.record_verdict(seq, ok, ja["h_cls"])
-        return ok
+                self.adaptive.record_verdict(seq, verdict.approved,
+                                             ja["h_cls"])
+        return verdict
+
+    def _try_rewrite(self, verdict: Verdict, payload: dict,
+                     ja: dict) -> Verdict:
+        """Resolve a REWRITE verdict into a promotable tailored answer,
+        or degrade it to REJECT: no rewriter / rewriter raised / empty
+        text -> ``rewrite_failed``; token bucket empty ->
+        ``rewrite_rate_limited``. The flags ride the payload so the
+        pool's per-outcome stats attribute the degradation."""
+        if self._rewriter is None:
+            payload["rewrite_failed"] = True
+            return Verdict(REJECT, confidence=verdict.confidence)
+        with self._rw_lock:
+            if self._rw_budget < 1.0:
+                payload["rewrite_rate_limited"] = True
+                return Verdict(REJECT, confidence=verdict.confidence)
+            self._rw_budget -= 1.0
+        text = verdict.text
+        if not text:
+            try:
+                text = self._rewriter(ja.get("q_text", ""),
+                                      ja.get("h_text", ""),
+                                      ja.get("answer", ""))
+            except Exception:  # noqa: BLE001 — degrade, don't retry:
+                text = ""      # a broken rewriter must stay deterministic
+        if not text:
+            payload["rewrite_failed"] = True
+            return Verdict(REJECT, confidence=verdict.confidence)
+        payload["rewritten"] = str(text)
+        return Verdict(REWRITE, text=str(text), ttl=verdict.ttl,
+                       confidence=verdict.confidence)
 
     def _assign_ttl(self, ja: dict) -> int:
         """TTL verdict precedence (DESIGN.md §16): a freshness-aware
@@ -1148,7 +1229,7 @@ class KritesPolicy(BaselinePolicy):
             tau_s = self.cfg.tau_static
         if not (self.cfg.sigma_min <= s_static < tau_s):
             return None
-        if self.cfg.dedup and res.served_by == "dynamic" \
+        if self.cfg.dedup and res.served_by in ("dynamic", "rewritten") \
                 and res.static_origin:
             return None  # a promoted pointer already serves this query
         va = np.asarray(v)
@@ -1212,13 +1293,27 @@ class KritesPolicy(BaselinePolicy):
         h_idx = payload["h_idx"]
         v = jnp.asarray(payload["v"])
         enq_t = payload["enq_t"]
+        ja = payload.get("judge_args", {})
         # TTL verdict stamped by _judge_payload (or carried by a WAL
         # record on replay). Expiry anchors at enq_t — it is in the WAL
         # record, so replay reconstructs the same expires_at even though
         # apply_t differs across restarts.
         ttl = int(payload.get("ttl", self.cfg.ttl))
         exp = enq_t + ttl if ttl > 0 else 0
-        answer = self._serve_static(h_idx)
+        # outcome tag stamped by _judge_payload (or replayed from the
+        # WAL): REWRITE lands the tailored text keyed to the NEW
+        # prompt's embedding and class, with the answer_ref=-2 sentinel
+        # marking provenance; APPROVE lands the curated static pointer.
+        rewrite = payload.get("outcome", APPROVE) == REWRITE
+        if rewrite:
+            answer = payload.get("rewritten", "")
+            if not answer:
+                return   # defensive: a REWRITE without text is a no-op
+            cls, ref = int(ja.get("q_cls", -1)), -2
+        else:
+            answer = self._serve_static(h_idx)
+            cls = int(self._static_cls_np[h_idx])
+            ref = int(self._static_ref_np[h_idx])
         with self.dyn_lock:
             apply_t = self.t      # live LRU clock, read under the lock
             self._sweep_expired_locked(apply_t)
@@ -1244,20 +1339,22 @@ class KritesPolicy(BaselinePolicy):
             # live tier rightly refused, forever
             if journal and self.wal is not None:
                 from repro.core.promo_wal import encode_record
-                ja = payload.get("judge_args", {})
                 self.wal.append(encode_record(
                     payload["v"], h_idx, enq_t, ttl=ttl,
                     q_text=ja.get("q_text", ""),
-                    h_text=ja.get("h_text", "")))
+                    h_text=ja.get("h_text", ""),
+                    outcome=REWRITE if rewrite else APPROVE,
+                    rewritten=str(answer) if rewrite else "",
+                    q_cls=int(ja.get("q_cls", -1))))
             slot = j if dup else self._host_lru_slot()
             self.dyn = self._write_fn(
                 self.dyn, slot, v,
-                jnp.int32(int(self._static_cls_np[h_idx])),
-                jnp.int32(int(self._static_ref_np[h_idx])),
+                jnp.int32(cls), jnp.int32(ref),
                 jnp.asarray(True), enq_t, last_used=apply_t,
                 expires=exp)
             self._mirror_write(slot, apply_t, static_origin=True,
-                               written_at=enq_t, expires=exp)
+                               written_at=enq_t, expires=exp,
+                               rewritten=rewrite)
             if self.dyn_index is not None:
                 self.dyn_index.record_write(slot, payload["v"])
             self.dyn_answers[slot] = answer
@@ -1269,6 +1366,10 @@ class KritesPolicy(BaselinePolicy):
                     "judge_deduped": ps.deduped,
                     "judge_rate_limited": ps.rate_limited,
                     "judged": ps.judged, "approved": ps.approved,
+                    "rejected": ps.rejected,
+                    "rewritten": ps.rewritten,
+                    "rewrite_failed": ps.rewrite_failed,
+                    "rewrite_rate_limited": ps.rewrite_rate_limited,
                     "redispatched": ps.redispatched})
         if self.wal is not None:
             ws = self.wal.stats()

@@ -39,7 +39,7 @@ File format (little-endian)::
     header   b"PWAL" + u32 version (1)
     record   u32 payload_len | u32 crc32(payload) | payload
     payload  JSON: {seq, h_idx, enq_t, ttl, v(base64 fp32 bytes),
-                    q_text, h_text}
+                    q_text, h_text, outcome, rewritten, q_cls}
 
 The embedding travels as raw float32 bytes (base64) so replayed keys
 are bit-identical to the promoted ones — the dedup test is an exact
@@ -67,8 +67,16 @@ _FRAME = struct.Struct("<II")
 
 
 def encode_record(v: np.ndarray, h_idx: int, enq_t: int, *, ttl: int = 0,
-                  q_text: str = "", h_text: str = "", seq: int = 0) -> dict:
-    """Journal record for one approved verdict (see module docstring)."""
+                  q_text: str = "", h_text: str = "", seq: int = 0,
+                  outcome: str = "approve", rewritten: str = "",
+                  q_cls: int = -1) -> dict:
+    """Journal record for one promoting verdict (see module docstring).
+
+    ``outcome``/``rewritten``/``q_cls`` (DESIGN.md §18) carry REWRITE
+    provenance: replay must reconstruct the tailored answer text and
+    the query-class key, neither of which is derivable from the static
+    tier. Absent fields (journals written before the verdict refactor)
+    default to a plain approval — old journals replay unchanged."""
     v = np.ascontiguousarray(v, np.float32)
     return {
         "seq": int(seq),
@@ -78,6 +86,9 @@ def encode_record(v: np.ndarray, h_idx: int, enq_t: int, *, ttl: int = 0,
         "v": base64.b64encode(v.tobytes()).decode("ascii"),
         "q_text": q_text,
         "h_text": h_text,
+        "outcome": str(outcome),
+        "rewritten": str(rewritten),
+        "q_cls": int(q_cls),
     }
 
 
@@ -257,11 +268,17 @@ def replay_into(policy, path: str | Path, *, skip: int = 0) -> dict:
             skipped += 1
             continue
         # the record's TTL verdict (0 = unbounded) reconstructs the same
-        # expires_at on replay: expiry anchors at enq_t, which is here
+        # expires_at on replay: expiry anchors at enq_t, which is here.
+        # Outcome/rewritten/q_cls default to a plain approval so
+        # pre-verdict journals replay bit-identically.
         policy._promote({"v": decode_vector(rec),
                          "h_idx": int(rec["h_idx"]),
                          "enq_t": int(rec["enq_t"]),
-                         "ttl": int(rec.get("ttl", 0))}, journal=False)
+                         "ttl": int(rec.get("ttl", 0)),
+                         "outcome": rec.get("outcome", "approve"),
+                         "rewritten": rec.get("rewritten", ""),
+                         "judge_args": {"q_cls": int(rec.get("q_cls", -1))},
+                         }, journal=False)
         replayed += 1
     return {"records": len(records), "skipped": skipped,
             "replayed": replayed, "clean": clean}

@@ -45,6 +45,9 @@ from repro.core import tiers as T
 
 # served-by codes in the event stream
 MISS, STATIC_HIT, DYN_HIT_DYNAMIC, DYN_HIT_PROMOTED, L1_HIT = 0, 1, 2, 3, 4
+# a dynamic-tier hit on a REWRITE-promoted tailored variant
+# (DESIGN.md §18); its answer_ref carries the -2 sentinel
+REWRITTEN_HIT = 5
 
 # "never expires" sentinel for the sim's L1 expiry column (0 = empty
 # slot, so an unbounded entry needs a finite stand-in; request clocks
@@ -83,6 +86,9 @@ class SimState(NamedTuple):
     l1_so: jax.Array           # (K, nk) bool stored static_origin
     ttl_evicted: jax.Array     # (K,) dynamic entries dead by expiry
     bypassed: jax.Array        # (K,) volatile requests sent straight back
+    rbud: jax.Array            # (K,) token bucket for rewrite budgeting
+    rewrites: jax.Array        # (K,) REWRITE verdicts promoted
+    rewrite_dropped: jax.Array  # (K,) rewrites lost to an empty bucket
 
 
 class SimResult(NamedTuple):
@@ -96,6 +102,10 @@ class SimResult(NamedTuple):
     enq_dropped: jax.Array
     ttl_evicted: jax.Array
     bypassed: jax.Array
+    # rewrite pipeline counters (DESIGN.md §18); defaulted so hand-built
+    # SimResults (tests) predating the verdict refactor keep working
+    rewrites: jax.Array = np.int32(0)
+    rewrite_dropped: jax.Array = np.int32(0)
 
 
 class SweepConfig(NamedTuple):
@@ -118,6 +128,8 @@ class SweepConfig(NamedTuple):
     ttl_volatile: jax.Array  # (K,) i32 entry lifetime, volatile queries
     ttl_stable: jax.Array    # (K,) i32 entry lifetime, everything else
     dup_threshold: jax.Array  # (K,) f32 promotion near-dup overwrite gate
+    rewrite: jax.Array       # (K,) bool — TweakLLM rewrite outcome on
+    rewrite_rate: jax.Array  # (K,) f32 rewrite token budget per request
 
     @property
     def n(self) -> int:
@@ -149,6 +161,10 @@ def sweep_from_configs(cfgs: Sequence[T.CacheConfig],
         dup_threshold=jnp.asarray(
             [getattr(c, "dup_threshold", 0.9999) for c in cfgs],
             jnp.float32),
+        rewrite=jnp.asarray([getattr(c, "rewrite", False) for c in cfgs],
+                            bool),
+        rewrite_rate=jnp.asarray(
+            [getattr(c, "rewrite_rate", 1.0) for c in cfgs], jnp.float32),
     )
 
 
@@ -245,11 +261,11 @@ def _row_write(dyn: T.DynamicTier, ks, slot, cond, q, cls, ref, so,
 
 
 def _scan_core(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
-               volatile, key_id,
+               volatile, key_id, rewritable,
                tau_s, tau_d, sigma, rate, cap, lat, kr, dd,
-               l1f, vbp, ttl_v, ttl_s, dupt,
+               l1f, vbp, ttl_v, ttl_s, dupt, rw, rrate,
                C: int, R: int, D: int, nk: int,
-               use_l1: bool, use_ttl: bool) -> SimResult:
+               use_l1: bool, use_ttl: bool, use_rw: bool) -> SimResult:
     """All K configs' full-trace scan, in explicit batched form — the
     general path that supports *per-config* judge_latency (uniform
     sweeps take :func:`_scan_core_blocked` instead).
@@ -294,6 +310,9 @@ def _scan_core(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
         l1_so=jnp.zeros((K, nk), bool),
         ttl_evicted=jnp.zeros((K,), jnp.int32),
         bypassed=jnp.zeros((K,), jnp.int32),
+        rbud=jnp.zeros((K,), jnp.float32),
+        rewrites=jnp.zeros((K,), jnp.int32),
+        rewrite_dropped=jnp.zeros((K,), jnp.int32),
     )
 
     def epoch(x):
@@ -330,6 +349,25 @@ def _scan_core(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
         p_qc, p_hc, p_hr = q_cls[src], h_cls[src], h_idx[src]
         approve = jnp.logical_and(
             due, jnp.logical_or(p_qc == p_hc, judge_flip[src]))
+        # REWRITE verdict (DESIGN.md §18): a would-reject pair whose
+        # ``rewritable`` channel is set promotes the *tailored* variant
+        # instead — keyed to the query's embedding and class, with the
+        # answer_ref = -2 provenance sentinel. The rewrite token bucket
+        # refills every step at this completion point and spends one
+        # token per rewrite (the numpy reference mirrors both exactly).
+        if use_rw:
+            rbud = jnp.minimum(st.rbud + rrate, 1e9)
+            rw_want = jnp.logical_and(
+                jnp.logical_and(due,
+                                ~jnp.logical_or(p_qc == p_hc,
+                                                judge_flip[src])),
+                jnp.logical_and(rewritable[src], rw))
+            rw_can = jnp.logical_and(rw_want, rbud >= 1.0)
+            rbud = jnp.where(rw_can, rbud - 1.0, rbud)
+        else:
+            rbud = st.rbud
+            rw_want = rw_can = jnp.zeros((K,), bool)
+        promo = jnp.logical_or(approve, rw_can)
 
         # ---- tier passes: serving sims (shared query) + promotion-dedup
         # sims (per-config delayed queries) ----
@@ -351,7 +389,7 @@ def _scan_core(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
         # LRU clock is the apply step t — the live `_promote` clock split
         stale_w = jnp.logical_and(dup,
                                   dyn.written_at[ks, j_dup] > idx_due)
-        do_promote = jnp.logical_and(approve, ~stale_w)
+        do_promote = jnp.logical_and(promo, ~stale_w)
         if use_ttl:
             # the judge's TTL verdict: expiry anchors at enqueue time
             # (it is what the promotion WAL records); a verdict that
@@ -363,11 +401,16 @@ def _scan_core(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
                 ~jnp.logical_and(exp_p > 0, exp_p < t))
         else:
             exp_p = jnp.zeros((K,), jnp.int32)
-        dyn = _row_write(dyn, ks, pslot, do_promote, promo_qk, p_hc,
-                         p_hr, True, t, wa=idx_due, exp=exp_p)
+        p_cls = jnp.where(rw_can, p_qc, p_hc) if use_rw else p_hc
+        p_ref = jnp.where(rw_can, jnp.int32(-2), p_hr) if use_rw else p_hr
+        dyn = _row_write(dyn, ks, pslot, do_promote, promo_qk, p_cls,
+                         p_ref, True, t, wa=idx_due, exp=exp_p)
         judge_calls = st.judge_calls + due.astype(jnp.int32)
         judge_approved = st.judge_approved + approve.astype(jnp.int32)
-        promotions = st.promotions + approve.astype(jnp.int32)
+        promotions = st.promotions + promo.astype(jnp.int32)
+        rewrites = st.rewrites + rw_can.astype(jnp.int32)
+        rewrite_dropped = st.rewrite_dropped \
+            + jnp.logical_and(rw_want, ~rw_can).astype(jnp.int32)
 
         # ---- 1b. freshness front: volatile bypass, then the L1 exact-
         # match probe — both decided before the semantic path, with no
@@ -420,12 +463,23 @@ def _scan_core(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
                                jnp.where(dyn_hit, cls_j, qc))
         is_promoted = jnp.logical_and(dyn_hit,
                                       dyn.static_origin[ks, j_dyn])
+        # rewritten provenance rides the answer_ref = -2 sentinel; a
+        # rewritten row is a promoted row (static_origin True) with the
+        # more specific event code
+        if use_rw:
+            is_rewritten = jnp.logical_and(
+                dyn_hit, dyn.answer_ref[ks, j_dyn] == -2)
+        else:
+            is_rewritten = jnp.zeros((K,), bool)
         served_by = jnp.where(
             l1hit, L1_HIT,
             jnp.where(static_hit, STATIC_HIT,
-                      jnp.where(is_promoted, DYN_HIT_PROMOTED,
-                                jnp.where(dyn_hit, DYN_HIT_DYNAMIC,
-                                          MISS)))).astype(jnp.int8)
+                      jnp.where(is_rewritten, REWRITTEN_HIT,
+                                jnp.where(is_promoted, DYN_HIT_PROMOTED,
+                                          jnp.where(dyn_hit,
+                                                    DYN_HIT_DYNAMIC,
+                                                    MISS))))
+        ).astype(jnp.int8)
         correct = jnp.where(l1hit, l1_ok_col, served_cls == qc)
         static_origin = jnp.where(
             l1hit, l1_so_col, jnp.logical_or(static_hit, is_promoted))
@@ -506,7 +560,9 @@ def _scan_core(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
             + jnp.logical_and(want, ~can).astype(jnp.int32),
             l1_exp=l1_exp, l1_w=l1_w, l1_ok=l1_ok, l1_so=l1_so,
             ttl_evicted=ttl_evicted,
-            bypassed=st.bypassed + byp.astype(jnp.int32))
+            bypassed=st.bypassed + byp.astype(jnp.int32),
+            rbud=rbud, rewrites=rewrites,
+            rewrite_dropped=rewrite_dropped)
         return new_state, (served_by, correct, static_origin, stale)
 
     # the pending-queue payloads (h_idx, judge_flip, classes) are
@@ -519,18 +575,20 @@ def _scan_core(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
     return SimResult(served_by.T, correct.T, static_origin.T, stale.T,
                      final.judge_calls, final.judge_approved,
                      final.promotions, final.enq_dropped,
-                     final.ttl_evicted, final.bypassed)
+                     final.ttl_evicted, final.bypassed,
+                     final.rewrites, final.rewrite_dropped)
 
 
 _BLOCK = 64  # blocked-core window; per-block sims buffer = 2*B*K*C fp32
 
 
 def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
-                       volatile, key_id,
+                       volatile, key_id, rewritable,
                        tau_s, tau_d, sigma, rate, cap, lat, kr, dd,
-                       l1f, vbp, ttl_v, ttl_s, dupt,
+                       l1f, vbp, ttl_v, ttl_s, dupt, rw, rrate,
                        C: int, R: int, D: int, nk: int,
-                       use_l1: bool, use_ttl: bool) -> SimResult:
+                       use_l1: bool, use_ttl: bool,
+                       use_rw: bool) -> SimResult:
     """Blocked variant of :func:`_scan_core` for the common case where
     every swept config shares one judge_latency.
 
@@ -547,8 +605,13 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
     element*: a miss inserts the current query q_t, a promotion inserts
     the delayed query q_{t-latency} (the task enqueued at t-latency IS
     request t-latency). A per-row registry ``dqi`` records which Qstack
-    row overwrote a tier row this window; a step's true similarity is
-    then QQ[s, dqi] for rewritten rows and snap[s] otherwise, and the
+    row overwrote a tier row this window, in three bands: [0, B) miss
+    write-backs, [B, 2B) APPROVE promotions, [2B, 3B) REWRITE
+    promotions (DESIGN.md §18) — the rewrite band shares the delayed
+    query's embedding (Qstack row ``dqi - B``) but carries the query's
+    class and the answer_ref = -2 provenance sentinel. A step's true
+    similarity is
+    then QQ[s, dqi] for window-written rows and snap[s] otherwise, and the
     full-array argmax keeps the exact lowest-index tie-break of the
     sequential simulator. Embeddings are materialized once at window end
     (one masked gather). Per-step work drops from O(K*C*d) to O(K*C),
@@ -588,6 +651,8 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
     hr_del_src = jnp.concatenate([jnp.zeros((R,), jnp.int32), h_idx_p])
     fl_del_src = jnp.concatenate([jnp.zeros((R,), bool), flip_p])
     vl_del_src = jnp.concatenate([jnp.zeros((R,), bool), vol_p])
+    rw_p = jnp.pad(rewritable, (0, pad))
+    rw_del_src = jnp.concatenate([jnp.zeros((R,), bool), rw_p])
 
     state = SimState(
         dyn=_make_batched_tier(K, C, d),
@@ -604,6 +669,9 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
         l1_so=jnp.zeros((K, nk), bool),
         ttl_evicted=jnp.zeros((K,), jnp.int32),
         bypassed=jnp.zeros((K,), jnp.int32),
+        rbud=jnp.zeros((K,), jnp.float32),
+        rewrites=jnp.zeros((K,), jnp.int32),
+        rewrite_dropped=jnp.zeros((K,), jnp.int32),
     )
 
     iota_c = jnp.arange(C)[None, :]
@@ -624,6 +692,7 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
         p_hr = jax.lax.dynamic_slice(hr_del_src, (start,), (B,))
         p_fl = jax.lax.dynamic_slice(fl_del_src, (start,), (B,))
         p_vl = jax.lax.dynamic_slice(vl_del_src, (start,), (B,))
+        p_rw = jax.lax.dynamic_slice(rw_del_src, (start,), (B,))
 
         qstack = jnp.concatenate([qb, q_del])            # (2B, d)
         snap = (qstack @ dyn.emb.reshape(K * C, d).T
@@ -640,6 +709,9 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
         # instead of seven is most of the blocked core's speedup.
         valid0, cls0, so0, wa0 = (dyn.valid, dyn.cls, dyn.static_origin,
                                   dyn.written_at)
+        # rewrite provenance snapshot: rows not rewritten this window
+        # read the tier's answer_ref == -2 sentinel (§18)
+        rw0 = dyn.answer_ref == -2
         key0 = jnp.where(iota_c < cap[:, None],
                          jnp.where(valid0, dyn.last_used, -T.BIG), T.BIG)
         # window-current expiry carry (only consulted when use_ttl): a
@@ -659,15 +731,22 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
             wa_win = jnp.where(dqi_row < B, t0 + w, t0 + w - lat0)
             return jnp.where(dqi_row >= 0, wa_win, wa_snap)
 
+        def qrow(dqi_arr):
+            # Qstack row of a window-written tier row: the rewrite band
+            # [2B, 3B) shares the delayed query's embedding at dqi - B
+            if use_rw:
+                dqi_arr = jnp.where(dqi_arr < 2 * B, dqi_arr, dqi_arr - B)
+            return jnp.clip(dqi_arr, 0)
+
         def step(carry, sxs):
             (key, dqi, expw, ring, budget, jc, ja, pr, drop, tev, byc,
-             l1e, l1w, l1ok, l1so) = carry
+             l1e, l1w, l1ok, l1so, rbud, rwc, rwd) = carry
             (s_idx, qc, ss, hc, vol, kid, snap_cur, snap_del, qq_cur,
-             qq_del, pqc, phc, phr, pfl, pvl) = sxs
+             qq_del, pqc, phc, phr, pfl, pvl, prw) = sxs
             t = t0 + s_idx
             active = t < N
             written = dqi >= 0
-            dq = jnp.clip(dqi, 0)
+            dq = qrow(dqi)
             valid = jnp.logical_or(valid0, written)
             if use_ttl:
                 live = jnp.logical_and(
@@ -686,6 +765,21 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
                 jnp.logical_and(idx_due >= 0, active))
             approve = jnp.logical_and(
                 due, jnp.logical_or(pqc == phc, pfl))
+            # rewrite verdict (§18): a would-reject whose request was
+            # marked rewritable spends the rewrite token bucket and
+            # promotes a tailored variant instead of dropping the work
+            if use_rw:
+                rbud_new = jnp.minimum(rbud + rrate, 1e9)
+                rw_want = jnp.logical_and(
+                    jnp.logical_and(due,
+                                    ~jnp.logical_or(pqc == phc, pfl)),
+                    jnp.logical_and(prw, rw))
+                rw_can = jnp.logical_and(rw_want, rbud_new >= 1.0)
+                rbud_new = jnp.where(rw_can, rbud_new - 1.0, rbud_new)
+                rbud = jnp.where(active, rbud_new, rbud)
+            else:
+                rw_want = rw_can = jnp.zeros((K,), bool)
+            promo = jnp.logical_or(approve, rw_can)
 
             # promotion-dedup lookup on the combined sims (T.upsert
             # semantics: near-dup overwrite + LWW guard). The LRU argmin
@@ -710,7 +804,7 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
             pslot = jnp.where(dup, j_dup, jj[:, 1])
             stale_w = jnp.logical_and(
                 dup, wa_of(dqi[ks, j_dup], wa0[ks, j_dup]) > idx_due)
-            do_promote = jnp.logical_and(approve, ~stale_w)
+            do_promote = jnp.logical_and(promo, ~stale_w)
             if use_ttl:
                 tau_p = jnp.where(pvl, ttl_v, ttl_s)
                 exp_p = jnp.where(tau_p > 0, idx_due + tau_p, 0)
@@ -720,11 +814,17 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
             p_hot = jnp.logical_and(do_promote[:, None],
                                     iota_c == pslot[:, None])
             key = jnp.where(p_hot, t, key)
-            dqi = jnp.where(p_hot, B + s_idx, dqi)
+            if use_rw:
+                dqi = jnp.where(
+                    p_hot,
+                    jnp.where(rw_can, 2 * B + s_idx, B + s_idx)[:, None],
+                    dqi)
+            else:
+                dqi = jnp.where(p_hot, B + s_idx, dqi)
             if use_ttl:
                 expw = jnp.where(p_hot, exp_p[:, None], expw)
             written = dqi >= 0
-            dq = jnp.clip(dqi, 0)
+            dq = qrow(dqi)
             valid = jnp.logical_or(valid0, written)
             if use_ttl:
                 live = jnp.logical_and(
@@ -733,7 +833,10 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
                 live = valid
             jc = jc + due.astype(jnp.int32)
             ja = ja + approve.astype(jnp.int32)
-            pr = pr + approve.astype(jnp.int32)
+            pr = pr + promo.astype(jnp.int32)
+            rwc = rwc + rw_can.astype(jnp.int32)
+            rwd = rwd + jnp.logical_and(rw_want, ~rw_can).astype(
+                jnp.int32)
 
             # ---- 1b. freshness front (bypass + L1 probe), decided
             # before the semantic path like the live serve()
@@ -773,11 +876,23 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
             # rows carry the writing request's payload
             dqi_j = dqi[ks, j_dyn]
             w_j = jnp.mod(dqi_j, B)
+            # promotion bands carry the delayed payload: the static
+            # neighbor's class for APPROVE, the query's own class for
+            # REWRITE (the tailored answer targets the new prompt)
+            cls_win = jnp.where(dqi_j < 2 * B, p_hc[w_j], p_qc[w_j]) \
+                if use_rw else p_hc[w_j]
             cls_j = jnp.where(dqi_j < 0, cls0[ks, j_dyn],
                               jnp.where(dqi_j < B, qcb[jnp.clip(w_j, 0)],
-                                        p_hc[w_j]))
+                                        cls_win))
             so_j = jnp.where(dqi_j < 0, so0[ks, j_dyn], dqi_j >= B)
             wa_j = wa_of(dqi_j, wa0[ks, j_dyn])
+            if use_rw:
+                is_rewritten = jnp.logical_and(
+                    dyn_hit,
+                    jnp.where(dqi_j < 0, rw0[ks, j_dyn],
+                              dqi_j >= 2 * B))
+            else:
+                is_rewritten = jnp.zeros((K,), bool)
 
             served_cls = jnp.where(static_hit, hc,
                                    jnp.where(dyn_hit, cls_j, qc))
@@ -785,9 +900,13 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
             served_by = jnp.where(
                 l1hit, L1_HIT,
                 jnp.where(static_hit, STATIC_HIT,
-                          jnp.where(is_promoted, DYN_HIT_PROMOTED,
-                                    jnp.where(dyn_hit, DYN_HIT_DYNAMIC,
-                                              MISS)))).astype(jnp.int8)
+                          jnp.where(is_rewritten, REWRITTEN_HIT,
+                                    jnp.where(is_promoted,
+                                              DYN_HIT_PROMOTED,
+                                              jnp.where(dyn_hit,
+                                                        DYN_HIT_DYNAMIC,
+                                                        MISS))))
+                          ).astype(jnp.int8)
             correct = jnp.where(l1hit, l1_ok_col, served_cls == qc)
             static_origin = jnp.where(
                 l1hit, l1_so_col,
@@ -858,27 +977,33 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
             drop = drop + jnp.logical_and(want, ~can).astype(jnp.int32)
 
             return ((key, dqi, expw, ring, budget, jc, ja, pr, drop,
-                     tev, byc, l1e, l1w, l1ok, l1so),
+                     tev, byc, l1e, l1w, l1ok, l1so, rbud, rwc, rwd),
                     (served_by, correct, static_origin, stale))
 
         carry0 = (key0, jnp.full((K, C), -1, jnp.int32), exp0,
                   st.ring, st.budget, st.judge_calls, st.judge_approved,
                   st.promotions, st.enq_dropped, st.ttl_evicted,
-                  st.bypassed, st.l1_exp, st.l1_w, st.l1_ok, st.l1_so)
+                  st.bypassed, st.l1_exp, st.l1_w, st.l1_ok, st.l1_so,
+                  st.rbud, st.rewrites, st.rewrite_dropped)
         sxs = (jnp.arange(B, dtype=jnp.int32), qcb, ssb, hcb, volb, kidb,
                snap[:B], snap[B:], qq[:B], qq[B:],
-               p_qc, p_hc, p_hr, p_fl, p_vl)
+               p_qc, p_hc, p_hr, p_fl, p_vl, p_rw)
         ((key, dqi, expw, ring, budget, jc, ja, pr, drop, tev, byc,
-          l1e, l1w, l1ok, l1so), ys) = jax.lax.scan(step, carry0, sxs)
+          l1e, l1w, l1ok, l1so, rbud, rwc, rwd),
+         ys) = jax.lax.scan(step, carry0, sxs)
 
         # materialize this window's row writes into the tier
         mask = dqi >= 0
         w = jnp.mod(dqi, B)
-        emb = jnp.where(mask[:, :, None], qstack[jnp.clip(dqi, 0)],
+        emb = jnp.where(mask[:, :, None], qstack[qrow(dqi)],
                         dyn.emb)
+        cls_win_a = jnp.where(dqi < 2 * B, p_hc[w], p_qc[w]) \
+            if use_rw else p_hc[w]
         cls_a = jnp.where(mask, jnp.where(dqi < B, qcb[jnp.clip(w, 0)],
-                                          p_hc[w]), cls0)
-        ref_a = jnp.where(mask, jnp.where(dqi < B, -1, p_hr[w]),
+                                          cls_win_a), cls0)
+        ref_win_a = jnp.where(dqi < 2 * B, p_hr[w], -2) \
+            if use_rw else p_hr[w]
+        ref_a = jnp.where(mask, jnp.where(dqi < B, -1, ref_win_a),
                           dyn.answer_ref)
         so_a = jnp.where(mask, dqi >= B, so0)
         # promotion rows record their enqueue time (apply - lat0), miss
@@ -901,7 +1026,9 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
                              t=t0 + B, judge_calls=jc, judge_approved=ja,
                              promotions=pr, enq_dropped=drop,
                              l1_exp=l1e, l1_w=l1w, l1_ok=l1ok,
-                             l1_so=l1so, ttl_evicted=tev, bypassed=byc)
+                             l1_so=l1so, ttl_evicted=tev, bypassed=byc,
+                             rbud=rbud, rewrites=rwc,
+                             rewrite_dropped=rwd)
         return new_state, ys
 
     xs = tuple(a.reshape((NB // B, B) + a.shape[1:])
@@ -914,34 +1041,37 @@ def _scan_core_blocked(s_static, h_cls, h_idx, q_emb, q_cls, judge_flip,
                      unblock(static_origin), unblock(stale),
                      final.judge_calls, final.judge_approved,
                      final.promotions, final.enq_dropped,
-                     final.ttl_evicted, final.bypassed)
+                     final.ttl_evicted, final.bypassed,
+                     final.rewrites, final.rewrite_dropped)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("C", "R", "uniform_lat", "D", "nk",
-                                    "use_l1", "use_ttl"))
+                                    "use_l1", "use_ttl", "use_rw"))
 def _run_sweep(static_emb, static_cls, q_emb, q_cls, judge_flip,
-               volatile, key_id, sweep: SweepConfig, C: int, R: int,
-               uniform_lat: bool, D: int, nk: int, use_l1: bool,
-               use_ttl: bool) -> SimResult:
+               volatile, key_id, rewritable, sweep: SweepConfig, C: int,
+               R: int, uniform_lat: bool, D: int, nk: int, use_l1: bool,
+               use_ttl: bool, use_rw: bool) -> SimResult:
     # the hoisted static lookup is config-independent: computed once,
     # shared across every swept config
     s_static, h_idx = _static_sims(static_emb, q_emb)
     core = _scan_core_blocked if uniform_lat else _scan_core
     return core(s_static, static_cls[h_idx], h_idx, q_emb, q_cls,
-                judge_flip, volatile, key_id,
+                judge_flip, volatile, key_id, rewritable,
                 sweep.tau_static, sweep.tau_dynamic,
                 sweep.sigma_min, sweep.judge_rate, sweep.capacity,
                 sweep.judge_latency, sweep.krites, sweep.dedup,
                 sweep.l1, sweep.volatile_bypass, sweep.ttl_volatile,
                 sweep.ttl_stable, sweep.dup_threshold,
-                C=C, R=R, D=D, nk=nk, use_l1=use_l1, use_ttl=use_ttl)
+                sweep.rewrite, sweep.rewrite_rate,
+                C=C, R=R, D=D, nk=nk, use_l1=use_l1, use_ttl=use_ttl,
+                use_rw=use_rw)
 
 
 def simulate(static_emb, static_cls, q_emb, q_cls, cfg: T.CacheConfig,
              krites: bool, capacity: int | None = None,
              judge_flip=None, volatile=None, key_id=None,
-             drift_every: int = 0) -> SimResult:
+             drift_every: int = 0, rewritable=None) -> SimResult:
     """Run the policy over a request stream.
 
     static_emb (S, d) [normalized], static_cls (S,);
@@ -954,6 +1084,9 @@ def simulate(static_emb, static_cls, q_emb, q_cls, cfg: T.CacheConfig,
     each request (equal ids = canonically identical prompts).
     drift_every: ground-truth rotation period for volatile queries; a
     hit serving content from an earlier epoch counts as stale.
+    rewritable (N,) bool (optional, consulted only when ``cfg.rewrite``):
+    would-reject grey-zone requests the rewriter can tailor — the
+    judge's REWRITE verdicts in trace form (§18).
 
     Config scalars are traced, so re-invoking with different thresholds
     (e.g. a tuning loop) reuses the compiled program; only shapes
@@ -968,7 +1101,7 @@ def simulate(static_emb, static_cls, q_emb, q_cls, cfg: T.CacheConfig,
                          sweep_from_configs([cfg], krites),
                          judge_flip=judge_flip, max_capacity=C,
                          volatile=volatile, key_id=key_id,
-                         drift_every=drift_every)
+                         drift_every=drift_every, rewritable=rewritable)
     return slice_config(res, 0)
 
 
@@ -976,7 +1109,7 @@ def simulate_sweep(static_emb, static_cls, q_emb, q_cls,
                    sweep: SweepConfig, judge_flip=None,
                    max_capacity: int | None = None,
                    ring: int | None = None, volatile=None, key_id=None,
-                   drift_every: int = 0) -> SimResult:
+                   drift_every: int = 0, rewritable=None) -> SimResult:
     """Evaluate K configs over one request stream in a single dispatch.
 
     Returns a :class:`SimResult` whose every field carries a leading
@@ -1009,10 +1142,13 @@ def simulate_sweep(static_emb, static_cls, q_emb, q_cls,
                          "(exact-duplicate key per request)")
     use_ttl = bool(np.asarray(sweep.ttl_volatile).max(initial=0) > 0
                    or np.asarray(sweep.ttl_stable).max(initial=0) > 0)
+    use_rw = bool(np.asarray(sweep.rewrite).any())
     if volatile is None:
         volatile = np.zeros((N,), bool)
     if key_id is None:
         key_id = np.zeros((N,), np.int32)
+    if rewritable is None:
+        rewritable = np.zeros((N,), bool)
     key_id = np.asarray(key_id, np.int32)
     nk = int(key_id.max(initial=0)) + 1 if use_l1 else 1
     return _run_sweep(jnp.asarray(static_emb),
@@ -1021,10 +1157,11 @@ def simulate_sweep(static_emb, static_cls, q_emb, q_cls,
                       jnp.asarray(q_cls, jnp.int32), judge_flip,
                       jnp.asarray(volatile, bool),
                       jnp.asarray(key_id),
+                      jnp.asarray(rewritable, bool),
                       sweep, C=C, R=R,
                       uniform_lat=bool((lats == lats[0]).all()),
                       D=int(drift_every), nk=nk, use_l1=use_l1,
-                      use_ttl=use_ttl)
+                      use_ttl=use_ttl, use_rw=use_rw)
 
 
 # ---------------------------------------------------------------------------
@@ -1043,8 +1180,10 @@ def summarize(res: SimResult) -> dict:
         "requests": n,
         "static_hit_rate": float(jnp.mean(sb == STATIC_HIT)),
         "dyn_hit_rate": float(jnp.mean((sb == DYN_HIT_DYNAMIC)
-                                       | (sb == DYN_HIT_PROMOTED))),
+                                       | (sb == DYN_HIT_PROMOTED)
+                                       | (sb == REWRITTEN_HIT))),
         "promoted_hit_rate": float(jnp.mean(sb == DYN_HIT_PROMOTED)),
+        "rewritten_hit_rate": float(jnp.mean(sb == REWRITTEN_HIT)),
         "l1_hit_rate": float(jnp.mean(sb == L1_HIT)),
         "total_hit_rate": float(jnp.mean(hit)),
         "static_origin_rate": float(jnp.mean(res.static_origin)),
@@ -1056,6 +1195,8 @@ def summarize(res: SimResult) -> dict:
         "enq_dropped": int(res.enq_dropped),
         "ttl_evictions": int(res.ttl_evicted),
         "bypassed_volatile": int(res.bypassed),
+        "rewrites": int(res.rewrites),
+        "rewrite_dropped": int(res.rewrite_dropped),
     }
     return out
 

@@ -358,11 +358,22 @@ class CacheConfig:
     # staleness guard (which only applies on the dedup path) would
     # never fire for it.
     dup_threshold: float = 0.9999
+    # TweakLLM rewrite outcome (DESIGN.md §18). ``rewrite`` enables the
+    # third verdict: a grey-zone pair the judge would reject but deems
+    # rewritable gets a tailored answer promoted under the *query's*
+    # key instead of nothing. ``rewrite_rate`` is the rewriter's own
+    # token-bucket refill per request, budgeted like ``judge_rate`` —
+    # an exhausted bucket downgrades the verdict to REJECT. Defaults
+    # keep every pre-rewrite program bit-identical.
+    rewrite: bool = False
+    rewrite_rate: float = 1.0
 
     def __post_init__(self):
         if not (0.0 < self.dup_threshold <= 1.0):
             raise ValueError(
                 f"dup_threshold={self.dup_threshold} outside (0, 1]")
+        if self.rewrite_rate < 0.0:
+            raise ValueError(f"rewrite_rate={self.rewrite_rate} < 0")
         # tau_dynamic > 1 is the "dynamic tier unreachable" sentinel
         # (no cosine ever clears it), so the duplicate-row hazard this
         # guard exists for cannot arise there

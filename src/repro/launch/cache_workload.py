@@ -83,7 +83,8 @@ def run_live(n_requests: int = 800, n_clients: int = 8,
              l1_capacity: int = 0, volatile_bypass: bool = False,
              ttl_volatile: int = 0, ttl_stable: int = 0,
              adaptive: bool = False, adapt_every: int = 256,
-             adapt_window: int = 1024) -> dict:
+             adapt_window: int = 1024, rewrite: bool = False,
+             rewrite_rate: float = 1.0) -> dict:
     """Live router-fronted serving demo: the batched serving path under
     concurrent client load, with per-tier hit and latency telemetry.
     ``index='ivf'`` swaps the static lookup for the quantized ANN index
@@ -97,7 +98,7 @@ def run_live(n_requests: int = 800, n_clients: int = 8,
 
     import numpy as np
 
-    from repro.core.judge import OracleJudge
+    from repro.core.judge import OracleJudge, template_rewriter
     from repro.core.policy import KritesPolicy
     from repro.core.tiers import CacheConfig
     from repro.embedding.embedder import Embedder
@@ -130,7 +131,8 @@ def run_live(n_requests: int = 800, n_clients: int = 8,
     cfg = CacheConfig(tau, tau, sigma_min=0.3, capacity=1024,
                       l1=bool(l1_capacity),
                       volatile_bypass=volatile_bypass,
-                      ttl_volatile=ttl_volatile, ttl_stable=ttl_stable)
+                      ttl_volatile=ttl_volatile, ttl_stable=ttl_stable,
+                      rewrite=rewrite, rewrite_rate=rewrite_rate)
     adaptive_ctl = None
     if adaptive:
         from repro.core.adaptive import (AdaptiveController,
@@ -141,9 +143,14 @@ def run_live(n_requests: int = 800, n_clients: int = 8,
     policy = KritesPolicy(
         cfg, tier, answers,
         embed, backend_fn=lambda p: f"generated({p})",
-        judge_fn=OracleJudge(freshness=freshness), d=64,
+        judge_fn=OracleJudge(
+            freshness=freshness,
+            rewritable=(lambda qc, hc, qt, ht: True)
+            if rewrite else None),
+        d=64,
         backend_batch_fn=lambda ps: [f"generated({p})" for p in ps],
         index=idx_obj, static_texts=texts, mesh=mesh,
+        rewriter=template_rewriter if rewrite else None,
         l1=l1_capacity or None, freshness=freshness,
         adaptive=adaptive_ctl,
         dyn_index=build_dyn_index(dyn_index, cfg.capacity, 64,
@@ -231,6 +238,13 @@ if __name__ == "__main__":
                     help="recorded requests between shadow sweeps")
     ap.add_argument("--adapt-window", type=int, default=1024,
                     help="controller request-window ring size")
+    ap.add_argument("--rewrite", action="store_true",
+                    help="three-outcome judge pipeline in --live "
+                         "(DESIGN.md §18): would-reject grey-zone "
+                         "pairs are rewritten and promoted keyed to "
+                         "the new prompt")
+    ap.add_argument("--rewrite-rate", type=float, default=1.0,
+                    help="rewrite token-bucket refill per judged task")
     a = ap.parse_args()
     if a.live:
         run_live(n_requests=a.requests, n_clients=a.clients,
@@ -242,7 +256,8 @@ if __name__ == "__main__":
                  volatile_bypass=a.volatile_bypass,
                  ttl_volatile=a.ttl_volatile, ttl_stable=a.ttl_stable,
                  adaptive=a.adaptive, adapt_every=a.adapt_every,
-                 adapt_window=a.adapt_window)
+                 adapt_window=a.adapt_window, rewrite=a.rewrite,
+                 rewrite_rate=a.rewrite_rate)
     else:
         run(multi_pod=False)
         run(multi_pod=True)

@@ -289,6 +289,18 @@ def main() -> None:
     ap.add_argument("--ttl-stable", type=int, default=0,
                     help="cache-entry lifetime for stable/unknown-"
                          "class content; 0 = never expires")
+    ap.add_argument("--rewrite", action="store_true",
+                    help="multi-outcome judge pipeline (DESIGN.md §18): "
+                         "grey-zone pairs the judge would reject get a "
+                         "REWRITE verdict instead; the template "
+                         "rewriter tailors the cached answer and the "
+                         "variant is promoted keyed to the NEW "
+                         "prompt's embedding — served only to later "
+                         "repeats, never the triggering request")
+    ap.add_argument("--rewrite-rate", type=float, default=1.0,
+                    help="rewrite token-bucket refill per judged task "
+                         "(bounds rewriter invocations; empty bucket "
+                         "degrades the verdict to REJECT)")
     ap.add_argument("--snapshot-dir", default=None,
                     help="crash-safe persistence (DESIGN.md §14): "
                          "restore the newest snapshot on start, replay "
@@ -341,7 +353,7 @@ def main() -> None:
 
     import numpy as np
     from repro.configs import smoke_config
-    from repro.core.judge import OracleJudge
+    from repro.core.judge import OracleJudge, template_rewriter
     from repro.core.policy import KritesPolicy
     from repro.core.tiers import CacheConfig
     from repro.embedding.embedder import Embedder
@@ -432,7 +444,11 @@ def main() -> None:
                       l1=bool(args.l1_capacity),
                       volatile_bypass=args.volatile_bypass,
                       ttl_volatile=args.ttl_volatile,
-                      ttl_stable=args.ttl_stable)
+                      ttl_stable=args.ttl_stable,
+                      rewrite=args.rewrite,
+                      rewrite_rate=args.rewrite_rate)
+    if args.rewrite:
+        print(f"rewrite verdicts: on (rate={args.rewrite_rate}/judged)")
     adaptive = None
     if args.adaptive:
         from repro.core.adaptive import (AdaptiveController,
@@ -444,13 +460,20 @@ def main() -> None:
             frozen=args.adapt_frozen)
         print(f"adaptive thresholds: window={args.adapt_window} "
               f"every={args.adapt_every} frozen={args.adapt_frozen}")
+    # the demo's oracle rewrite model: every would-reject grey-zone
+    # pair is tailorable (the rewriter is the deterministic template)
+    judge = OracleJudge(freshness=freshness,
+                        rewritable=(lambda qc, hc, qt, ht: True)
+                        if args.rewrite else None)
     policy = KritesPolicy(cfg, tier, answers, embed,
                           backend_fn=frontend.submit,
-                          judge_fn=OracleJudge(freshness=freshness),
+                          judge_fn=judge,
                           d=64,
                           backend_batch_fn=frontend.submit_many,
                           index=index, static_texts=texts,
                           mesh=mesh, wal=wal, fused=fused,
+                          rewriter=template_rewriter
+                          if args.rewrite else None,
                           l1=args.l1_capacity or None,
                           freshness=freshness, adaptive=adaptive,
                           dyn_index=build_dyn_index(

@@ -10,7 +10,8 @@ per-leaf blake2s hashes verified on load) and restores it into a
 freshly constructed policy:
 
 - **dynamic tier** — all eight device arrays (``expires_at``
-  included), the five host decision mirrors, the answer list and the
+  included), the six host decision mirrors (rewrite provenance
+  included, DESIGN.md §18), the answer list and the
   logical clock ``t``, restored field-identically (sharded onto the
   policy's mesh when serving multi-device); entries already past their
   expiry at the captured clock are swept on restore — expired state
@@ -54,8 +55,8 @@ import numpy as np
 
 from repro.distributed import checkpoint as ckpt
 
-SNAP_FORMAT = 3            # 3: + adaptive threshold controller state
-SNAP_FORMATS = (1, 2, 3)   # formats the loader understands
+SNAP_FORMAT = 4            # 4: + rewrite provenance mirror (DESIGN.md §18)
+SNAP_FORMATS = (1, 2, 3, 4)   # formats the loader understands
 SNAP_KIND = "krites-snapshot"
 
 
@@ -113,6 +114,7 @@ def save_snapshot(snap_dir: str | Path, policy, *, step: Optional[int] = None,
             "static_origin": policy._static_origin_np.copy(),
             "written_at": policy._written_at_np.copy(),
             "expires_at": policy._expires_np.copy(),
+            "rewritten": policy._rewritten_np.copy(),
         }
         t = policy.t
         dyn_answers = [_jsonable(a) for a in policy.dyn_answers]
@@ -343,6 +345,13 @@ def restore_policy(policy, snap: "Snapshot | str | Path", *,
         policy._written_at_np[:] = m["written_at"]
         policy._expires_np[:] = m.get("expires_at",
                                       np.zeros(cap, np.int64))
+        # rewrite provenance (format 4, DESIGN.md §18). Older snapshots
+        # carry it implicitly: the answer_ref == -2 sentinel is in the
+        # saved device arrays, so the mirror is derivable either way.
+        rw = m.get("rewritten")
+        if rw is None:
+            rw = (np.asarray(dyn_np["answer_ref"]) == -2) & m["valid"]
+        policy._rewritten_np[:] = rw
         policy._ttl_active = bool((policy._expires_np > 0).any())
         policy.t = int(snap.extra["t"])
         answers = snap.extra.get("dyn_answers") or [None] * cap

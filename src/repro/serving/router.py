@@ -102,7 +102,7 @@ class CacheRouter:
         self.policy = policy
         self._lock = threading.Lock()
         self._tier_counts = {"l1": 0, "static": 0, "dynamic": 0,
-                             "backend": 0}
+                             "rewritten": 0, "backend": 0}
         self._static_origin = 0
         self._promoted = 0          # dynamic hits serving promoted content
         self._stale = 0             # hits flagged stale by the drift clock
@@ -180,7 +180,9 @@ class CacheRouter:
                 self._tier_counts[r.served_by] = \
                     self._tier_counts.get(r.served_by, 0) + 1
                 self._static_origin += bool(r.static_origin)
-                self._promoted += (r.served_by == "dynamic"
+                # rewritten serves are promoted content too (§18): the
+                # tailored variant entered the tier via a verdict
+                self._promoted += (r.served_by in ("dynamic", "rewritten")
                                    and bool(r.static_origin))
                 self._stale += bool(r.meta.get("stale"))
                 self._bypassed += r.meta.get("bypass") == "volatile"
@@ -212,6 +214,7 @@ class CacheRouter:
                 "l1_hit_rate": self._tier_counts["l1"] / n,
                 "static_hit_rate": self._tier_counts["static"] / n,
                 "dynamic_hit_rate": self._tier_counts["dynamic"] / n,
+                "rewritten_hit_rate": self._tier_counts["rewritten"] / n,
                 "promoted_hit_rate": self._promoted / n,
                 "backend_rate": self._tier_counts["backend"] / n,
                 "static_origin_rate": self._static_origin / n,
@@ -258,6 +261,17 @@ class CacheRouter:
                 depth = pool.depth()
                 out["judge_queued"] = depth["queued"]
                 out["judge_inflight"] = depth["inflight"]
+                # per-outcome verdict counters (§18): how the judged
+                # grey-zone tasks resolved, plus the rewrite-path
+                # degradation counts
+                ps = getattr(pool, "stats", None)
+                if ps is not None:
+                    for name in ("approved", "rejected", "rewritten",
+                                 "rewrite_failed",
+                                 "rewrite_rate_limited"):
+                        v = getattr(ps, name, None)
+                        if v is not None:
+                            out[f"judge_{name}"] = int(v)
             wal = getattr(self.policy, "wal", None)
             if wal is not None:
                 out["wal_seq"] = wal.stats()["seq"]

@@ -29,7 +29,13 @@ Semantics mirrored (see DESIGN.md §3-4, §10, §16):
   bypass and before any tier traffic, and every semantic serve writes
   back under its key with the content clock the staleness rule judges
   against (epoch(now) vs epoch(content); static content is epoch 0,
-  backend answers are current by definition).
+  backend answers are current by definition);
+- rewrite verdicts (§18): when ``cfg.rewrite`` is on, a would-reject
+  completion whose request was flagged ``rewritable`` spends one token
+  from a per-step-refilled bucket (``cfg.rewrite_rate``) and promotes a
+  tailored variant keyed to the *query's* class with the
+  ``answer_ref = -2`` provenance sentinel; serving such a row reports
+  the ``REWRITTEN_HIT`` event code.
 """
 from __future__ import annotations
 
@@ -37,8 +43,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-MISS, STATIC_HIT, DYN_HIT_DYNAMIC, DYN_HIT_PROMOTED, L1_HIT = \
-    0, 1, 2, 3, 4
+MISS, STATIC_HIT, DYN_HIT_DYNAMIC, DYN_HIT_PROMOTED, L1_HIT, \
+    REWRITTEN_HIT = 0, 1, 2, 3, 4, 5
 DEDUP_SIM = 0.9999
 L1_NEVER = 1 << 30      # sim's unbounded-L1 sentinel (0 = empty cell)
 
@@ -193,13 +199,14 @@ class _Task:
     href: int
     flip: bool
     vol: bool = False
+    rw: bool = False
 
 
 def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
                  capacity=None, judge_flip=None, dyn_index=None,
                  drain=False, crash_after=None,
                  extra_replays=0, volatile=None, key_id=None,
-                 drift_every=0) -> dict:
+                 drift_every=0, rewritable=None) -> dict:
     """Reference run; returns plain-numpy analogues of ``SimResult``.
 
     ``cfg`` is any object with the :class:`repro.core.tiers.CacheConfig`
@@ -246,6 +253,8 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
         volatile = np.zeros(N, bool)
     if key_id is None:
         key_id = np.zeros(N, np.int64)
+    if rewritable is None:
+        rewritable = np.zeros(N, bool)
 
     C = capacity or cfg.capacity
     lat = max(1, cfg.judge_latency)
@@ -254,6 +263,9 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
     vbp = bool(getattr(cfg, "volatile_bypass", False))
     ttl_v = int(getattr(cfg, "ttl_volatile", 0))
     ttl_s = int(getattr(cfg, "ttl_stable", 0))
+    rw_on = bool(getattr(cfg, "rewrite", False))
+    rrate = float(getattr(cfg, "rewrite_rate", 1.0))
+    rbud = np.float32(0.0)
     D = int(drift_every)
     dyn = _Dyn.make(C, d, index=_RefSegIndex()
                     if dyn_index == "segmented" else None)
@@ -272,7 +284,7 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
     static_origin = np.zeros(N, bool)
     stale = np.zeros(N, bool)
     judge_calls = judge_approved = promotions = enq_dropped = 0
-    ttl_evicted = bypassed = 0
+    ttl_evicted = bypassed = rewrites = rewrite_dropped = 0
 
     def epoch(x):
         return x // D
@@ -288,14 +300,31 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
                                   & (t == dyn.expires + 1)))
 
         # ---- 1. async completion due now (earliest first, one per step)
+        # the rewrite token bucket refills once per step at the
+        # completion point (the sim cores refill inside their step fn)
+        if rw_on:
+            rbud = np.float32(min(rbud + np.float32(rrate), 1e9))
         due_i = min((i for i, p in enumerate(pending) if p.due <= t),
                     key=lambda i: pending[i].due, default=None)
         if due_i is not None:
             task = pending.pop(due_i)
             judge_calls += 1
-            if task.qcls == task.hcls or task.flip:
+            approve = task.qcls == task.hcls or task.flip
+            # REWRITE verdict (§18): a would-reject whose request was
+            # rewritable spends a rewrite token and promotes a tailored
+            # variant keyed to the *query's* class, answer_ref = -2
+            rw_can = False
+            if rw_on and not approve and task.rw:
+                if rbud >= 1.0:
+                    rw_can = True
+                    rbud = np.float32(rbud - np.float32(1.0))
+                    rewrites += 1
+                else:
+                    rewrite_dropped += 1
+            if approve:
                 judge_approved += 1
-                promotions += 1       # counts the approval, like the sim
+            if approve or rw_can:
+                promotions += 1       # counts the verdict, like the sim
                 # TTL verdict: expiry anchors at the *enqueue* time (what
                 # the promotion WAL records); a verdict that outlived its
                 # own TTL is dropped, like the live _promote
@@ -303,7 +332,9 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
                 enq = task.due - lat
                 exp_p = enq + tau_p if tau_p > 0 else 0
                 if not (exp_p > 0 and exp_p < t):
-                    dyn.upsert(task.emb, task.hcls, task.href, now=t,
+                    cls_p = task.qcls if rw_can else task.hcls
+                    ref_p = -2 if rw_can else task.href
+                    dyn.upsert(task.emb, cls_p, ref_p, now=t,
                                enq=enq, exp=exp_p, dup_sim=dup_sim)
 
         # ---- 1b. freshness front: volatile bypass, then the L1 exact-
@@ -325,10 +356,14 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
         wa_j = int(dyn.written_at[j_dyn])
 
         is_promoted = dyn_hit and bool(dyn.static_origin[j_dyn])
+        is_rewritten = rw_on and dyn_hit \
+            and int(dyn.answer_ref[j_dyn]) == -2
         if l1hit:
             served_by[t], served_cls = L1_HIT, qc
         elif static_hit:
             served_by[t], served_cls = STATIC_HIT, hc
+        elif is_rewritten:
+            served_by[t], served_cls = REWRITTEN_HIT, int(dyn.cls[j_dyn])
         elif is_promoted:
             served_by[t], served_cls = DYN_HIT_PROMOTED, int(dyn.cls[j_dyn])
         elif dyn_hit:
@@ -373,7 +408,8 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
         if want and budget >= 1.0:
             budget = np.float32(budget - np.float32(1.0))
             pending.append(_Task(t + lat, q.copy(), qc, hc, hr,
-                                 bool(judge_flip[t]), vol))
+                                 bool(judge_flip[t]), vol,
+                                 bool(rewritable[t])))
         elif want:
             enq_dropped += 1
 
@@ -384,6 +420,7 @@ def ref_simulate(static_emb, static_cls, q_emb, q_cls, cfg, krites,
         "judge_approved": judge_approved, "promotions": promotions,
         "enq_dropped": enq_dropped,
         "ttl_evicted": ttl_evicted, "bypassed": bypassed,
+        "rewrites": rewrites, "rewrite_dropped": rewrite_dropped,
     }
     if not drain:
         return out

@@ -63,16 +63,18 @@ ENV = {
 # the parent (exec'd into a namespace): the deterministic world both
 # sides must agree on. 32 orthonormal pool vectors (pairwise sim 0, so
 # every decision threshold is unambiguous); static tier = P[:8]; the
-# prompt space p0..p23 = P[8:32]; a 14-record promotion burst whose
-# keys overlap the served prefix (dedup/LWW overwrite) and include
-# out-of-order re-promotions of one key (the LWW guard paths).
+# prompt space p0..p23 = P[8:32]; a 16-record promotion burst whose
+# keys overlap the served prefix (dedup/LWW overwrite), include
+# out-of-order re-promotions of one key (the LWW guard paths), and end
+# with two REWRITE-verdict promotions whose tailored text exists only
+# in the payload/WAL record (rewrite durability, DESIGN.md §18).
 COMMON = textwrap.dedent("""
     import numpy as np
     import jax.numpy as jnp
     from repro.core import tiers as T
     from repro.core.policy import KritesPolicy
 
-    D, S, CAP, N_PREFIX = 32, 8, 16, 12
+    D, S, CAP, N_PREFIX = 32, 8, 24, 12
 
     def _pool(n, d, seed=0):
         rng = np.random.default_rng(seed)
@@ -106,13 +108,26 @@ COMMON = textwrap.dedent("""
                     "enq_t": 200})
         out.append({"v": P[int(keys[0])], "h_idx": int(hs[2]),
                     "enq_t": 50})
+        # REWRITE verdicts (DESIGN.md §18): fresh keys (P[24]/P[25] =
+        # prompts p16/p17, untouched by the prefix and the burst above)
+        # so both are always admitted, and the crash matrix gets kill
+        # points inside the rewrite append->upsert window. The tailored
+        # text and the query-class key live only in the payload/WAL
+        # record -- recovery must reconstruct both.
+        out.append({"v": P[24], "h_idx": int(hs[3]), "enq_t": 300,
+                    "outcome": "rewrite", "rewritten": "tailored(p16)",
+                    "judge_args": {"q_cls": 116}})
+        out.append({"v": P[25], "h_idx": int(hs[4]), "enq_t": 301,
+                    "outcome": "rewrite", "rewritten": "tailored(p17)",
+                    "judge_args": {"q_cls": 117}})
         return out
 """)
 
-N_BURST = 14          # len(payloads()) — pinned by a test below
-N_DURABLE = 11        # _n_journaled(payloads()) — the 3 LWW-stale
+N_BURST = 16          # len(payloads()) — pinned by a test below
+N_DURABLE = 13        # _n_journaled(payloads()) — the 3 LWW-stale
                       # records (two out-of-order re-promotions and the
-                      # enq_t=50 churn tail) never reach the WAL
+                      # enq_t=50 churn tail) never reach the WAL; both
+                      # rewrite records (fresh keys) always do
 
 
 def _n_journaled(burst) -> int:
@@ -215,6 +230,7 @@ def _state(pol) -> tuple:
     return (np.asarray(pol.dyn.emb).tobytes(),
             pol._valid_np.tolist(), pol._written_at_np.tolist(),
             pol._last_used_np.tolist(), pol._static_origin_np.tolist(),
+            pol._rewritten_np.tolist(),
             np.asarray(pol.dyn.cls).tolist(),
             np.asarray(pol.dyn.answer_ref).tolist(),
             list(pol.dyn_answers), pol.t)
@@ -265,14 +281,23 @@ def _check_recovery(tmp: Path):
 
     assert _state(recovered) == _state(reference), \
         f"recovered state != uninterrupted (r={r} durable records)"
-    assert _decisions(recovered) == _decisions(reference), \
+    dec = _decisions(recovered)
+    assert dec == _decisions(reference), \
         f"post-recovery decisions diverge (r={r})"
+    # the rewrite records' tailored text must survive the crash intact:
+    # p16/p17 repeat the rewritten keys, so they serve the REWRITE
+    # entries (answer_ref=-2 provenance) with the exact journaled text
+    for i in (16, 17):
+        assert dec[i] == ("rewritten", f"tailored(p{i})", True, 1.0), \
+            f"rewritten entry for p{i} lost/garbled: {dec[i]}"
     return r
 
 
-# the fast subset: one kill per distinct write-path region
-FAST_POINTS = [("SNAP", 0), ("APPENDED", 9), ("PROMO", 5),
-               ("DONE", None)]
+# the fast subset: one kill per distinct write-path region (APPENDED 12
+# = inside the FIRST REWRITE record's append->upsert window: the
+# tailored text is durable, its upsert possibly unapplied)
+FAST_POINTS = [("SNAP", 0), ("APPENDED", 9), ("APPENDED", 12),
+               ("PROMO", 5), ("DONE", None)]
 
 
 @pytest.mark.parametrize("event,k", FAST_POINTS,

@@ -276,6 +276,112 @@ def test_freshness_off_is_bit_identical_to_plain(fresh_trace):
     assert int(off.ttl_evicted) == 0 and int(off.bypassed) == 0
 
 
+# ---------------------------------------------------------------------------
+# rewrite verdicts (DESIGN.md §18): the three-outcome pipeline — the
+# simulator must track the reference through REWRITE promotions, the
+# rewrite token bucket, and REWRITTEN_HIT serving, field-identically
+# ---------------------------------------------------------------------------
+
+RW_CONFIGS = [
+    # rewrite at full rate
+    (CacheConfig(0.90, 0.90, sigma_min=0.0, capacity=128,
+                 judge_latency=8, rewrite=True), True),
+    # rate-limited rewrites (the bucket must drop some)
+    (CacheConfig(0.86, 0.90, sigma_min=0.5, capacity=64,
+                 judge_latency=32, judge_rate=0.5, rewrite=True,
+                 rewrite_rate=0.02), True),
+    # rewrite atop the freshness subsystem (L1 + TTL interplay)
+    (CacheConfig(0.90, 0.90, sigma_min=0.5, capacity=256,
+                 judge_latency=8, l1=True, ttl_stable=90,
+                 rewrite=True), True),
+    # rewrite off in the same sweep: the mixed-gate case
+    (CacheConfig(0.90, 0.90, sigma_min=0.0, capacity=128,
+                 judge_latency=8), True),
+]
+
+
+@pytest.fixture(scope="module")
+def rewritable_mask():
+    rng = np.random.default_rng(11)
+    return rng.random(N_REQ) < 0.6
+
+
+@pytest.mark.parametrize("idx", range(len(RW_CONFIGS)))
+def test_rewrite_simulate_matches_reference(fresh_trace, rewritable_mask,
+                                            idx):
+    s_emb, s_cls, q_emb, q_cls, key, vol = fresh_trace
+    cfg, krites = RW_CONFIGS[idx]
+    res = simulate(jnp.asarray(s_emb), jnp.asarray(s_cls),
+                   jnp.asarray(q_emb), jnp.asarray(q_cls), cfg,
+                   krites=krites, key_id=key,
+                   rewritable=jnp.asarray(rewritable_mask))
+    ref = ref_simulate(s_emb, s_cls, q_emb, q_cls, cfg, krites,
+                       key_id=key, rewritable=rewritable_mask)
+    _assert_matches(res, ref, f"rewrite cfg{idx}")
+    if idx == 0:
+        assert ref["rewrites"] > 0, "trace produced no rewrites"
+        assert (ref["served_by"] == 5).sum() > 0, \
+            "trace produced no rewritten serves"
+    if idx == 1:
+        assert ref["rewrite_dropped"] > 0, "rate limit never engaged"
+    if idx == 3:
+        assert ref["rewrites"] == 0 \
+            and (ref["served_by"] == 5).sum() == 0
+
+
+def test_rewrite_sweep_stepwise_matches_reference(fresh_trace,
+                                                  rewritable_mask):
+    """Mixed-latency sweep (stepwise core) over the rewrite configs —
+    including a rewrite-off config sharing the dispatch."""
+    s_emb, s_cls, q_emb, q_cls, key, vol = fresh_trace
+    sweep = sweep_from_configs([c for c, _ in RW_CONFIGS],
+                               [k for _, k in RW_CONFIGS])
+    res = simulate_sweep(jnp.asarray(s_emb), jnp.asarray(s_cls),
+                         jnp.asarray(q_emb), jnp.asarray(q_cls), sweep,
+                         key_id=key,
+                         rewritable=jnp.asarray(rewritable_mask))
+    for i, (cfg, krites) in enumerate(RW_CONFIGS):
+        ref = ref_simulate(s_emb, s_cls, q_emb, q_cls, cfg, krites,
+                           key_id=key, rewritable=rewritable_mask)
+        _assert_matches(slice_config(res, i), ref, f"rw sweep cfg{i}")
+
+
+def test_rewrite_sweep_blocked_matches_reference(fresh_trace,
+                                                 rewritable_mask):
+    """Uniform-latency sweep (blocked core, three-band dqi encoding)
+    over the rewrite configs against the reference."""
+    s_emb, s_cls, q_emb, q_cls, key, vol = fresh_trace
+    cfgs = [dataclasses.replace(c, judge_latency=16)
+            for c, _ in RW_CONFIGS]
+    krs = [k for _, k in RW_CONFIGS]
+    res = simulate_sweep(jnp.asarray(s_emb), jnp.asarray(s_cls),
+                         jnp.asarray(q_emb), jnp.asarray(q_cls),
+                         sweep_from_configs(cfgs, krs), key_id=key,
+                         rewritable=jnp.asarray(rewritable_mask))
+    for i, (cfg, krites) in enumerate(zip(cfgs, krs)):
+        ref = ref_simulate(s_emb, s_cls, q_emb, q_cls, cfg, krites,
+                           key_id=key, rewritable=rewritable_mask)
+        _assert_matches(slice_config(res, i), ref, f"rw blocked cfg{i}")
+
+
+def test_rewrite_off_is_bit_identical_to_plain(trace, rewritable_mask):
+    """Passing a rewritable mask with cfg.rewrite off must reproduce the
+    plain run bit-for-bit (the feature-off gate)."""
+    s_emb, s_cls, q_emb, q_cls = trace
+    cfg, krites = CONFIGS[0]
+    plain = simulate(jnp.asarray(s_emb), jnp.asarray(s_cls),
+                     jnp.asarray(q_emb), jnp.asarray(q_cls), cfg,
+                     krites=krites)
+    off = simulate(jnp.asarray(s_emb), jnp.asarray(s_cls),
+                   jnp.asarray(q_emb), jnp.asarray(q_cls), cfg,
+                   krites=krites,
+                   rewritable=jnp.asarray(rewritable_mask))
+    for name in ("served_by", "correct", "static_origin", "stale"):
+        assert np.array_equal(np.asarray(getattr(off, name)),
+                              np.asarray(getattr(plain, name))), name
+    assert int(off.rewrites) == 0 and int(off.rewrite_dropped) == 0
+
+
 def test_noisy_judge_flips_match_reference(trace):
     """judge_flip (noisy-verifier false approvals) follows the same
     delayed-payload path — must match the reference end to end."""

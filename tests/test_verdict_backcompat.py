@@ -1,0 +1,163 @@
+"""Back-compat contract of the verdict refactor (DESIGN.md §18).
+
+The judge pipeline moved from promote-or-reject booleans to structured
+``Verdict`` outcomes dispatched through an action registry. Every
+pre-verdict program must keep working unchanged:
+
+- a legacy ``bool``-returning judge callable injected into
+  ``KritesPolicy`` produces serving decisions BIT-IDENTICAL to the
+  Verdict-returning oracle over the same workload (agreement 1.0 on
+  served_by / answer / static_origin / similarity), with its approvals
+  and rejections mapped onto the new per-outcome counters;
+- ``as_verdict`` wraps plain bools, passes Verdicts through, and
+  ``bool(verdict)`` means "approved as-is" (REWRITE is falsy — the
+  judge ruled the cached answer NOT servable verbatim);
+- the per-outcome ``PoolStats`` fields exist and count — a regression
+  guard that fails on the old binary API, where rejections vanished
+  into ``judged - approved`` arithmetic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tiers as T
+from repro.core.async_queue import PoolStats, VerifyAndPromotePool
+from repro.core.judge import (APPROVE, REJECT, REWRITE, OracleJudge,
+                              Verdict, as_verdict)
+from repro.core.policy import KritesPolicy
+
+D, S = 32, 8
+
+
+def _pool(n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.normal(size=(d, n)))
+    return np.ascontiguousarray(q.T, np.float32)
+
+
+P = _pool(32, D)
+# grey query i: sim 0.8 to static row i%S (inside [sigma_min, tau_s)),
+# orthogonal to every other grey query's fresh component
+N_GREY = 12
+GREY = {f"g{i}": (0.8 * P[i % S] + 0.6 * P[8 + i]).astype(np.float32)
+        for i in range(N_GREY)}
+
+
+def mk_policy(judge_fn):
+    tier = T.StaticTier(emb=jnp.asarray(P[:S]),
+                        cls=jnp.arange(S, dtype=jnp.int32),
+                        answer_ref=jnp.arange(S, dtype=jnp.int32))
+    cfg = T.CacheConfig(0.95, 0.9, sigma_min=0.3, capacity=32)
+    return KritesPolicy(cfg, tier, [f"a{i}" for i in range(S)],
+                        embed_fn=lambda p: GREY[p],
+                        backend_fn=lambda p: "gen(" + p + ")",
+                        judge_fn=judge_fn, d=D, n_workers=2)
+
+
+def _drive(pol):
+    """Two phases over the grey workload: first-seen (all misses, every
+    row a grey trigger; even rows carry the neighbor's class -> approve,
+    odd rows a foreign class -> reject), then drain the pool and repeat
+    every prompt (promoted keys now serve from the dynamic tier).
+    Returns the full decision stream."""
+    dec = []
+    for i in range(N_GREY):
+        cls = (i % S) if i % 2 == 0 else 99
+        r = pol.serve(f"g{i}", meta={"cls": cls})
+        dec.append((r.served_by, str(r.answer), bool(r.static_origin),
+                    round(float(r.similarity), 6)))
+    pol.pool.drain()
+    for i in range(N_GREY):
+        r = pol.serve(f"g{i}")
+        dec.append((r.served_by, str(r.answer), bool(r.static_origin),
+                    round(float(r.similarity), 6)))
+    pol.pool.drain()
+    return dec
+
+
+def test_legacy_bool_judge_is_bit_identical():
+    legacy = mk_policy(lambda q_cls, h_cls, **kw: q_cls == h_cls)
+    verdict = mk_policy(OracleJudge())
+    dec_l, dec_v = _drive(legacy), _drive(verdict)
+
+    agreement = np.mean([a == b for a, b in zip(dec_l, dec_v)])
+    assert agreement == 1.0, (
+        f"legacy bool judge diverged from verdict judge "
+        f"(agreement {agreement}): "
+        f"{[(a, b) for a, b in zip(dec_l, dec_v) if a != b]}")
+    # the workload exercised both outcomes end to end: approved keys
+    # serve static-origin promoted entries on repeat, rejected keys
+    # serve their plain write-back
+    assert ("dynamic", "a0", True, 1.0) in dec_l
+    assert ("dynamic", "gen(g1)", False, 1.0) in dec_l
+
+    # counters mapped: the wrapped bools land on the same per-outcome
+    # fields the structured judge fills
+    sl, sv = legacy.stats(), verdict.stats()
+    for key in ("judged", "approved", "rejected", "rewritten",
+                "rewrite_failed", "rewrite_rate_limited"):
+        assert sl[key] == sv[key], (key, sl[key], sv[key])
+    assert sl["approved"] == N_GREY // 2
+    # rejected keys leave no promoted pointer, so their repeat trigger
+    # re-judges (the dedup gate only skips static-origin hits): each
+    # odd row rejects twice — first-seen and repeat
+    assert sl["rejected"] == N_GREY
+    assert sl["rewritten"] == 0
+    legacy.pool.stop()
+    verdict.pool.stop()
+
+
+def test_as_verdict_wraps_bools():
+    assert as_verdict(True).outcome == APPROVE
+    assert as_verdict(False).outcome == REJECT
+    v = Verdict(REWRITE, text="t")
+    assert as_verdict(v) is v
+    # truthiness == "approved as-is": REWRITE must NOT read as approval
+    assert bool(Verdict(APPROVE))
+    assert not bool(Verdict(REJECT))
+    assert not bool(Verdict(REWRITE, text="t"))
+    with pytest.raises(ValueError):
+        Verdict("maybe")
+
+
+def test_pool_counts_rejections_fails_on_old_api():
+    """Regression guard on the old binary API: PoolStats must carry the
+    per-outcome fields, and a rejecting judge must increment
+    ``rejected`` (the old pipeline only ever counted approvals)."""
+    fields = {f.name for f in dataclasses.fields(PoolStats)}
+    assert {"rejected", "rewritten", "rewrite_failed",
+            "rewrite_rate_limited"} <= fields
+
+    promoted = []
+    pool = VerifyAndPromotePool(judge_fn=lambda p: p["ok"],
+                                promote_fn=promoted.append,
+                                n_workers=1)
+    pool.submit(("k1",), {"ok": False})
+    pool.submit(("k2",), {"ok": False})
+    pool.submit(("k3",), {"ok": True})
+    pool.drain()
+    assert pool.stats.judged == 3
+    assert pool.stats.approved == 1
+    assert pool.stats.rejected == 2
+    assert promoted == [{"ok": True}]
+    pool.stop()
+
+
+def test_rewrite_verdict_dispatches_promote_action():
+    """A REWRITE verdict routes through the promote action (the payload
+    carries the outcome) and counts on the ``rewritten`` counter — the
+    action registry's default wiring."""
+    landed = []
+    pool = VerifyAndPromotePool(
+        judge_fn=lambda p: Verdict(REWRITE, text="tailored"),
+        promote_fn=landed.append, n_workers=1)
+    pool.submit(("k",), {"x": 1})
+    pool.drain()
+    assert pool.stats.rewritten == 1
+    assert pool.stats.approved == 0
+    assert landed == [{"x": 1}]
+    pool.stop()
